@@ -1,0 +1,67 @@
+"""Paper Fig. 4 + Fig. 5 + Table 1: fork-join overhead of a sleep(T) map.
+
+Measures total overhead (= wall - sleep) for growing parallelism under
+both monitoring modes (queue-notify/Redis vs storage-poll/S3), plus the
+per-phase Table-1 breakdown (serialize/upload/invoke/setup/join) for cold
+vs warm containers from the futures' virtual accounting.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core.executor import FunctionExecutor
+
+from .common import Row, Timer, paper_session, row
+
+SCALE = 0.03
+SLEEP_S = 5.0  # the paper's task body (scaled when slept)
+
+
+def _sleeper(t: float, scale: float) -> float:
+    time.sleep(t * scale)
+    return t
+
+
+def run(quick: bool = False) -> List[Row]:
+    rows: List[Row] = []
+    sizes = [4, 16] if quick else [4, 16, 64, 256]
+    for monitoring in ("queue", "storage"):
+        for n in sizes:
+            paper_session(scale=SCALE)
+            ex = FunctionExecutor(monitoring=monitoring)
+            with Timer() as t:
+                futs = ex.map(_sleeper, [(SLEEP_S, SCALE)] * n)
+                ex.get_result(futs)
+            overhead_s = max(0.0, t.s - SLEEP_S * SCALE) / SCALE
+            label = "redis" if monitoring == "queue" else "s3"
+            rows.append(row(f"forkjoin/{label}/n{n}", t.s,
+                            f"overhead_unscaled={overhead_s:.2f}s "
+                            f"(paper ~1-3s)"))
+            ex.shutdown(wait=False)
+
+    # Table 1 breakdown, cold vs warm (virtual, exact)
+    paper_session(scale=0.005)
+    ex = FunctionExecutor(monitoring="queue")
+    cold = ex.map(_sleeper, [(0.1, 0.005)] * 8)
+    ex.get_result(cold)
+    warm = ex.map(_sleeper, [(0.1, 0.005)] * 8)
+    ex.get_result(warm)
+
+    def breakdown(futs, tag):
+        keys = ("serialize_s", "upload_s", "invoke_s", "setup_s", "join_s")
+        avg = {k: sum(f.stats.get(k, 0) for f in futs) / len(futs)
+               for k in keys}
+        total = sum(avg.values())
+        rows.append(row(
+            f"forkjoin/table1/{tag}", total,
+            " ".join(f"{k.split('_')[0]}={v*1000:.0f}ms"
+                     for k, v in avg.items()) + f" total={total:.3f}s"))
+        return avg
+
+    c = breakdown(cold, "cold")   # paper: invoke 1.719, total 2.407
+    w = breakdown(warm, "warm")   # paper: invoke 0.258, total 0.939
+    assert c["invoke_s"] > w["invoke_s"], "cold must out-cost warm"
+    ex.shutdown(wait=False)
+    return rows

@@ -1,0 +1,51 @@
+"""Paper Table 2: Pipe round-trip latency, local vs remote, by payload.
+
+Remote = KV-backed Pipe with the calibrated Redis latency model (rtt +
+bytes/90MB/s per command, at scale=1 so numbers are directly comparable);
+local = the same Pipe implementation with zero-latency in-process store
+(the paper's UNIX-pipe baseline role).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import mp
+
+from .common import Row, Timer, local_session, paper_session, row
+
+PAPER = {1_024: ("0.6 ms", "0.0463 ms"),
+         1_048_576: ("23.4 ms", "2.56 ms"),
+         10_485_760: ("~112 ms (1/10 of 100MB row)", "~28.8 ms")}
+
+
+def _rtt(payload: bytes, reps: int) -> float:
+    a, b = mp.Pipe()
+    # echo loop in-line (measuring transport, not scheduling)
+    with Timer() as t:
+        for _ in range(reps):
+            a.send_bytes(payload)
+            got = b.recv_bytes()
+            b.send_bytes(got)
+            a.recv_bytes()
+    a.close()
+    return t.s / (2 * reps)  # one-way send+recv pair
+
+
+def run(quick: bool = False) -> List[Row]:
+    rows: List[Row] = []
+    sizes = [1_024, 1_048_576] if quick else list(PAPER)
+    for size in sizes:
+        reps = 3 if size > 1_000_000 else 20
+        payload = b"x" * size
+        paper_session(scale=1.0, invocation=False)
+        remote = _rtt(payload, reps)
+        local_session()
+        local = _rtt(payload, reps)
+        p_remote, p_local = PAPER[size]
+        rows.append(row(
+            f"latency/pipe/{size//1024}KB", remote,
+            f"remote={remote*1000:.3f}ms local={local*1000:.3f}ms "
+            f"ratio={remote/max(local,1e-9):.0f}x "
+            f"[paper remote={p_remote} local={p_local}]"))
+    return rows

@@ -1,0 +1,63 @@
+"""Shared benchmark plumbing: paper-calibrated sessions + CSV rows.
+
+Latency constants come straight from the paper (Table 1, Table 2, Fig. 6);
+``scale`` shrinks injected sleeps so the suite completes quickly while
+virtual (unscaled) quantities are derived exactly. Each benchmark returns
+rows ``(name, us_per_call, derived)`` matching benchmarks/run.py's CSV.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, List, Optional, Tuple
+
+from repro.core import (LatencyModel, PAPER_REMOTE_LATENCY, Session,
+                        StorageLatency, PAPER_S3_LATENCY, set_session)
+from repro.core.kvstore import KVStore
+from repro.core.session import InvocationModel, PAPER_INVOCATION
+from repro.core.storage import ObjectStore
+
+Row = Tuple[str, float, str]
+
+
+def paper_session(scale: float = 0.05, kv_latency: bool = True,
+                  s3_latency: bool = True, invocation: bool = True,
+                  shards: int = 1) -> Session:
+    """Session with the paper's measured cost constants injected."""
+    if shards > 1:
+        from repro.core import ShardedKVStore
+        store = ShardedKVStore([
+            KVStore(LatencyModel(scale=scale, **PAPER_REMOTE_LATENCY)
+                    if kv_latency else None, name=f"kv{i}")
+            for i in range(shards)])
+    else:
+        store = KVStore(LatencyModel(scale=scale, **PAPER_REMOTE_LATENCY)
+                        if kv_latency else None)
+    storage = ObjectStore(StorageLatency(scale=scale, **PAPER_S3_LATENCY)
+                          if s3_latency else None)
+    inv = (InvocationModel(scale=scale, **PAPER_INVOCATION)
+           if invocation else InvocationModel())
+    sess = Session(store=store, storage=storage, invocation=inv)
+    return set_session(sess)
+
+
+def local_session() -> Session:
+    """Zero-latency in-process session (the 'VM' side of comparisons)."""
+    return set_session(Session())
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.s = time.perf_counter() - self.t0
+
+    @property
+    def us(self) -> float:
+        return self.s * 1e6
+
+
+def row(name: str, seconds: float, derived: str = "") -> Row:
+    return (name, seconds * 1e6, derived)

@@ -1,0 +1,95 @@
+"""Roofline report from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads benchmarks/artifacts/dryrun/*.json and renders, per (arch x shape x
+mesh): the three roofline terms, the dominant bottleneck, MODEL_FLOPS /
+HLO_FLOPs, and two roofline fractions:
+
+  v1: ideal = MODEL_FLOPS / (chips*peak)           (compute-only ideal)
+  v2: ideal = max(v1, args_bytes/(chips*HBM_bw))   (memory-floor-aware:
+      decode must at least stream params+cache once — v1 is unreachable
+      for serving shapes and would under-credit genuinely optimal cells)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def load(mesh: Optional[str] = None) -> List[Dict]:
+    out = []
+    if not os.path.isdir(ARTIFACT_DIR):
+        return out
+    for name in sorted(os.listdir(ARTIFACT_DIR)):
+        if not name.endswith(".json"):
+            continue
+        with open(os.path.join(ARTIFACT_DIR, name)) as f:
+            rec = json.load(f)
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        out.append(rec)
+    return out
+
+
+def enrich(rec: Dict) -> Dict:
+    if rec.get("status") != "ok":
+        return rec
+    n = rec["n_devices"]
+    ideal_c = rec["model_flops"] / (n * PEAK_FLOPS)
+    floor_m = rec.get("argument_size_in_bytes", 0) / HBM_BW
+    ideal = max(ideal_c, floor_m)
+    rec["roofline_v2"] = ideal / rec["t_step"] if rec.get("t_step") else 0.0
+    return rec
+
+
+def table(mesh: str = "single") -> str:
+    rows = [enrich(r) for r in load(mesh)]
+    hdr = ("| arch | shape | t_comp | t_mem | t_coll | bottleneck | "
+           "MODEL/HLO | roofline | roofline_v2 | mem/dev |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"SKIP | — | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"ERROR | — | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.1f}ms | "
+            f"{r['t_memory']*1e3:.1f}ms | {r['t_collective']*1e3:.1f}ms | "
+            f"{r['bottleneck']} | {r['useful_flops_fraction']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {r['roofline_v2']:.3f} | "
+            f"{r.get('bytes_per_device', 0)/1e9:.1f}GB |")
+    return "\n".join(lines)
+
+
+def run(quick: bool = False):
+    rows = []
+    for mesh in ("single", "multi"):
+        recs = [enrich(r) for r in load(mesh)]
+        ok = [r for r in recs if r.get("status") == "ok"]
+        if not ok:
+            continue
+        worst = min(ok, key=lambda r: r.get("roofline_v2", 1.0))
+        rows.append((f"roofline/{mesh}", 0.0,
+                     f"{len(ok)} ok / {len(recs)} cells; worst v2="
+                     f"{worst.get('roofline_v2', 0):.3f} "
+                     f"({worst['arch']}/{worst['shape']})"))
+    if not rows:
+        rows.append(("roofline/none", 0.0,
+                     "no artifacts; run python -m repro.launch.dryrun --all"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(table("single"))
+    print()
+    print(table("multi"))

@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV (see DESIGN.md §5 for the
+paper-artifact index).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    ("forkjoin", "benchmarks.bench_forkjoin"),      # Fig 4/5 + Table 1
+    ("latency", "benchmarks.bench_latency"),        # Table 2
+    ("throughput", "benchmarks.bench_throughput"),  # Fig 6
+    ("montecarlo", "benchmarks.bench_montecarlo"),  # Fig 7
+    ("disk", "benchmarks.bench_disk"),              # Fig 8
+    ("sort", "benchmarks.bench_sort"),              # Table 3
+    ("apps", "benchmarks.bench_apps"),              # Figs 9-12 + Table 5
+    ("compression", "benchmarks.bench_compression"),  # beyond-paper
+    ("roofline", "benchmarks.roofline"),            # dry-run report
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    import importlib
+    failures = 0
+    print("name,us_per_call,derived")
+    for name, modname in MODULES:
+        if args.only and args.only != name:
+            continue
+        try:
+            mod = importlib.import_module(modname)
+            for row in mod.run(quick=args.quick):
+                rname, us, derived = row
+                print(f"{rname},{us:.1f},\"{derived}\"")
+                sys.stdout.flush()
+        except Exception:
+            failures += 1
+            print(f"{name},ERROR,\"{traceback.format_exc(limit=3)}\"")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,172 @@
+"""Main-worker PPO over Pipes (paper §6.4, Fig. 12).
+
+OpenAI Baselines' multiprocessing PPO structure: the *main* process trains
+the policy (a small JAX MLP); each *worker* process simulates one
+environment and exchanges (state, action, reward) messages with the main
+over its dedicated Pipe — MPI heritage, pure message passing. One Process
++ one Pipe per environment, spawn context, exactly as Baselines does.
+
+Environment: a numpy CartPole-like balance task (no gym dependency).
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mp
+
+OBS, ACT = 4, 2
+
+
+class BalanceEnv:
+    """Minimal CartPole dynamics."""
+
+    def __init__(self, seed: int):
+        self.rng = np.random.default_rng(seed)
+        self.reset()
+
+    def reset(self):
+        self.s = self.rng.uniform(-0.05, 0.05, OBS)
+        self.t = 0
+        return self.s.copy()
+
+    def step(self, action: int):
+        x, xdot, th, thdot = self.s
+        force = 10.0 if action == 1 else -10.0
+        costh, sinth = np.cos(th), np.sin(th)
+        tmp = (force + 0.05 * thdot ** 2 * sinth) / 1.1
+        thacc = (9.8 * sinth - costh * tmp) / (0.5 * (4 / 3 - 0.1 * costh ** 2 / 1.1))
+        xacc = tmp - 0.05 * thacc * costh / 1.1
+        dt = 0.02
+        self.s = np.array([x + dt * xdot, xdot + dt * xacc,
+                           th + dt * thdot, thdot + dt * thacc])
+        self.t += 1
+        done = bool(abs(self.s[0]) > 2.4 or abs(self.s[2]) > 0.21 or self.t >= 200)
+        return self.s.copy(), 1.0, done
+
+
+def env_worker(conn, seed: int) -> None:
+    """Worker process: simulate; protocol = ('reset'|'step'|'close', arg)."""
+    env = BalanceEnv(seed)
+    while True:
+        cmd, arg = conn.recv()
+        if cmd == "reset":
+            conn.send(env.reset())
+        elif cmd == "step":
+            conn.send(env.step(int(arg)))
+        else:
+            return
+
+
+def init_policy(key):
+    k1, k2 = jax.random.split(key)
+    return {"w1": jax.random.normal(k1, (OBS, 32)) * 0.5,
+            "b1": jnp.zeros(32),
+            "w2": jax.random.normal(k2, (32, ACT)) * 0.1,
+            "b2": jnp.zeros(ACT)}
+
+
+def logits_fn(p, obs):
+    h = jnp.tanh(obs @ p["w1"] + p["b1"])
+    return h @ p["w2"] + p["b2"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--envs", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=15)
+    ap.add_argument("--horizon", type=int, default=64)
+    args = ap.parse_args()
+
+    ctx = mp.get_context("spawn")
+    conns, procs = [], []
+    for i in range(args.envs):
+        parent, child = ctx.Pipe()
+        p = ctx.Process(target=env_worker, args=(child, i))
+        p.start()
+        conns.append(parent)
+        procs.append(p)
+
+    params = init_policy(jax.random.PRNGKey(0))
+    value_w = jnp.zeros(OBS)
+
+    @jax.jit
+    def update(params, obs, act, adv, old_logp, lr=3e-3):
+        def loss(p):
+            lg = logits_fn(p, obs)
+            logp = jax.nn.log_softmax(lg)[jnp.arange(len(act)), act]
+            ratio = jnp.exp(logp - old_logp)
+            clipped = jnp.clip(ratio, 0.8, 1.2)
+            return -jnp.mean(jnp.minimum(ratio * adv, clipped * adv))
+        g = jax.grad(loss)(params)
+        return jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for conn in conns:
+        conn.send(("reset", None))
+    obs_now = np.stack([c.recv() for c in conns])
+
+    for it in range(args.iters):
+        O, A, R, D, LP = [], [], [], [], []
+        ep_returns = []
+        ep_acc = np.zeros(args.envs)
+        for t in range(args.horizon):
+            lg = np.asarray(logits_fn(params, jnp.asarray(obs_now)))
+            prob = np.exp(lg - lg.max(1, keepdims=True))
+            prob /= prob.sum(1, keepdims=True)
+            acts = np.array([rng.choice(ACT, p=pr) for pr in prob])
+            logp = np.log(prob[np.arange(args.envs), acts] + 1e-9)
+            # scatter actions / gather transitions over the pipes
+            for c, a in zip(conns, acts):
+                c.send(("step", int(a)))
+            nxt, rew, done = [], [], []
+            for i, c in enumerate(conns):
+                s, r, d = c.recv()
+                ep_acc[i] += r
+                if d:
+                    ep_returns.append(ep_acc[i])
+                    ep_acc[i] = 0.0
+                    c.send(("reset", None))
+                    s = c.recv()
+                nxt.append(s)
+                rew.append(r)
+                done.append(d)
+            O.append(obs_now.copy()); A.append(acts); R.append(rew)
+            D.append(done); LP.append(logp)
+            obs_now = np.stack(nxt)
+
+        # advantage: discounted returns minus a linear value baseline
+        R = np.array(R); D = np.array(D, dtype=bool)
+        G = np.zeros_like(R)
+        run = np.zeros(args.envs)
+        for t in reversed(range(args.horizon)):
+            run = R[t] + 0.99 * run * (~D[t])
+            G[t] = run
+        obs_flat = np.concatenate(O)
+        v = obs_flat @ np.asarray(value_w)
+        adv = (G.reshape(-1) - v)
+        adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+        # refit baseline
+        value_w = jnp.asarray(np.linalg.lstsq(obs_flat, G.reshape(-1),
+                                              rcond=None)[0])
+        for _ in range(4):
+            params = update(params, jnp.asarray(obs_flat),
+                            jnp.asarray(np.concatenate(A)),
+                            jnp.asarray(adv),
+                            jnp.asarray(np.concatenate(LP)))
+        mean_ret = np.mean(ep_returns) if ep_returns else float(args.horizon)
+        print(f"iter {it+1:3d}  mean episode return {mean_ret:7.1f}  "
+              f"({len(ep_returns)} episodes)")
+
+    for c in conns:
+        c.send(("close", None))
+    [p.join() for p in procs]
+    print(f"PPO over {args.envs} piped env workers: {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""Developer smoke test for the full mp API (fast, no pytest)."""
+import sys
+import time
+
+from repro.core import mp, reset_session
+
+reset_session()
+
+# --- Pool: map / starmap / apply_async / imap ---
+with mp.Pool(4) as p:
+    assert p.map(lambda x: x * 2, range(10)) == [x * 2 for x in range(10)]
+    assert p.starmap(lambda a, b: a + b, [(1, 2), (3, 4)]) == [3, 7]
+    r = p.apply_async(lambda: 99)
+    assert r.get(5) == 99
+    assert sorted(p.imap_unordered(lambda x: x + 1, range(5))) == [1, 2, 3, 4, 5]
+    assert list(p.imap(lambda x: x * x, range(5))) == [0, 1, 4, 9, 16]
+print("pool OK")
+
+# --- Process + Queue ---
+q = mp.Queue()
+
+
+def producer(q, n):
+    for i in range(n):
+        q.put(i)
+
+
+procs = [mp.Process(target=producer, args=(q, 5)) for _ in range(3)]
+[p.start() for p in procs]
+[p.join() for p in procs]
+assert all(p.exitcode == 0 for p in procs)
+got = sorted(q.get(timeout=1) for _ in range(15))
+assert got == sorted(list(range(5)) * 3), got
+print("process+queue OK")
+
+# --- Pipe ---
+a, b = mp.Pipe()
+
+
+def echo(conn):
+    conn.send(conn.recv() * 10)
+
+
+pr = mp.Process(target=echo, args=(b,))
+pr.start()
+a.send(7)
+assert a.recv() == 70
+pr.join()
+print("pipe OK")
+
+# --- Lock / Semaphore mutual exclusion ---
+lock = mp.Lock()
+counter = mp.Value("i", 0)
+
+
+def bump(lock, counter, n):
+    for _ in range(n):
+        with lock:
+            counter.value += 1
+
+
+ps = [mp.Process(target=bump, args=(lock, counter, 20)) for _ in range(4)]
+[p.start() for p in ps]
+[p.join() for p in ps]
+assert counter.value == 80, counter.value
+print("lock+value OK")
+
+# --- Event / Barrier / Condition ---
+ev = mp.Event()
+out = mp.Queue()
+
+
+def waiter(ev, out, i):
+    ev.wait()
+    out.put(i)
+
+
+ws = [mp.Process(target=waiter, args=(ev, out, i)) for i in range(3)]
+[w.start() for w in ws]
+time.sleep(0.1)
+assert out.qsize() == 0
+ev.set()
+[w.join() for w in ws]
+assert sorted(out.get(timeout=1) for _ in range(3)) == [0, 1, 2]
+
+bar = mp.Barrier(3)
+order = mp.Queue()
+
+
+def arrive(bar, order, i):
+    order.put(("before", i))
+    bar.wait()
+    order.put(("after", i))
+
+
+bs = [mp.Process(target=arrive, args=(bar, order, i)) for i in range(3)]
+[b_.start() for b_ in bs]
+[b_.join() for b_ in bs]
+events = [order.get(timeout=1) for _ in range(6)]
+assert [e[0] for e in events[:3]] == ["before"] * 3, events
+print("event+barrier OK")
+
+# --- Array / shared memory ---
+arr = mp.Array("d", [0.0] * 8)
+
+
+def fill(arr, lo, hi):
+    for i in range(lo, hi):
+        arr[i] = float(i)
+
+
+ps = [mp.Process(target=fill, args=(arr, 0, 4)),
+      mp.Process(target=fill, args=(arr, 4, 8))]
+[p.start() for p in ps]
+[p.join() for p in ps]
+assert arr[:] == [float(i) for i in range(8)], arr[:]
+assert len(arr) == 8
+print("array OK")
+
+# --- Manager dict/list/Namespace/custom class ---
+m = mp.Manager()
+d = m.dict()
+l = m.list([1, 2])
+ns = m.Namespace(x=1)
+
+
+def use_manager(d, l, ns):
+    d["k"] = 42
+    l.append(3)
+    ns.x = 99
+
+
+pm = mp.Process(target=use_manager, args=(d, l, ns))
+pm.start()
+pm.join()
+assert d["k"] == 42 and list(l) == [1, 2, 3] and ns.x == 99
+
+
+class Counter:
+    def __init__(self):
+        self.n = 0
+
+    def inc(self, k=1):
+        self.n += k
+        return self.n
+
+
+m.register("Counter", Counter)
+c = m.Counter()
+
+
+def inc_many(c):
+    for _ in range(10):
+        c.inc()
+
+
+pc = [mp.Process(target=inc_many, args=(c,)) for _ in range(3)]
+[p.start() for p in pc]
+[p.join() for p in pc]
+assert c.n == 30, c.n
+print("manager OK")
+
+# --- JoinableQueue ---
+jq = mp.JoinableQueue()
+
+
+def consume(jq):
+    while True:
+        item = jq.get()
+        if item is None:
+            jq.task_done()
+            return
+        jq.task_done()
+
+
+cw = mp.Process(target=consume, args=(jq,))
+cw.start()
+for i in range(5):
+    jq.put(i)
+jq.put(None)
+jq.join(timeout=5)
+cw.join()
+print("joinablequeue OK")
+
+print("ALL MP SMOKE OK")
+sys.exit(0)

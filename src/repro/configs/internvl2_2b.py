@@ -1,0 +1,21 @@
+"""internvl2-2b [vlm] — InternViT frontend (STUB: precomputed patch
+embeddings) + InternLM2 backbone [arXiv:2404.16821; hf]."""
+
+from ..models.config import ModelConfig
+
+#: ViT patch grid for the stub frontend (448px / 14px patches -> 1024,
+#: pixel-shuffle x4 -> 256 tokens, InternVL2 convention).
+NUM_PATCHES = 256
+
+CONFIG = ModelConfig(
+    name="internvl2-2b", family="vlm",
+    num_layers=24, d_model=2048, num_heads=16, num_kv_heads=8,
+    d_ff=8192, vocab_size=92553,
+    num_prefix_embeddings=NUM_PATCHES,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=256, num_prefix_embeddings=8,
+    dtype="float32", param_dtype="float32",
+)

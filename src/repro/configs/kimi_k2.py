@@ -1,0 +1,18 @@
+"""kimi-k2-1t-a32b [moe] — trillion-param MoE, 384 experts top-8 + 1
+shared expert [arXiv:2501.kimi2; unverified, paper-table]."""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    num_layers=61, d_model=7168, num_heads=64, num_kv_heads=8,
+    d_ff=2048, vocab_size=163840,
+    num_experts=384, experts_per_token=8, moe_d_ff=2048,
+    num_shared_experts=1,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=64,
+    vocab_size=256, num_experts=8, experts_per_token=2, moe_d_ff=64,
+    num_shared_experts=1, dtype="float32", param_dtype="float32",
+)

@@ -1,0 +1,17 @@
+"""minicpm-2b [dense] — WSD schedule, llama-like arch with mu-param style
+embedding/residual scaling [arXiv:2404.06395; hf]."""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b", family="dense",
+    num_layers=40, d_model=2304, num_heads=36, num_kv_heads=36,
+    d_ff=5760, vocab_size=122753, tie_embeddings=True,
+    emb_scale=12.0, residual_scale=1.4 / (40 ** 0.5),  # scale_depth/sqrt(L)
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=72, num_heads=4, num_kv_heads=4, d_ff=180,
+    vocab_size=256, dtype="float32", param_dtype="float32",
+    residual_scale=1.4 / (2 ** 0.5),
+)

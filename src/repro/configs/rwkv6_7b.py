@@ -1,0 +1,15 @@
+"""rwkv6-7b [ssm] — Finch, data-dependent decay, attention-free
+[arXiv:2404.05892; hf]."""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b", family="ssm",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=32,  # unused
+    d_ff=14336, vocab_size=65536, ssm_head_dim=64,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=160,
+    vocab_size=256, ssm_head_dim=16, dtype="float32", param_dtype="float32",
+)

@@ -1,0 +1,16 @@
+"""seamless-m4t-medium [audio] — enc-dec; audio frontend STUB
+(precomputed frame embeddings) [arXiv:2308.11596; hf]."""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium", family="encdec",
+    num_layers=12, d_model=1024, num_heads=16, num_kv_heads=16,
+    d_ff=4096, vocab_size=256206,
+    encoder_layers=12,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, encoder_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+    d_ff=128, vocab_size=256, dtype="float32", param_dtype="float32",
+)

@@ -1,0 +1,18 @@
+"""zamba2-2.7b [hybrid] — Mamba2 backbone + one SHARED attention block
+applied periodically [arXiv:2411.15242; hf]."""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b", family="hybrid",
+    num_layers=54, d_model=2560, num_heads=32, num_kv_heads=32,
+    d_ff=10240, vocab_size=32000,
+    ssm_state=64, ssm_head_dim=64, ssm_expand=2, conv_width=4,
+    attn_every=6,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=4, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+    vocab_size=256, ssm_state=16, ssm_head_dim=16, attn_every=2,
+    dtype="float32", param_dtype="float32",
+)

@@ -1,0 +1,357 @@
+"""Serverless FunctionExecutor — the disaggregated compute layer (paper §3.1).
+
+Faithful model of the Lithops workflow (paper Fig. 3):
+
+  (1) caller hands a function to the executor            -> ``call_async``/``map``
+  (2) function + args are serialized and uploaded         -> object storage
+  (3) orchestrator invokes serverless functions           -> backend threads /
+      (sequential async invocation => linear start ramp)     subprocesses
+  (4) generic worker downloads, deserializes, runs the
+      user function in an error wrapper, uploads result
+  (5) orchestrator joins by *storage polling* (S3 mode)
+      or *queue notification* (Redis mode)                -> both modes, Fig. 4
+
+Cold/warm container dynamics (Table 1, Fig. 5): an invocation that can
+reuse an idle container pays ``warm_invoke_s``; otherwise a new container
+is allocated at ``cold_invoke_s``. Containers return to the warm pool on
+completion. A function exceeding ``time_limit_s`` fails with
+``FunctionTimeoutError`` (the Lambda 15-minute ceiling, §3.1.2).
+
+All latency constants live in :class:`repro.core.session.InvocationModel`;
+they default to ~0 so tests run at native speed, and benchmarks install
+the paper's Table 1 values. Every future carries a per-phase timing
+breakdown mirroring Table 1 (serialize / upload / invoke / setup / run /
+join), in *virtual* (unscaled) seconds.
+"""
+
+from __future__ import annotations
+
+import itertools
+import os
+import threading
+import time
+import traceback
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from . import serialization
+from . import session as _session
+from .reference import fresh_uid
+
+__all__ = ["FunctionExecutor", "TaskFuture", "RemoteError", "FunctionTimeoutError"]
+
+
+class RemoteError(Exception):
+    """Exception raised in a serverless function, re-raised at the caller."""
+
+    def __init__(self, message: str, remote_traceback: str = ""):
+        super().__init__(message)
+        self.remote_traceback = remote_traceback
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        base = super().__str__()
+        if self.remote_traceback:
+            return f"{base}\n--- remote traceback ---\n{self.remote_traceback}"
+        return base
+
+
+class FunctionTimeoutError(RemoteError):
+    """Function exceeded the FaaS execution time limit."""
+
+
+class TaskFuture:
+    def __init__(self, task_id: str):
+        self.task_id = task_id
+        self._event = threading.Event()
+        self._value: Any = None
+        self._error: Optional[BaseException] = None
+        #: Table-1-style phase breakdown, virtual seconds.
+        self.stats: Dict[str, float] = {}
+        self.container_id: Optional[str] = None
+        self.cold: Optional[bool] = None
+
+    def _resolve(self, value: Any) -> None:
+        self._value = value
+        self._event.set()
+
+    def _reject(self, error: BaseException) -> None:
+        self._error = error
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._event.wait(timeout)
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"task {self.task_id} not done after {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+
+class _Container:
+    __slots__ = ("cid", "invocations")
+
+    def __init__(self, cid: str):
+        self.cid = cid
+        self.invocations = 0
+
+
+class FunctionExecutor:
+    """Invoke Python callables as (simulated) serverless functions."""
+
+    def __init__(self, backend: str = "threads", monitoring: str = "queue",
+                 time_limit_s: Optional[float] = None,
+                 session: Optional[_session.Session] = None,
+                 prewarm: int = 0, name: Optional[str] = None):
+        if backend not in ("threads", "inline", "subprocess"):
+            raise ValueError(f"unknown backend {backend!r}")
+        if monitoring not in ("queue", "storage"):
+            raise ValueError(f"unknown monitoring {monitoring!r}")
+        self.backend = backend
+        self.monitoring = monitoring
+        self.session = session or _session.get_session()
+        self.model = self.session.invocation
+        self.time_limit_s = time_limit_s
+        self.name = name or fresh_uid("exec")
+        self._store = self.session.store
+        self._storage = self.session.get_storage()
+        self._seq = itertools.count()
+        self._lock = threading.Lock()
+        self._warm: List[_Container] = [
+            _Container(fresh_uid("ct")) for _ in range(prewarm)]
+        self._containers_created = len(self._warm)
+        self._invoker_lock = threading.Lock()  # sequential async invocation
+        self._pending: Dict[str, TaskFuture] = {}
+        self._result_list = f"{{{self.name}}}:results"
+        self._collector: Optional[threading.Thread] = None
+        self._shutdown = False
+        self._threads: List[threading.Thread] = []
+
+    # ------------------------------------------------------------------ API
+
+    def call_async(self, func: Callable, args: Sequence[Any] = (),
+                   kwargs: Optional[Dict[str, Any]] = None) -> TaskFuture:
+        return self._submit(func, tuple(args), dict(kwargs or {}))
+
+    def map(self, func: Callable, iterdata: Iterable[Any]) -> List[TaskFuture]:
+        futures = []
+        for item in iterdata:
+            args = item if isinstance(item, tuple) else (item,)
+            futures.append(self._submit(func, args, {}))
+        return futures
+
+    @staticmethod
+    def get_result(futures: Sequence[TaskFuture],
+                   timeout: Optional[float] = None) -> List[Any]:
+        return [f.result(timeout) for f in futures]
+
+    def shutdown(self, wait: bool = True) -> None:
+        self._shutdown = True
+        if wait:
+            for t in list(self._threads):
+                t.join(timeout=10)
+        # Unblock the collector.
+        self._store.rpush(self._result_list, serialization.dumps(("__stop__", None, None, {})))
+
+    def stats_summary(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "containers_created": self._containers_created,
+                "warm_pool": len(self._warm),
+            }
+
+    # ----------------------------------------------------------- internals
+
+    def _sleep(self, seconds: float) -> float:
+        if seconds > 0 and self.model.scale > 0:
+            time.sleep(seconds * self.model.scale)
+        return seconds
+
+    def _acquire_container(self) -> Tuple[_Container, bool]:
+        with self._lock:
+            if self._warm:
+                return self._warm.pop(), False
+            self._containers_created += 1
+            return _Container(fresh_uid("ct")), True
+
+    def _release_container(self, c: _Container) -> None:
+        with self._lock:
+            if not self._shutdown:
+                self._warm.append(c)
+
+    def _submit(self, func: Callable, args: Tuple[Any, ...],
+                kwargs: Dict[str, Any]) -> TaskFuture:
+        if self._shutdown:
+            raise RuntimeError("executor is shut down")
+        task_id = f"{self.name}/t{next(self._seq)}"
+        fut = TaskFuture(task_id)
+        stats = fut.stats
+
+        # (2) serialize + upload (paper Fig. 3 step 2, Table 1 rows 1-2)
+        t0 = time.perf_counter()
+        payload = serialization.dumps((func, args, kwargs))
+        stats["serialize_s"] = (time.perf_counter() - t0) + self.model.serialize_s
+        self._sleep(self.model.serialize_s)
+        self._storage.put(f"jobs/{task_id}/payload", payload)
+        stats["upload_s"] = self.model.upload_s
+        stats["payload_bytes"] = len(payload)
+        self._sleep(self.model.upload_s)
+
+        with self._lock:
+            self._pending[task_id] = fut
+        self._ensure_collector()
+
+        # (3) invoke — sequential async invocation => linear start ramp
+        def do_invoke() -> None:
+            with self._invoker_lock:
+                rate = self.model.invoke_rate_per_s
+                if rate != float("inf") and rate > 0:
+                    self._sleep(1.0 / rate)
+                container, cold = self._acquire_container()
+            fut.container_id, fut.cold = container.cid, cold
+            invoke_s = self.model.cold_invoke_s if cold else self.model.warm_invoke_s
+            stats["invoke_s"] = invoke_s
+            if self.backend == "inline":
+                self._worker_body(task_id, container, cold)
+                self._release_container(container)
+            else:
+                t = threading.Thread(
+                    target=self._worker_entry, args=(task_id, container, cold),
+                    daemon=True, name=f"fn-{task_id}")
+                self._threads.append(t)
+                t.start()
+
+        do_invoke()
+        return fut
+
+    # (4) the generic Lithops worker
+    def _worker_entry(self, task_id: str, container: _Container, cold: bool) -> None:
+        try:
+            self._worker_body(task_id, container, cold)
+        finally:
+            self._release_container(container)
+
+    def _worker_body(self, task_id: str, container: _Container, cold: bool) -> None:
+        fut = self._pending.get(task_id)
+        model = self.model
+        self._sleep(model.cold_invoke_s if cold else model.warm_invoke_s)
+        self._sleep(model.setup_s)
+        if fut is not None:
+            fut.stats["setup_s"] = model.setup_s
+        container.invocations += 1
+
+        if self.backend == "subprocess":
+            self._run_subprocess(task_id)
+            return
+
+        payload = self._storage.get(f"jobs/{task_id}/payload")
+        t0 = time.perf_counter()
+        try:
+            func, args, kwargs = serialization.loads(payload)
+            value = func(*args, **kwargs)
+            status, body = "ok", value
+        except BaseException as exc:  # error wrapper (Fig. 3 step 4)
+            status, body = "error", (f"{type(exc).__name__}: {exc}",
+                                     traceback.format_exc())
+        run_s = time.perf_counter() - t0
+        if (self.time_limit_s is not None and run_s > self.time_limit_s
+                and status == "ok"):
+            status, body = "timeout", (
+                f"function exceeded time limit of {self.time_limit_s}s "
+                f"(ran {run_s:.3f}s)", "")
+
+        result_blob = serialization.dumps((task_id, status, body, {"run_s": run_s}))
+        if self.monitoring == "storage":
+            # S3 mode: result object appears; orchestrator polls LIST.
+            self._storage.put(f"jobs/{task_id}/result", result_blob)
+        else:
+            # Redis mode: push to the executor's result list (queue-notify).
+            self._store.rpush(self._result_list, result_blob)
+
+    def _run_subprocess(self, task_id: str) -> None:
+        """Full-fidelity mode: a real OS process reaching state over TCP."""
+        import subprocess
+        import sys
+        addr = getattr(self.session, "kv_address", None)
+        if addr is None:
+            raise RuntimeError(
+                "subprocess backend needs session.kv_address -> a running "
+                "KVServer (see tests/test_subprocess_backend.py)")
+        env = dict(os.environ)
+        env["REPRO_KV_ADDR"] = f"{addr[0]}:{addr[1]}"
+        src_root = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
+        env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+        subprocess.run(
+            [sys.executable, "-m", "repro.core.worker_main", task_id,
+             self.monitoring, self._result_list],
+            env=env, check=False, timeout=self.time_limit_s or 600)
+
+    # (5) join
+    def _ensure_collector(self) -> None:
+        with self._lock:
+            if self._collector is not None:
+                return
+            self._collector = threading.Thread(
+                target=self._collect_queue if self.monitoring == "queue"
+                else self._collect_storage,
+                daemon=True, name=f"collector-{self.name}")
+            self._collector.start()
+
+    def _settle(self, task_id: str, status: str, body: Any,
+                meta: Dict[str, float]) -> None:
+        with self._lock:
+            fut = self._pending.pop(task_id, None)
+        if fut is None:
+            return
+        fut.stats["run_s"] = meta.get("run_s", 0.0)
+        fut.stats["join_s"] = self.model.join_poll_interval_s
+        if status == "ok":
+            fut._resolve(body)
+        elif status == "timeout":
+            fut._reject(FunctionTimeoutError(body[0], body[1]))
+        else:
+            fut._reject(RemoteError(body[0], body[1]))
+
+    def _collect_queue(self) -> None:
+        while True:
+            got = self._store.blpop(self._result_list, timeout=0.5)
+            if got is None:
+                if self._shutdown and not self._pending:
+                    return
+                continue
+            _, blob = got
+            task_id, status, body, meta = serialization.loads(blob)
+            if task_id == "__stop__":
+                if self._shutdown and not self._pending:
+                    return
+                continue
+            self._settle(task_id, status, body, meta)
+
+    def _collect_storage(self) -> None:
+        interval = max(self.model.join_poll_interval_s, 1e-4)
+        while True:
+            if self._shutdown and not self._pending:
+                return
+            with self._lock:
+                pending_ids = list(self._pending.keys())
+            if not pending_ids:
+                time.sleep(interval * max(self.model.scale, 1e-3))
+                continue
+            # One LIST request per poll (the paper's S3 monitor lists the
+            # job prefix), then one GET per completed task.
+            done_keys = [k for k in self._storage.list(f"jobs/{self.name}/")
+                         if k.endswith("/result")]
+            for key in done_keys:
+                try:
+                    blob = self._storage.get(key)
+                except KeyError:
+                    continue
+                task_id, status, body, meta = serialization.loads(blob)
+                if task_id in pending_ids:
+                    self._storage.delete(key)
+                    self._settle(task_id, status, body, meta)
+            time.sleep(interval * max(self.model.scale, 1e-3))

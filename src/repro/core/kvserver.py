@@ -1,0 +1,165 @@
+"""TCP front-end for :class:`repro.core.kvstore.KVStore` (the "real Redis" mode).
+
+The paper's workers are AWS Lambda containers that reach Redis over TCP in
+the same VPC subnet. This module provides the equivalent remote mode: a
+length-prefixed framed protocol (command name + pickled args) served by a
+thread-per-connection server over a shared ``KVStore`` — whose global lock
+preserves Redis's single-threaded atomicity — plus a client exposing the
+same method surface, so every IPC primitive runs unchanged against a
+genuinely remote store (see tests/test_kvserver.py).
+
+Frame format: 4-byte big-endian length, then pickle((cmd, args, kwargs)).
+Response: 4-byte length, then pickle((ok: bool, value_or_exception)).
+"""
+
+from __future__ import annotations
+
+import socket
+import socketserver
+import struct
+import threading
+from typing import Any, Optional, Tuple
+
+from . import serialization
+from .kvstore import KVStore
+
+__all__ = ["KVServer", "KVClient"]
+
+_HDR = struct.Struct("!I")
+
+
+def _send_frame(sock: socket.socket, payload: bytes) -> None:
+    sock.sendall(_HDR.pack(len(payload)) + payload)
+
+
+def _recv_exactly(sock: socket.socket, n: int) -> Optional[bytes]:
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            return None
+        buf += chunk
+    return buf
+
+
+def _recv_frame(sock: socket.socket) -> Optional[bytes]:
+    hdr = _recv_exactly(sock, _HDR.size)
+    if hdr is None:
+        return None
+    (length,) = _HDR.unpack(hdr)
+    return _recv_exactly(sock, length)
+
+
+class _Handler(socketserver.BaseRequestHandler):
+    def handle(self) -> None:
+        store: KVStore = self.server.store  # type: ignore[attr-defined]
+        while True:
+            frame = _recv_frame(self.request)
+            if frame is None:
+                return
+            try:
+                cmd, args, kwargs = serialization.loads(frame)
+                if cmd.startswith("_") or not hasattr(store, cmd):
+                    raise AttributeError(f"unknown command {cmd!r}")
+                value = getattr(store, cmd)(*args, **kwargs)
+                resp = (True, value)
+            except Exception as exc:  # propagate to client
+                resp = (False, exc)
+            try:
+                _send_frame(self.request, serialization.dumps(resp))
+            except OSError:
+                return
+
+
+class _Server(socketserver.ThreadingTCPServer):
+    allow_reuse_address = True
+    daemon_threads = True
+
+
+class KVServer:
+    """Serve a KVStore over TCP. Use as a context manager or start()/stop()."""
+
+    def __init__(self, store: Optional[KVStore] = None,
+                 host: str = "127.0.0.1", port: int = 0):
+        self.store = store or KVStore(name="kvserver")
+        self._server = _Server((host, port), _Handler)
+        self._server.store = self.store  # type: ignore[attr-defined]
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        return self._server.server_address  # type: ignore[return-value]
+
+    def start(self) -> "KVServer":
+        self._thread = threading.Thread(
+            target=self._server.serve_forever, kwargs={"poll_interval": 0.05},
+            daemon=True, name="kvserver")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._server.shutdown()
+        self._server.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+
+    def __enter__(self) -> "KVServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+class KVClient:
+    """Remote KVStore with the same method interface.
+
+    One socket **per thread** (thread-local connections): blocking
+    commands (``blpop``) occupy their connection server-side, exactly like
+    one Redis connection per Lambda container — a shared socket would
+    deadlock a thread's LPUSH behind another thread's pending BLPOP.
+    """
+
+    def __init__(self, address: Tuple[str, int]):
+        self.address = address
+        self._tls = threading.local()
+        self._all_socks = []
+        self._all_lock = threading.Lock()
+        self.name = f"kvclient@{address[0]}:{address[1]}"
+
+    def _sock(self) -> socket.socket:
+        sock = getattr(self._tls, "sock", None)
+        if sock is None:
+            sock = socket.create_connection(self.address)
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            self._tls.sock = sock
+            with self._all_lock:
+                self._all_socks.append(sock)
+        return sock
+
+    def _call(self, cmd: str, *args: Any, **kwargs: Any) -> Any:
+        sock = self._sock()
+        _send_frame(sock, serialization.dumps((cmd, args, kwargs)))
+        frame = _recv_frame(sock)
+        if frame is None:
+            raise ConnectionError("kvserver closed the connection")
+        ok, value = serialization.loads(frame)
+        if not ok:
+            raise value
+        return value
+
+    def __getattr__(self, cmd: str):
+        if cmd.startswith("_"):
+            raise AttributeError(cmd)
+        def call(*args: Any, **kwargs: Any) -> Any:
+            return self._call(cmd, *args, **kwargs)
+        call.__name__ = cmd
+        return call
+
+    def close(self) -> None:
+        with self._all_lock:
+            socks, self._all_socks = self._all_socks, []
+        for sock in socks:
+            try:
+                sock.close()
+            except OSError:
+                pass

@@ -1,0 +1,749 @@
+"""Redis-analogue typed in-memory key-value store (paper §3.2).
+
+The paper disaggregates *all* multiprocessing shared state onto a Redis
+instance and leans on three Redis properties:
+
+  1. typed values (LIST, HASH, STRING, SET) whose operations map 1:1 onto
+     multiprocessing abstractions (Pipe/Queue -> LIST + LPUSH/BLPOP,
+     Semaphore -> token LIST, Manager.dict -> HASH, Array -> LIST, ...);
+  2. single-threaded command execution => every command is atomic and
+     totally ordered ("Redis maintains the order of puts and gets
+     consistent", §3.2);
+  3. blocking commands (BLPOP) for cheap cross-process wakeups.
+
+This module reproduces those semantics exactly:
+
+  * ``KVStore``       — in-process store; one global lock serializes all
+                        commands (the single-thread model), a condition
+                        variable implements blocking commands, TTLs are
+                        lazily expired.
+  * ``LatencyModel``  — optional per-command latency/bandwidth injection
+                        calibrated against the paper's Table 2 / Fig. 6 so
+                        CPU-only benchmark runs reproduce the *remote*
+                        cost structure (see benchmarks/bench_latency.py).
+  * ``ShardedKVStore``— beyond-paper: consistent-hash router over N
+                        stores, removing the single-node saturation the
+                        paper observes from 256 workers on (§6.3, §7.5).
+
+Values are stored as-is (the IPC layer passes serialized ``bytes``, like
+real Redis); byte sizes feed the latency model and the metrics.
+"""
+
+from __future__ import annotations
+
+import fnmatch
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+__all__ = [
+    "KVStore",
+    "ShardedKVStore",
+    "LatencyModel",
+    "PAPER_REMOTE_LATENCY",
+    "WrongTypeError",
+]
+
+
+class WrongTypeError(TypeError):
+    """Operation against a key holding the wrong kind of value (Redis WRONGTYPE)."""
+
+
+# ---------------------------------------------------------------------------
+# Latency injection
+# ---------------------------------------------------------------------------
+
+
+def _sizeof(value: Any) -> int:
+    """Approximate wire size of a value (bytes dominate; rest is framing)."""
+    if isinstance(value, (bytes, bytearray, memoryview)):
+        return len(value)
+    if isinstance(value, str):
+        return len(value)
+    return 64  # ints/floats/None: framing-order constant
+
+
+@dataclass
+class LatencyModel:
+    """Per-command cost = rtt_s + payload_bytes / bandwidth_bps, slept for real.
+
+    ``scale`` shrinks injected sleeps (benchmarks derive unscaled numbers);
+    ``scale=0`` accounts virtually (no sleep) while still accumulating
+    ``virtual_time`` so benchmarks can report modeled wall-clock.
+    """
+
+    rtt_s: float = 0.0
+    bandwidth_bps: float = float("inf")
+    scale: float = 1.0
+    virtual_time: float = field(default=0.0, repr=False)
+    _vlock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+
+    def cost(self, nbytes: int) -> float:
+        return self.rtt_s + (nbytes / self.bandwidth_bps if nbytes else 0.0)
+
+    def charge(self, nbytes: int) -> float:
+        c = self.cost(nbytes)
+        if c <= 0:
+            return 0.0
+        with self._vlock:
+            self.virtual_time += c
+        if self.scale > 0:
+            time.sleep(c * self.scale)
+        return c
+
+
+#: Calibrated against paper Table 2 (remote 1 KB = 0.6 ms RTT) and Fig. 6
+#: (~90 MB/s sustained pipe throughput). Each KV command is one round trip.
+PAPER_REMOTE_LATENCY = dict(rtt_s=0.25e-3, bandwidth_bps=90e6)
+
+
+# ---------------------------------------------------------------------------
+# Store entries
+# ---------------------------------------------------------------------------
+
+
+class _Entry:
+    __slots__ = ("kind", "value", "expires_at")
+
+    def __init__(self, kind: str, value: Any, expires_at: Optional[float] = None):
+        self.kind = kind  # "string" | "list" | "hash" | "set"
+        self.value = value
+        self.expires_at = expires_at
+
+
+@dataclass
+class Metrics:
+    commands: Dict[str, int] = field(default_factory=dict)
+    bytes_in: int = 0
+    bytes_out: int = 0
+    blocked_time_s: float = 0.0
+
+    def record(self, cmd: str, nin: int = 0, nout: int = 0) -> None:
+        self.commands[cmd] = self.commands.get(cmd, 0) + 1
+        self.bytes_in += nin
+        self.bytes_out += nout
+
+    def total_commands(self) -> int:
+        return sum(self.commands.values())
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {
+            "commands": dict(self.commands),
+            "total_commands": self.total_commands(),
+            "bytes_in": self.bytes_in,
+            "bytes_out": self.bytes_out,
+            "blocked_time_s": self.blocked_time_s,
+        }
+
+
+# ---------------------------------------------------------------------------
+# KVStore
+# ---------------------------------------------------------------------------
+
+
+class KVStore:
+    """In-memory Redis-semantics store. Thread-safe; commands are atomic."""
+
+    def __init__(self, latency: Optional[LatencyModel] = None, name: str = "kv"):
+        self.name = name
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        self._data: Dict[str, _Entry] = {}
+        self.latency = latency
+        self.metrics = Metrics()
+
+    # -- plumbing ----------------------------------------------------------
+
+    def configure_latency(self, latency: Optional[LatencyModel]) -> None:
+        self.latency = latency
+
+    def _charge(self, cmd: str, nin: int = 0, nout: int = 0) -> None:
+        self.metrics.record(cmd, nin, nout)
+        if self.latency is not None:
+            self.latency.charge(nin + nout)
+
+    def _now(self) -> float:
+        return time.monotonic()
+
+    def _get_entry(self, key: str, kind: Optional[str] = None,
+                   create: bool = False) -> Optional[_Entry]:
+        """Must hold the lock. Lazily expires; optionally creates."""
+        e = self._data.get(key)
+        if e is not None and e.expires_at is not None and self._now() >= e.expires_at:
+            del self._data[key]
+            e = None
+        if e is None:
+            if not create:
+                return None
+            assert kind is not None
+            e = _Entry(kind, [] if kind == "list" else
+                       {} if kind == "hash" else
+                       set() if kind == "set" else None)
+            self._data[key] = e
+        elif kind is not None and e.kind != kind:
+            raise WrongTypeError(
+                f"key {key!r} holds {e.kind}, operation requires {kind}")
+        return e
+
+    # -- generic -----------------------------------------------------------
+
+    def delete(self, *keys: str) -> int:
+        with self._lock:
+            n = 0
+            for k in keys:
+                if self._get_entry(k) is not None:
+                    del self._data[k]
+                    n += 1
+            self._cond.notify_all()
+        self._charge("DEL")
+        return n
+
+    def exists(self, key: str) -> bool:
+        with self._lock:
+            found = self._get_entry(key) is not None
+        self._charge("EXISTS")
+        return found
+
+    def expire(self, key: str, seconds: float) -> bool:
+        with self._lock:
+            e = self._get_entry(key)
+            if e is None:
+                ok = False
+            else:
+                e.expires_at = self._now() + seconds
+                ok = True
+        self._charge("EXPIRE")
+        return ok
+
+    def persist(self, key: str) -> bool:
+        with self._lock:
+            e = self._get_entry(key)
+            if e is None or e.expires_at is None:
+                return False
+            e.expires_at = None
+        self._charge("PERSIST")
+        return True
+
+    def ttl(self, key: str) -> float:
+        """-2 missing, -1 no expiry, else seconds remaining."""
+        with self._lock:
+            e = self._get_entry(key)
+            if e is None:
+                out = -2.0
+            elif e.expires_at is None:
+                out = -1.0
+            else:
+                out = max(0.0, e.expires_at - self._now())
+        self._charge("TTL")
+        return out
+
+    def type_of(self, key: str) -> Optional[str]:
+        with self._lock:
+            e = self._get_entry(key)
+            return None if e is None else e.kind
+
+    def keys(self, pattern: str = "*") -> List[str]:
+        with self._lock:
+            now = self._now()
+            out = [k for k, e in self._data.items()
+                   if (e.expires_at is None or e.expires_at > now)
+                   and fnmatch.fnmatch(k, pattern)]
+        self._charge("KEYS")
+        return out
+
+    def dbsize(self) -> int:
+        with self._lock:
+            now = self._now()
+            return sum(1 for e in self._data.values()
+                       if e.expires_at is None or e.expires_at > now)
+
+    def flushall(self) -> None:
+        with self._lock:
+            self._data.clear()
+            self._cond.notify_all()
+        self._charge("FLUSHALL")
+
+    # -- strings / counters --------------------------------------------------
+
+    def set(self, key: str, value: Any, ex: Optional[float] = None,
+            nx: bool = False) -> bool:
+        nbytes = _sizeof(value)
+        with self._lock:
+            if nx and self._get_entry(key) is not None:
+                self._charge("SET", nbytes)
+                return False
+            exp = self._now() + ex if ex is not None else None
+            self._data[key] = _Entry("string", value, exp)
+            self._cond.notify_all()
+        self._charge("SET", nbytes)
+        return True
+
+    def setnx(self, key: str, value: Any) -> bool:
+        return self.set(key, value, nx=True)
+
+    def get(self, key: str) -> Any:
+        with self._lock:
+            e = self._get_entry(key, "string")
+            out = None if e is None else e.value
+        self._charge("GET", 0, _sizeof(out) if out is not None else 0)
+        return out
+
+    def getset(self, key: str, value: Any) -> Any:
+        with self._lock:
+            e = self._get_entry(key, "string")
+            old = None if e is None else e.value
+            self._data[key] = _Entry("string", value)
+            self._cond.notify_all()
+        self._charge("GETSET", _sizeof(value))
+        return old
+
+    def incrby(self, key: str, amount: int = 1) -> int:
+        with self._lock:
+            e = self._get_entry(key, "string", create=True)
+            cur = int(e.value) if e.value is not None else 0
+            e.value = cur + amount
+            out = e.value
+            self._cond.notify_all()
+        self._charge("INCRBY")
+        return out
+
+    def incr(self, key: str) -> int:
+        return self.incrby(key, 1)
+
+    def decr(self, key: str) -> int:
+        return self.incrby(key, -1)
+
+    # -- lists ---------------------------------------------------------------
+
+    def lpush(self, key: str, *values: Any) -> int:
+        nbytes = sum(_sizeof(v) for v in values)
+        with self._lock:
+            e = self._get_entry(key, "list", create=True)
+            for v in values:
+                e.value.insert(0, v)
+            n = len(e.value)
+            self._cond.notify_all()
+        self._charge("LPUSH", nbytes)
+        return n
+
+    def rpush(self, key: str, *values: Any) -> int:
+        nbytes = sum(_sizeof(v) for v in values)
+        with self._lock:
+            e = self._get_entry(key, "list", create=True)
+            e.value.extend(values)
+            n = len(e.value)
+            self._cond.notify_all()
+        self._charge("RPUSH", nbytes)
+        return n
+
+    def _pop(self, key: str, left: bool) -> Tuple[bool, Any]:
+        e = self._get_entry(key, "list")
+        if e is None or not e.value:
+            return False, None
+        v = e.value.pop(0) if left else e.value.pop()
+        if not e.value:
+            del self._data[key]
+        return True, v
+
+    def lpop(self, key: str) -> Any:
+        with self._lock:
+            ok, v = self._pop(key, True)
+        self._charge("LPOP", 0, _sizeof(v) if ok else 0)
+        return v if ok else None
+
+    def rpop(self, key: str) -> Any:
+        with self._lock:
+            ok, v = self._pop(key, False)
+        self._charge("RPOP", 0, _sizeof(v) if ok else 0)
+        return v if ok else None
+
+    def _bpop(self, keys: Iterable[str], timeout: Optional[float],
+              left: bool, cmd: str) -> Optional[Tuple[str, Any]]:
+        keys = list(keys)
+        deadline = None if timeout is None else time.monotonic() + timeout
+        t0 = time.monotonic()
+        result: Optional[Tuple[str, Any]] = None
+        with self._lock:
+            while True:
+                popped = False
+                for k in keys:
+                    ok, v = self._pop(k, left)
+                    if ok:
+                        result = (k, v)
+                        popped = True
+                        break
+                if popped:
+                    break
+                if deadline is None:
+                    self._cond.wait()
+                else:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0 or not self._cond.wait(remaining):
+                        break
+        # Charge latency outside the lock: network time must not serialize
+        # the (single-threaded) command execution of other clients.
+        self.metrics.blocked_time_s += time.monotonic() - t0
+        if result is not None:
+            self._charge(cmd, 0, _sizeof(result[1]))
+        else:
+            self._charge(cmd)
+        return result
+
+    def blpop(self, keys, timeout: Optional[float] = None):
+        if isinstance(keys, str):
+            keys = [keys]
+        return self._bpop(keys, timeout, True, "BLPOP")
+
+    def brpop(self, keys, timeout: Optional[float] = None):
+        if isinstance(keys, str):
+            keys = [keys]
+        return self._bpop(keys, timeout, False, "BRPOP")
+
+    def rpoplpush(self, src: str, dst: str) -> Any:
+        with self._lock:
+            ok, v = self._pop(src, False)
+            if not ok:
+                self._charge("RPOPLPUSH")
+                return None
+            e = self._get_entry(dst, "list", create=True)
+            e.value.insert(0, v)
+            self._cond.notify_all()
+        self._charge("RPOPLPUSH", 0, _sizeof(v))
+        return v
+
+    def llen(self, key: str) -> int:
+        with self._lock:
+            e = self._get_entry(key, "list")
+            n = 0 if e is None else len(e.value)
+        self._charge("LLEN")
+        return n
+
+    def lindex(self, key: str, index: int) -> Any:
+        with self._lock:
+            e = self._get_entry(key, "list")
+            try:
+                v = None if e is None else e.value[index]
+            except IndexError:
+                v = None
+        self._charge("LINDEX", 0, _sizeof(v) if v is not None else 0)
+        return v
+
+    def lset(self, key: str, index: int, value: Any) -> bool:
+        with self._lock:
+            e = self._get_entry(key, "list")
+            if e is None:
+                raise KeyError(f"no such key {key!r}")
+            try:
+                e.value[index] = value
+            except IndexError:
+                raise IndexError("index out of range") from None
+            self._cond.notify_all()
+        self._charge("LSET", _sizeof(value))
+        return True
+
+    def lrange(self, key: str, start: int, stop: int) -> List[Any]:
+        """Redis semantics: stop is inclusive; negative indices allowed."""
+        with self._lock:
+            e = self._get_entry(key, "list")
+            if e is None:
+                out: List[Any] = []
+            else:
+                n = len(e.value)
+                s = start + n if start < 0 else start
+                t = stop + n if stop < 0 else stop
+                out = list(e.value[max(0, s):max(0, t) + 1])
+        self._charge("LRANGE", 0, sum(_sizeof(v) for v in out))
+        return out
+
+    def ltrim(self, key: str, start: int, stop: int) -> bool:
+        with self._lock:
+            e = self._get_entry(key, "list")
+            if e is None:
+                return True
+            n = len(e.value)
+            s = start + n if start < 0 else start
+            t = stop + n if stop < 0 else stop
+            e.value[:] = e.value[max(0, s):max(0, t) + 1]
+            if not e.value:
+                del self._data[key]
+        self._charge("LTRIM")
+        return True
+
+    # -- hashes --------------------------------------------------------------
+
+    def hset(self, key: str, field_: Optional[str] = None, value: Any = None,
+             mapping: Optional[Dict[str, Any]] = None) -> int:
+        items: Dict[str, Any] = {}
+        if field_ is not None:
+            items[field_] = value
+        if mapping:
+            items.update(mapping)
+        nbytes = sum(_sizeof(v) for v in items.values())
+        with self._lock:
+            e = self._get_entry(key, "hash", create=True)
+            added = sum(1 for f in items if f not in e.value)
+            e.value.update(items)
+            self._cond.notify_all()
+        self._charge("HSET", nbytes)
+        return added
+
+    def hsetnx(self, key: str, field_: str, value: Any) -> bool:
+        with self._lock:
+            e = self._get_entry(key, "hash", create=True)
+            if field_ in e.value:
+                ok = False
+            else:
+                e.value[field_] = value
+                ok = True
+            self._cond.notify_all()
+        self._charge("HSETNX", _sizeof(value))
+        return ok
+
+    def hget(self, key: str, field_: str) -> Any:
+        with self._lock:
+            e = self._get_entry(key, "hash")
+            v = None if e is None else e.value.get(field_)
+        self._charge("HGET", 0, _sizeof(v) if v is not None else 0)
+        return v
+
+    def hmget(self, key: str, fields: Iterable[str]) -> List[Any]:
+        with self._lock:
+            e = self._get_entry(key, "hash")
+            out = [None if e is None else e.value.get(f) for f in fields]
+        self._charge("HMGET", 0, sum(_sizeof(v) for v in out if v is not None))
+        return out
+
+    def hdel(self, key: str, *fields: str) -> int:
+        with self._lock:
+            e = self._get_entry(key, "hash")
+            if e is None:
+                n = 0
+            else:
+                n = 0
+                for f in fields:
+                    if f in e.value:
+                        del e.value[f]
+                        n += 1
+                if not e.value:
+                    del self._data[key]
+        self._charge("HDEL")
+        return n
+
+    def hgetall(self, key: str) -> Dict[str, Any]:
+        with self._lock:
+            e = self._get_entry(key, "hash")
+            out = {} if e is None else dict(e.value)
+        self._charge("HGETALL", 0, sum(_sizeof(v) for v in out.values()))
+        return out
+
+    def hlen(self, key: str) -> int:
+        with self._lock:
+            e = self._get_entry(key, "hash")
+            return 0 if e is None else len(e.value)
+
+    def hkeys(self, key: str) -> List[str]:
+        with self._lock:
+            e = self._get_entry(key, "hash")
+            return [] if e is None else list(e.value.keys())
+
+    def hvals(self, key: str) -> List[Any]:
+        with self._lock:
+            e = self._get_entry(key, "hash")
+            return [] if e is None else list(e.value.values())
+
+    def hexists(self, key: str, field_: str) -> bool:
+        with self._lock:
+            e = self._get_entry(key, "hash")
+            return e is not None and field_ in e.value
+
+    def hincrby(self, key: str, field_: str, amount: int = 1) -> int:
+        with self._lock:
+            e = self._get_entry(key, "hash", create=True)
+            cur = int(e.value.get(field_, 0))
+            e.value[field_] = cur + amount
+            out = e.value[field_]
+            self._cond.notify_all()
+        self._charge("HINCRBY")
+        return out
+
+    # -- sets ----------------------------------------------------------------
+
+    def sadd(self, key: str, *members: Any) -> int:
+        with self._lock:
+            e = self._get_entry(key, "set", create=True)
+            n = 0
+            for m in members:
+                if m not in e.value:
+                    e.value.add(m)
+                    n += 1
+            self._cond.notify_all()
+        self._charge("SADD", sum(_sizeof(m) for m in members))
+        return n
+
+    def srem(self, key: str, *members: Any) -> int:
+        with self._lock:
+            e = self._get_entry(key, "set")
+            if e is None:
+                n = 0
+            else:
+                n = 0
+                for m in members:
+                    if m in e.value:
+                        e.value.discard(m)
+                        n += 1
+                if not e.value:
+                    del self._data[key]
+        self._charge("SREM")
+        return n
+
+    def smembers(self, key: str) -> set:
+        with self._lock:
+            e = self._get_entry(key, "set")
+            out = set() if e is None else set(e.value)
+        self._charge("SMEMBERS", 0, sum(_sizeof(m) for m in out))
+        return out
+
+    def scard(self, key: str) -> int:
+        with self._lock:
+            e = self._get_entry(key, "set")
+            return 0 if e is None else len(e.value)
+
+    def sismember(self, key: str, member: Any) -> bool:
+        with self._lock:
+            e = self._get_entry(key, "set")
+            return e is not None and member in e.value
+
+    # -- transactions --------------------------------------------------------
+
+    def transaction(self, fn):
+        """Run ``fn(store)`` atomically (models a Redis Lua script / MULTI).
+
+        Inner commands execute without per-command network latency — a
+        pipelined/Lua batch pays one round trip; only bytes still cost
+        bandwidth. Metrics keep counting inner commands.
+        """
+        with self._lock:
+            saved, self.latency = self.latency, None
+            b0 = self.metrics.bytes_in + self.metrics.bytes_out
+            try:
+                out = fn(self)
+            finally:
+                self.latency = saved
+            moved = (self.metrics.bytes_in + self.metrics.bytes_out) - b0
+            self._cond.notify_all()
+        # one RTT + the batch's bandwidth cost (bytes already in metrics)
+        self.metrics.record("EVAL")
+        if self.latency is not None:
+            self.latency.charge(moved)
+        return out
+
+    # used by ShardedKVStore waiters
+    def _wait_hint(self, timeout: float) -> None:
+        with self._lock:
+            self._cond.wait(timeout)
+
+
+# ---------------------------------------------------------------------------
+# Sharded router (beyond-paper: removes the single-Redis bottleneck of §6.3)
+# ---------------------------------------------------------------------------
+
+
+class ShardedKVStore:
+    """Hash-routes keys across N independent KVStores.
+
+    Single-key commands keep full Redis semantics (each shard is itself
+    single-threaded-atomic). Multi-key blocking pops poll across the
+    involved shards. ``transaction`` is only supported when all touched
+    keys live on one shard (callers use key tags, like real Redis Cluster).
+    """
+
+    def __init__(self, shards: List[KVStore]):
+        if not shards:
+            raise ValueError("need at least one shard")
+        self.shards = shards
+        self.name = f"sharded[{len(shards)}]"
+
+    @staticmethod
+    def _hash(key: str) -> int:
+        # Redis Cluster hash-tag rule: only the {...} portion is hashed.
+        if "{" in key and "}" in key:
+            s = key.index("{") + 1
+            e = key.index("}", s)
+            if e > s:
+                key = key[s:e]
+        h = 2166136261
+        for ch in key.encode():
+            h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
+        return h
+
+    def shard_for(self, key: str) -> KVStore:
+        return self.shards[self._hash(key) % len(self.shards)]
+
+    @property
+    def metrics(self) -> Metrics:
+        agg = Metrics()
+        for s in self.shards:
+            m = s.metrics
+            for c, n in m.commands.items():
+                agg.commands[c] = agg.commands.get(c, 0) + n
+            agg.bytes_in += m.bytes_in
+            agg.bytes_out += m.bytes_out
+            agg.blocked_time_s += m.blocked_time_s
+        return agg
+
+    def flushall(self) -> None:
+        for s in self.shards:
+            s.flushall()
+
+    def dbsize(self) -> int:
+        return sum(s.dbsize() for s in self.shards)
+
+    def keys(self, pattern: str = "*") -> List[str]:
+        out: List[str] = []
+        for s in self.shards:
+            out.extend(s.keys(pattern))
+        return out
+
+    def delete(self, *keys: str) -> int:
+        return sum(self.shard_for(k).delete(k) for k in keys)
+
+    def blpop(self, keys, timeout: Optional[float] = None):
+        return self._bpop(keys, timeout, "blpop")
+
+    def brpop(self, keys, timeout: Optional[float] = None):
+        return self._bpop(keys, timeout, "brpop")
+
+    def _bpop(self, keys, timeout: Optional[float], op: str):
+        if isinstance(keys, str):
+            keys = [keys]
+        groups: Dict[int, List[str]] = {}
+        for k in keys:
+            groups.setdefault(self._hash(k) % len(self.shards), []).append(k)
+        if len(groups) == 1:
+            idx, ks = next(iter(groups.items()))
+            return getattr(self.shards[idx], op)(ks, timeout)
+        # Multi-shard: poll with short per-shard blocking slices.
+        deadline = None if timeout is None else time.monotonic() + timeout
+        slice_s = 0.005
+        while True:
+            for idx, ks in groups.items():
+                got = getattr(self.shards[idx], op)(ks, 0.0)
+                if got is not None:
+                    return got
+            if deadline is not None and time.monotonic() >= deadline:
+                return None
+            time.sleep(slice_s)
+
+    def transaction(self, fn, key_hint: Optional[str] = None):
+        if key_hint is None:
+            if len(self.shards) != 1:
+                raise ValueError("sharded transaction requires key_hint")
+            return self.shards[0].transaction(fn)
+        return self.shard_for(key_hint).transaction(fn)
+
+    def __getattr__(self, cmd: str):
+        # Route any single-key command by its first argument.
+        def call(key, *args, **kwargs):
+            return getattr(self.shard_for(key), cmd)(key, *args, **kwargs)
+        return call

@@ -1,0 +1,421 @@
+"""Manager and proxies (paper §3.2 "Managers").
+
+multiprocessing Managers host Python objects in a separate process reached
+by RMI. The paper's disaggregated construction, reproduced here:
+
+  * ``dict``/``list`` proxies map *natively* onto the KV store's HASH /
+    LIST types ("the implementation of those types is trivial using
+    Redis");
+  * user-registered classes keep a **local instance per process** whose
+    attribute state lives remotely as key-value pairs; every method call
+    loads attrs -> runs the method locally -> stores mutated attrs, under
+    a per-object Lock so "attributes are accessed by only one process at
+    a time".
+
+Keys and values are serialized; hash field names are the hex of the
+serialized key so arbitrary hashable keys work.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from . import serialization
+from .queues import JoinableQueue, Queue
+from .reference import RemoteResource
+from .sharedctypes import Array, Value
+from .synchronize import Barrier, Condition, Event, Lock, RLock, Semaphore
+
+__all__ = ["Manager", "SyncManager", "DictProxy", "ListProxy", "NamespaceProxy"]
+
+
+def _enc(obj: Any) -> bytes:
+    return serialization.dumps(obj)
+
+
+def _dec(blob: Optional[bytes]) -> Any:
+    return None if blob is None else serialization.loads(blob)
+
+
+class DictProxy(RemoteResource):
+    """HASH-backed dict. Field name = hex(serialized key); value stores the
+    (key, value) pair so iteration recovers original keys."""
+
+    _RESOURCE_KIND = "mdict"
+
+    def __init__(self, init: Optional[Dict] = None, _adopt: bool = False, **kw):
+        super().__init__(_adopt=_adopt, **kw)
+        if init:
+            self.update(init)
+
+    @property
+    def _h(self) -> str:
+        return self._key("hash")
+
+    def _kv_keys(self):
+        return [self._refs_key, self._h]
+
+    @staticmethod
+    def _field(key: Any) -> str:
+        return _enc(key).hex()
+
+    def __setitem__(self, key: Any, value: Any) -> None:
+        self._store.hset(self._h, self._field(key), _enc((key, value)))
+
+    def __getitem__(self, key: Any) -> Any:
+        blob = self._store.hget(self._h, self._field(key))
+        if blob is None:
+            raise KeyError(key)
+        return _dec(blob)[1]
+
+    def get(self, key: Any, default: Any = None) -> Any:
+        blob = self._store.hget(self._h, self._field(key))
+        return default if blob is None else _dec(blob)[1]
+
+    def __delitem__(self, key: Any) -> None:
+        if not self._store.hdel(self._h, self._field(key)):
+            raise KeyError(key)
+
+    def __contains__(self, key: Any) -> bool:
+        return self._store.hexists(self._h, self._field(key))
+
+    def __len__(self) -> int:
+        return self._store.hlen(self._h)
+
+    def keys(self) -> List[Any]:
+        return [_dec(b)[0] for b in self._store.hvals(self._h)]
+
+    def values(self) -> List[Any]:
+        return [_dec(b)[1] for b in self._store.hvals(self._h)]
+
+    def items(self) -> List[Tuple[Any, Any]]:
+        return [_dec(b) for b in self._store.hvals(self._h)]
+
+    def __iter__(self):
+        return iter(self.keys())
+
+    def update(self, other: Optional[Dict] = None, **kw) -> None:
+        pairs: Dict[str, bytes] = {}
+        if other:
+            items = other.items() if hasattr(other, "items") else other
+            for k, v in items:
+                pairs[self._field(k)] = _enc((k, v))
+        for k, v in kw.items():
+            pairs[self._field(k)] = _enc((k, v))
+        if pairs:
+            self._store.hset(self._h, mapping=pairs)
+
+    def setdefault(self, key: Any, default: Any = None) -> Any:
+        if self._store.hsetnx(self._h, self._field(key), _enc((key, default))):
+            return default
+        return self[key]
+
+    def pop(self, key: Any, *default: Any) -> Any:
+        h, f = self._h, self._field(key)
+
+        def txn(s):
+            blob = s.hget(h, f)
+            if blob is not None:
+                s.hdel(h, f)
+            return blob
+        blob = (self._store.transaction(txn, key_hint=h)
+                if hasattr(self._store, "shards")
+                else self._store.transaction(txn))
+        if blob is None:
+            if default:
+                return default[0]
+            raise KeyError(key)
+        return _dec(blob)[1]
+
+    def clear(self) -> None:
+        self._store.delete(self._h)
+
+    def copy(self) -> Dict[Any, Any]:
+        return dict(self.items())
+
+
+class ListProxy(RemoteResource):
+    """LIST-backed list of serialized elements."""
+
+    _RESOURCE_KIND = "mlist"
+
+    def __init__(self, init: Optional[Iterable[Any]] = None,
+                 _adopt: bool = False, **kw):
+        super().__init__(_adopt=_adopt, **kw)
+        if init:
+            self.extend(init)
+
+    @property
+    def _l(self) -> str:
+        return self._key("list")
+
+    def _kv_keys(self):
+        return [self._refs_key, self._l]
+
+    def append(self, value: Any) -> None:
+        self._store.rpush(self._l, _enc(value))
+
+    def extend(self, values: Iterable[Any]) -> None:
+        blobs = [_enc(v) for v in values]
+        if blobs:
+            self._store.rpush(self._l, *blobs)
+
+    def __len__(self) -> int:
+        return self._store.llen(self._l)
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            n = len(self)
+            start, stop, step = i.indices(n)
+            if step == 1:
+                return [_dec(b) for b in self._store.lrange(self._l, start, stop - 1)]
+            return [_dec(self._store.lindex(self._l, j))
+                    for j in range(start, stop, step)]
+        blob = self._store.lindex(self._l, i)
+        if blob is None:
+            raise IndexError("list index out of range")
+        return _dec(blob)
+
+    def __setitem__(self, i: int, value: Any) -> None:
+        try:
+            self._store.lset(self._l, i, _enc(value))
+        except KeyError:
+            raise IndexError("list assignment index out of range") from None
+
+    def pop(self, index: int = -1) -> Any:
+        if index == -1:
+            blob = self._store.rpop(self._l)
+        elif index == 0:
+            blob = self._store.lpop(self._l)
+        else:
+            lkey = index
+
+            def txn(s, key=self._l, i=lkey):
+                items = s.lrange(key, 0, -1)
+                if not (-len(items) <= i < len(items)):
+                    return None
+                v = items.pop(i)
+                s.delete(key)
+                if items:
+                    s.rpush(key, *items)
+                return v
+            blob = (self._store.transaction(txn, key_hint=self._l)
+                    if hasattr(self._store, "shards")
+                    else self._store.transaction(txn))
+        if blob is None:
+            raise IndexError("pop from empty list or index out of range")
+        return _dec(blob)
+
+    def __iter__(self):
+        return iter([_dec(b) for b in self._store.lrange(self._l, 0, -1)])
+
+    def __contains__(self, value: Any) -> bool:
+        return any(v == value for v in self)
+
+    def index(self, value: Any) -> int:
+        for i, v in enumerate(self):
+            if v == value:
+                return i
+        raise ValueError(f"{value!r} is not in list")
+
+    def count(self, value: Any) -> int:
+        return sum(1 for v in self if v == value)
+
+    def tolist(self) -> List[Any]:
+        return list(self)
+
+
+class NamespaceProxy(RemoteResource):
+    """Attribute namespace over a HASH."""
+
+    _RESOURCE_KIND = "mns"
+
+    _LOCAL = ("uid", "_store", "_ttl_s", "_closed", "_local_lock")
+
+    @property
+    def _h(self) -> str:
+        return self._key("ns")
+
+    def _kv_keys(self):
+        return [self._refs_key, self._h]
+
+    def __getattr__(self, name: str):
+        if name.startswith("_") or name == "uid":
+            raise AttributeError(name)
+        blob = self._store.hget(self._h, name)
+        if blob is None:
+            raise AttributeError(name)
+        return _dec(blob)
+
+    def __setattr__(self, name: str, value: Any) -> None:
+        if name.startswith("_") or name == "uid":
+            object.__setattr__(self, name, value)
+        else:
+            self._store.hset(self._h, name, _enc(value))
+
+    def __delattr__(self, name: str) -> None:
+        if not self._store.hdel(self._h, name):
+            raise AttributeError(name)
+
+
+class _RemoteMethodProxy(RemoteResource):
+    """Paper §3.2: local instance, remote attributes, per-call Lock."""
+
+    _RESOURCE_KIND = "mobj"
+
+    def __init__(self, cls: type, args: Tuple = (), kwargs: Optional[Dict] = None,
+                 _adopt: bool = False, **kw):
+        super().__init__(_adopt=_adopt, **kw)
+        lock = Lock(store=kw.get("store"))
+        self._rebuild(cls, lock)
+        instance = cls(*args, **(kwargs or {}))
+        self._store.hset(self._attrs_key, mapping={
+            k: _enc(v) for k, v in vars(instance).items()})
+
+    def _rebuild(self, cls: type, lock: Lock) -> None:
+        object.__setattr__(self, "_cls", cls)
+        object.__setattr__(self, "_lock", lock)
+
+    def _reduce_state(self):
+        return (self._cls, self._lock)
+
+    @property
+    def _attrs_key(self) -> str:
+        return self._key("attrs")
+
+    def _kv_keys(self):
+        return [self._refs_key, self._attrs_key]
+
+    def _load(self) -> Any:
+        inst = self._cls.__new__(self._cls)
+        for k, blob in self._store.hgetall(self._attrs_key).items():
+            setattr(inst, k, _dec(blob))
+        return inst
+
+    def _save(self, inst: Any) -> None:
+        self._store.hset(self._attrs_key, mapping={
+            k: _enc(v) for k, v in vars(inst).items()})
+
+    def __getattr__(self, name: str):
+        if name.startswith("_") or name == "uid":
+            raise AttributeError(name)
+        attr = getattr(self._cls, name, None)
+        if callable(attr):
+            def method(*args, **kwargs):
+                with self._lock:
+                    inst = self._load()
+                    out = getattr(inst, name)(*args, **kwargs)
+                    self._save(inst)
+                return out
+            method.__name__ = name
+            return method
+        # plain attribute read
+        blob = self._store.hget(self._attrs_key, name)
+        if blob is None:
+            raise AttributeError(name)
+        return _dec(blob)
+
+    def __setattr__(self, name: str, value: Any) -> None:
+        if name.startswith("_") or name == "uid":
+            object.__setattr__(self, name, value)
+        else:
+            self._store.hset(self._attrs_key, name, _enc(value))
+
+
+class SyncManager:
+    """Drop-in for ``multiprocessing.Manager()``.
+
+    There is no separate manager *process*: the KV store plays that role
+    (it is the paper's point — Redis replaces the manager's RMI server).
+    ``start``/``shutdown`` exist for interface compatibility.
+    """
+
+    def __init__(self, store: Optional[Any] = None):
+        self._store = store
+        self._registry: Dict[str, type] = {}
+        self._resources: List[RemoteResource] = []
+
+    # lifecycle (no-ops; present for API fidelity)
+    def start(self) -> "SyncManager":
+        return self
+
+    def shutdown(self) -> None:
+        for r in self._resources:
+            r.close()
+        self._resources.clear()
+
+    def __enter__(self) -> "SyncManager":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    def _track(self, res):
+        self._resources.append(res)
+        return res
+
+    # built-in types
+    def dict(self, init: Optional[Dict] = None, **kw) -> DictProxy:
+        if kw and init is None:
+            init = dict(kw)
+        return self._track(DictProxy(init, store=self._store))
+
+    def list(self, init: Optional[Iterable[Any]] = None) -> ListProxy:
+        return self._track(ListProxy(init, store=self._store))
+
+    def Namespace(self, **kw) -> NamespaceProxy:
+        ns = self._track(NamespaceProxy(store=self._store))
+        for k, v in kw.items():
+            setattr(ns, k, v)
+        return ns
+
+    def Lock(self) -> Lock:
+        return self._track(Lock(store=self._store))
+
+    def RLock(self) -> RLock:
+        return self._track(RLock(store=self._store))
+
+    def Semaphore(self, value: int = 1) -> Semaphore:
+        return self._track(Semaphore(value, store=self._store))
+
+    def Condition(self, lock: Optional[Lock] = None) -> Condition:
+        return self._track(Condition(lock, store=self._store))
+
+    def Event(self) -> Event:
+        return self._track(Event(store=self._store))
+
+    def Barrier(self, parties: int, action=None, timeout=None) -> Barrier:
+        return self._track(Barrier(parties, action, timeout, store=self._store))
+
+    def Queue(self, maxsize: int = 0) -> Queue:
+        return self._track(Queue(maxsize, store=self._store))
+
+    def JoinableQueue(self, maxsize: int = 0) -> JoinableQueue:
+        return self._track(JoinableQueue(maxsize, store=self._store))
+
+    def Value(self, typecode: str, value: Any = 0) -> Value:
+        return self._track(Value(typecode, value, store=self._store))
+
+    def Array(self, typecode: str, seq) -> Array:
+        return self._track(Array(typecode, seq, store=self._store))
+
+    # user classes (paper: RMI -> attrs-in-KV + Lock)
+    def register(self, typeid: str, callable_: Optional[type] = None, **_ignored) -> None:
+        if callable_ is not None:
+            self._registry[typeid] = callable_
+
+    def __getattr__(self, typeid: str):
+        registry = object.__getattribute__(self, "_registry")
+        if typeid in registry:
+            cls = registry[typeid]
+
+            def factory(*args, **kwargs):
+                return self._track(_RemoteMethodProxy(
+                    cls, args, kwargs, store=self._store))
+            factory.__name__ = typeid
+            return factory
+        raise AttributeError(typeid)
+
+
+def Manager(store: Optional[Any] = None) -> SyncManager:
+    return SyncManager(store).start()

@@ -1,0 +1,93 @@
+"""``repro.core.mp`` — the drop-in ``multiprocessing`` module (paper §3).
+
+    -  import multiprocessing as mp
+    +  from repro.core import mp
+
+Everything else in the application stays unchanged: that is the paper's
+access-transparency claim, and tests/test_transparency.py runs the same
+application code against both this module and the stdlib to enforce it.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+from .managers import Manager, SyncManager
+from .pool import Pool
+from .process import Process, active_children, current_process, parent_process
+from .queues import Empty, Full, JoinableQueue, Pipe, Queue, SimpleQueue
+from .sharedctypes import Array, RawArray, RawValue, Value
+from .synchronize import (Barrier, BoundedSemaphore, BrokenBarrierError,
+                          Condition, Event, Lock, RLock, Semaphore)
+from . import session as _session
+
+__all__ = [
+    "Process", "Pool", "Queue", "SimpleQueue", "JoinableQueue", "Pipe",
+    "Lock", "RLock", "Semaphore", "BoundedSemaphore", "Condition", "Event",
+    "Barrier", "Value", "Array", "RawValue", "RawArray", "Manager",
+    "current_process", "parent_process", "active_children", "cpu_count",
+    "get_context", "get_start_method", "set_start_method", "Empty", "Full",
+    "BrokenBarrierError", "TimeoutError",
+]
+
+TimeoutError = TimeoutError  # multiprocessing re-exports it; so do we
+
+
+def cpu_count() -> int:
+    """Local API returns machine cores; transparently we return the
+    configured serverless parallelism ceiling when one is set (this is
+    how unmodified ``Pool(processes=cpu_count())`` code scales out)."""
+    sess = _session.get_session()
+    configured = sess.executor_defaults.get("default_parallelism")
+    return int(configured) if configured else (os.cpu_count() or 1)
+
+
+_start_method = "spawn"  # serverless functions are always fresh => spawn
+
+
+def get_start_method(allow_none: bool = False) -> str:
+    return _start_method
+
+
+def set_start_method(method: str, force: bool = False) -> None:
+    # spawn/fork/forkserver all map to function invocation; accepted for
+    # API fidelity (POET uses spawn, Pandaral·lel uses fork — §6).
+    if method not in ("spawn", "fork", "forkserver"):
+        raise ValueError(f"unknown start method {method!r}")
+
+
+class _Context:
+    """multiprocessing context object. Start method is cosmetic here —
+    every 'process' is a serverless function invocation either way."""
+
+    def __init__(self, method: str = "spawn"):
+        self._method = method
+        # re-export the full API surface on the context, like stdlib
+        self.Process = Process
+        self.Pool = Pool
+        self.Queue = Queue
+        self.SimpleQueue = SimpleQueue
+        self.JoinableQueue = JoinableQueue
+        self.Pipe = staticmethod(Pipe)
+        self.Lock = Lock
+        self.RLock = RLock
+        self.Semaphore = Semaphore
+        self.BoundedSemaphore = BoundedSemaphore
+        self.Condition = Condition
+        self.Event = Event
+        self.Barrier = Barrier
+        self.Value = Value
+        self.Array = Array
+        self.Manager = staticmethod(Manager)
+        self.cpu_count = staticmethod(cpu_count)
+
+    def get_start_method(self, allow_none: bool = False) -> str:
+        return self._method
+
+    def get_context(self, method: Optional[str] = None) -> "_Context":
+        return get_context(method)
+
+
+def get_context(method: Optional[str] = None) -> _Context:
+    return _Context(method or _start_method)

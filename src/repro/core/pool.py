@@ -1,0 +1,441 @@
+"""Pool with the serverless job-queue pattern (paper §3.1.2).
+
+Workers are *long-lived functions* invoked once at pool creation. Pool
+operations do not invoke new functions; they serialize the task function
+once to storage, then submit every chunk with a single LPUSH to the
+pool's KV job list. Workers BLPOP chunks, execute, and RPUSH results to
+the pool's result list, which a collector thread in the parent drains.
+
+Benefits reproduced from the paper: submit cost is one KV command for a
+whole map (vs one FaaS invocation per task), warm function reuse kills
+cold-start stragglers, and worker-scope state (``initializer``) is set up
+once per worker. Drawback reproduced too: the FaaS execution time limit
+bounds worker lifetime (see ``FunctionExecutor(time_limit_s=...)``).
+
+Beyond-paper: ``resize()`` grows/shrinks the worker fleet at runtime —
+the elasticity hook used by ``repro.runtime.elastic``.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+import threading
+import time
+import traceback
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from . import serialization
+from . import session as _session
+from .executor import FunctionExecutor
+from .reference import fresh_uid
+
+__all__ = ["Pool", "AsyncResult", "MapResult"]
+
+_POISON = b"__poison__"
+
+
+def default_parallelism() -> int:
+    sess = _session.get_session()
+    return int(sess.executor_defaults.get("default_parallelism", 0)) or 4
+
+
+# ---------------------------------------------------------------------------
+# The generic long-lived pool worker (runs inside a serverless function)
+# ---------------------------------------------------------------------------
+
+
+def _pool_worker(pool_tag: str, worker_id: int, init_key: Optional[str],
+                 maxtasksperchild: Optional[int]) -> None:
+    sess = _session.get_session()
+    store, storage = sess.store, sess.get_storage()
+    job_key = f"{pool_tag}:jobs"
+    result_key = f"{pool_tag}:results"
+    kill_key = f"{pool_tag}:kill"
+
+    if init_key is not None:
+        initializer, initargs = serialization.loads(storage.get(init_key))
+        initializer(*initargs)
+
+    func_cache: Dict[str, Callable] = {}
+    chunks_done = 0
+    exit_reason = "poison"
+    while True:
+        got = store.blpop(job_key, timeout=0.25)
+        if got is None:
+            if store.get(kill_key):
+                exit_reason = "killed"
+                break
+            continue
+        if got[1] == _POISON:
+            break
+        job_id, chunk_idx, func_key, items = serialization.loads(got[1])
+        func = func_cache.get(func_key)
+        if func is None:
+            func = serialization.loads(storage.get(func_key))
+            func_cache[func_key] = func
+        results: List[Tuple[int, str, Any]] = []
+        for item_idx, args, kwargs in items:
+            try:
+                results.append((item_idx, "ok", func(*args, **kwargs)))
+            except Exception as exc:
+                results.append((item_idx, "error",
+                                (f"{type(exc).__name__}: {exc}",
+                                 traceback.format_exc())))
+        store.rpush(result_key, serialization.dumps(
+            ("chunk", job_id, chunk_idx, results, worker_id)))
+        chunks_done += 1
+        if maxtasksperchild and chunks_done >= maxtasksperchild:
+            exit_reason = "recycle"
+            break
+    store.rpush(result_key, serialization.dumps(
+        ("worker_exit", worker_id, exit_reason)))
+
+
+# ---------------------------------------------------------------------------
+# Async results
+# ---------------------------------------------------------------------------
+
+
+class AsyncResult:
+    def __init__(self, n_items: int, callback=None, error_callback=None):
+        self._n = n_items
+        self._values: List[Any] = [None] * n_items
+        self._got = 0
+        self._first_error: Optional[Exception] = None
+        self._event = threading.Event()
+        self._callback = callback
+        self._error_callback = error_callback
+        self._lock = threading.Lock()
+
+    def _deliver(self, item_idx: int, status: str, value: Any) -> None:
+        from .executor import RemoteError
+        with self._lock:
+            if status == "ok":
+                self._values[item_idx] = value
+            elif self._first_error is None:
+                self._first_error = RemoteError(value[0], value[1])
+            self._got += 1
+            done = self._got >= self._n
+        if done:
+            if self._first_error is not None and self._error_callback:
+                try:
+                    self._error_callback(self._first_error)
+                except Exception:
+                    pass
+            elif self._first_error is None and self._callback:
+                try:
+                    self._callback(self._result_value())
+                except Exception:
+                    pass
+            self._event.set()
+
+    def _result_value(self):
+        return self._values[0]
+
+    def ready(self) -> bool:
+        return self._event.is_set()
+
+    def successful(self) -> bool:
+        if not self.ready():
+            raise ValueError("result is not ready")
+        return self._first_error is None
+
+    def wait(self, timeout: Optional[float] = None) -> None:
+        self._event.wait(timeout)
+
+    def get(self, timeout: Optional[float] = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError("pool result not ready")
+        if self._first_error is not None:
+            raise self._first_error
+        return self._result_value()
+
+
+class MapResult(AsyncResult):
+    def _result_value(self):
+        return list(self._values)
+
+
+# ---------------------------------------------------------------------------
+# Pool
+# ---------------------------------------------------------------------------
+
+
+class Pool:
+    def __init__(self, processes: Optional[int] = None,
+                 initializer: Optional[Callable] = None,
+                 initargs: Sequence[Any] = (),
+                 maxtasksperchild: Optional[int] = None,
+                 context=None,  # accepted for API fidelity
+                 session: Optional[_session.Session] = None):
+        self.session = session or _session.get_session()
+        self._store = self.session.store
+        self._storage = self.session.get_storage()
+        self.uid = fresh_uid("pool")
+        self._tag = "{" + self.uid + "}"
+        self._n_workers_target = processes or default_parallelism()
+        self._maxtasks = maxtasksperchild
+        self._executor = FunctionExecutor(
+            name=f"pool-{self.uid}", session=self.session,
+            **{k: v for k, v in self.session.executor_defaults.items()
+               if k in ("backend", "monitoring", "time_limit_s")})
+        self._init_key: Optional[str] = None
+        if initializer is not None:
+            self._init_key = f"pool/{self.uid}/init"
+            self._storage.put(self._init_key,
+                              serialization.dumps((initializer, tuple(initargs))))
+        self._job_seq = itertools.count()
+        self._func_seq = itertools.count()
+        self._jobs: Dict[int, Tuple[MapResult, Optional["_IMapBuffer"]]] = {}
+        self._jobs_lock = threading.Lock()
+        self._live_workers = 0
+        self._worker_seq = itertools.count()
+        self._closed = False
+        self._all_exited = threading.Event()
+        self._all_exited.set()
+        self._collector = threading.Thread(
+            target=self._collect, daemon=True, name=f"pool-collector-{self.uid}")
+        self._collector_stop = False
+        self._collector.start()
+        self._spawn_workers(self._n_workers_target)
+
+    # -- keys ---------------------------------------------------------------
+
+    @property
+    def _job_key(self) -> str:
+        return f"{self._tag}:jobs"
+
+    @property
+    def _result_key(self) -> str:
+        return f"{self._tag}:results"
+
+    @property
+    def _kill_key(self) -> str:
+        return f"{self._tag}:kill"
+
+    # -- workers --------------------------------------------------------------
+
+    def _spawn_workers(self, n: int) -> None:
+        for _ in range(n):
+            wid = next(self._worker_seq)
+            self._executor.call_async(
+                _pool_worker, (self._tag, wid, self._init_key, self._maxtasks))
+            with self._jobs_lock:
+                self._live_workers += 1
+                self._all_exited.clear()
+
+    def resize(self, n_workers: int) -> None:
+        """Elastically grow or shrink the worker fleet (beyond-paper)."""
+        with self._jobs_lock:
+            cur = self._live_workers
+        if n_workers > cur:
+            self._spawn_workers(n_workers - cur)
+        elif n_workers < cur:
+            self._store.rpush(self._job_key, *([_POISON] * (cur - n_workers)))
+        self._n_workers_target = n_workers
+
+    @property
+    def n_workers(self) -> int:
+        with self._jobs_lock:
+            return self._live_workers
+
+    # -- submission ------------------------------------------------------------
+
+    def _upload_func(self, func: Callable) -> str:
+        key = f"pool/{self.uid}/func{next(self._func_seq)}"
+        self._storage.put(key, serialization.dumps(func))
+        return key
+
+    def _submit_job(self, func: Callable, items: List[Tuple[Tuple, Dict]],
+                    chunksize: Optional[int], result: MapResult,
+                    imap_buf: Optional["_IMapBuffer"] = None) -> None:
+        if self._closed:
+            raise ValueError("Pool not running")
+        job_id = next(self._job_seq)
+        with self._jobs_lock:
+            self._jobs[job_id] = (result, imap_buf)
+        func_key = self._upload_func(func)
+        n = len(items)
+        if n == 0:
+            result._event.set()
+            return
+        if chunksize is None:
+            chunksize = max(1, math.ceil(n / (self._n_workers_target * 4)))
+        chunks = []
+        for c_idx, start in enumerate(range(0, n, chunksize)):
+            chunk_items = [(start + j, args, kwargs)
+                           for j, (args, kwargs) in
+                           enumerate(items[start:start + chunksize])]
+            chunks.append(serialization.dumps(
+                (job_id, c_idx, func_key, chunk_items)))
+        # One LPUSH submits the whole job (the paper's key optimization).
+        self._store.rpush(self._job_key, *chunks)
+
+    # -- public API -------------------------------------------------------------
+
+    def apply_async(self, func: Callable, args: Sequence[Any] = (),
+                    kwds: Optional[Dict] = None, callback=None,
+                    error_callback=None) -> AsyncResult:
+        res = AsyncResult(1, callback, error_callback)
+        self._submit_job(func, [(tuple(args), dict(kwds or {}))], 1, res)
+        return res
+
+    def apply(self, func: Callable, args: Sequence[Any] = (),
+              kwds: Optional[Dict] = None):
+        return self.apply_async(func, args, kwds).get()
+
+    def map_async(self, func: Callable, iterable: Iterable[Any],
+                  chunksize: Optional[int] = None, callback=None,
+                  error_callback=None) -> MapResult:
+        items = [((x,), {}) for x in iterable]
+        res = MapResult(len(items), callback, error_callback)
+        self._submit_job(func, items, chunksize, res)
+        return res
+
+    def map(self, func: Callable, iterable: Iterable[Any],
+            chunksize: Optional[int] = None) -> List[Any]:
+        return self.map_async(func, iterable, chunksize).get()
+
+    def starmap_async(self, func: Callable, iterable: Iterable[Sequence[Any]],
+                      chunksize: Optional[int] = None, callback=None,
+                      error_callback=None) -> MapResult:
+        items = [(tuple(x), {}) for x in iterable]
+        res = MapResult(len(items), callback, error_callback)
+        self._submit_job(func, items, chunksize, res)
+        return res
+
+    def starmap(self, func: Callable, iterable: Iterable[Sequence[Any]],
+                chunksize: Optional[int] = None) -> List[Any]:
+        return self.starmap_async(func, iterable, chunksize).get()
+
+    def imap(self, func: Callable, iterable: Iterable[Any],
+             chunksize: int = 1):
+        return self._imap(func, iterable, chunksize, ordered=True)
+
+    def imap_unordered(self, func: Callable, iterable: Iterable[Any],
+                       chunksize: int = 1):
+        return self._imap(func, iterable, chunksize, ordered=False)
+
+    def _imap(self, func, iterable, chunksize, ordered: bool):
+        items = [((x,), {}) for x in iterable]
+        res = MapResult(len(items))
+        buf = _IMapBuffer(len(items), ordered)
+        self._submit_job(func, items, chunksize, res, imap_buf=buf)
+        return buf.__iter__()
+
+    # -- lifecycle -----------------------------------------------------------------
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        with self._jobs_lock:
+            n = self._live_workers
+        if n:
+            self._store.rpush(self._job_key, *([_POISON] * n))
+
+    def terminate(self) -> None:
+        self._closed = True
+        self._store.set(self._kill_key, 1, ex=3600)
+        self._store.delete(self._job_key)
+        with self._jobs_lock:
+            n = self._live_workers
+        if n:
+            self._store.rpush(self._job_key, *([_POISON] * n))
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        if not self._closed:
+            raise ValueError("Pool is still running; call close() first")
+        self._all_exited.wait(timeout)
+        self._collector_stop = True
+        self._store.rpush(self._result_key, serialization.dumps(("stop",)))
+        self._executor.shutdown(wait=False)
+
+    def __enter__(self) -> "Pool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.terminate()
+        self.join(timeout=10)
+
+    def __del__(self):
+        try:
+            if not self._closed:
+                self.terminate()
+        except Exception:
+            pass
+
+    # -- result collection ------------------------------------------------------
+
+    def _collect(self) -> None:
+        while True:
+            got = self._store.blpop(self._result_key, timeout=0.5)
+            if got is None:
+                if self._collector_stop:
+                    return
+                continue
+            msg = serialization.loads(got[1])
+            kind = msg[0]
+            if kind == "stop":
+                return
+            if kind == "worker_exit":
+                _, wid, reason = msg
+                with self._jobs_lock:
+                    self._live_workers -= 1
+                    if self._live_workers <= 0:
+                        self._all_exited.set()
+                if reason == "recycle" and not self._closed:
+                    self._spawn_workers(1)  # maxtasksperchild replacement
+                continue
+            _, job_id, _c_idx, results, _wid = msg
+            with self._jobs_lock:
+                entry = self._jobs.get(job_id)
+            if entry is None:
+                continue
+            result, imap_buf = entry
+            for item_idx, status, value in results:
+                result._deliver(item_idx, status, value)
+                if imap_buf is not None:
+                    imap_buf.deliver(item_idx, status, value)
+            if result.ready():
+                with self._jobs_lock:
+                    self._jobs.pop(job_id, None)
+
+
+class _IMapBuffer:
+    """Feeds imap/imap_unordered generators as chunks arrive."""
+
+    def __init__(self, n: int, ordered: bool):
+        self._n = n
+        self._ordered = ordered
+        self._ready: Dict[int, Tuple[str, Any]] = {}
+        self._arrival: List[Tuple[int, str, Any]] = []
+        self._cond = threading.Condition()
+
+    def deliver(self, idx: int, status: str, value: Any) -> None:
+        with self._cond:
+            self._ready[idx] = (status, value)
+            self._arrival.append((idx, status, value))
+            self._cond.notify_all()
+
+    def __iter__(self):
+        from .executor import RemoteError
+        if self._ordered:
+            for i in range(self._n):
+                with self._cond:
+                    while i not in self._ready:
+                        self._cond.wait()
+                    status, value = self._ready[i]
+                if status != "ok":
+                    raise RemoteError(value[0], value[1])
+                yield value
+        else:
+            for i in range(self._n):
+                with self._cond:
+                    while len(self._arrival) <= i:
+                        self._cond.wait()
+                    _, status, value = self._arrival[i]
+                if status != "ok":
+                    raise RemoteError(value[0], value[1])
+                yield value

@@ -1,0 +1,159 @@
+"""Process — one serverless function per process (paper §3.1.1).
+
+"every Process corresponds to a single function": ``start()`` serializes
+target+args and invokes one function through the session's
+FunctionExecutor. ``join``/``is_alive``/``exitcode`` are driven by the
+task future; ``terminate`` sets a cooperative kill flag in the KV store
+(FaaS functions cannot be killed externally — the flag is checked by
+long-running framework loops such as Pool workers).
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+from . import session as _session
+from .executor import FunctionExecutor, RemoteError, TaskFuture
+from .reference import fresh_uid
+
+__all__ = ["Process", "current_process", "active_children", "parent_process"]
+
+_proc_counter = itertools.count(1)
+_tls = threading.local()
+
+
+class _ProcessInfo:
+    """What ``multiprocessing.current_process()`` exposes."""
+
+    def __init__(self, name: str, pid: int):
+        self.name = name
+        self.pid = pid
+        self.daemon = False
+
+    def __repr__(self):  # pragma: no cover - cosmetic
+        return f"<ProcessInfo {self.name} pid={self.pid}>"
+
+
+_MAIN = _ProcessInfo("MainProcess", 0)
+
+
+def current_process() -> _ProcessInfo:
+    return getattr(_tls, "info", _MAIN)
+
+
+def parent_process() -> Optional[_ProcessInfo]:
+    return None if current_process() is _MAIN else _MAIN
+
+
+_active: Dict[str, "Process"] = {}
+_active_lock = threading.Lock()
+
+
+def active_children():
+    with _active_lock:
+        procs = list(_active.values())
+    out = []
+    for p in procs:
+        if p.is_alive():
+            out.append(p)
+        else:
+            with _active_lock:
+                _active.pop(p._uid, None)
+    return out
+
+
+def _default_executor() -> FunctionExecutor:
+    sess = _session.get_session()
+    ex = getattr(sess, "_process_executor", None)
+    if ex is None or ex.session is not sess:
+        ex = FunctionExecutor(name="procs", **sess.executor_defaults)
+        sess._process_executor = ex
+    return ex
+
+
+def _child_main(info_name: str, pid: int, target: Optional[Callable],
+                args: Tuple, kwargs: Dict) -> int:
+    _tls.info = _ProcessInfo(info_name, pid)
+    try:
+        if target is not None:
+            target(*args, **kwargs)
+        return 0
+    finally:
+        _tls.info = _MAIN
+
+
+class Process:
+    def __init__(self, group=None, target: Optional[Callable] = None,
+                 name: Optional[str] = None, args: Sequence[Any] = (),
+                 kwargs: Optional[Dict[str, Any]] = None, *,
+                 daemon: Optional[bool] = None):
+        if group is not None:
+            raise ValueError("process group must be None")
+        self._target = target
+        self._args = tuple(args)
+        self._kwargs = dict(kwargs or {})
+        self._uid = fresh_uid("proc")
+        self._number = next(_proc_counter)
+        self.name = name or f"Process-{self._number}"
+        self.daemon = bool(daemon)
+        self.pid: Optional[int] = None
+        self._future: Optional[TaskFuture] = None
+        self._exitcode: Optional[int] = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> None:
+        if self._future is not None:
+            raise RuntimeError("cannot start a process twice")
+        self.pid = 100000 + self._number  # synthetic, stable
+        ex = _default_executor()
+        self._future = ex.call_async(
+            _child_main, (self.name, self.pid, self._target, self._args,
+                          self._kwargs))
+        with _active_lock:
+            _active[self._uid] = self
+
+    def run(self) -> None:
+        """Inline execution (matching multiprocessing's overridable run)."""
+        if self._target is not None:
+            self._target(*self._args, **self._kwargs)
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        if self._future is None:
+            raise RuntimeError("can only join a started process")
+        if not self._future.wait(timeout):
+            return  # like multiprocessing: join times out silently
+        try:
+            self._future.result(0)
+            self._exitcode = 0
+        except RemoteError:
+            self._exitcode = 1
+        with _active_lock:
+            _active.pop(self._uid, None)
+
+    def is_alive(self) -> bool:
+        return self._future is not None and not self._future.done()
+
+    @property
+    def exitcode(self) -> Optional[int]:
+        if self._exitcode is None and self._future is not None and self._future.done():
+            try:
+                self._future.result(0)
+                self._exitcode = 0
+            except RemoteError:
+                self._exitcode = 1
+        return self._exitcode
+
+    def terminate(self) -> None:
+        """Cooperative termination: set the kill flag for this process."""
+        sess = _session.get_session()
+        sess.store.set(f"{{{self._uid}}}:kill", 1, ex=3600)
+
+    kill = terminate
+
+    def __repr__(self):  # pragma: no cover - cosmetic
+        state = ("initial" if self._future is None
+                 else "running" if self.is_alive() else "stopped")
+        return f"<Process name={self.name} pid={self.pid} state={state}>"

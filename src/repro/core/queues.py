@@ -1,0 +1,229 @@
+"""Message-passing abstractions over KV lists (paper §3.2 "Message passing").
+
+Pipe  -> two KV LISTs, one per direction. ``send()`` is an RPUSH to the
+         peer's list, ``recv()`` a BLPOP on one's own list, so the list is
+         a FIFO and blocking reads come for free — the paper's exact
+         construction.
+Queue -> one LIST shared by any number of producers/consumers; bounded
+         queues add a token LIST (capacity tokens) so ``put`` blocks by
+         BLPOP-ing a slot token, keeping *all* blocking inside the store.
+JoinableQueue -> adds an outstanding-work counter (INCR/DECR) and a
+         completion notification list for ``join()``.
+
+All payloads cross the store as serialized bytes (KV latency/metrics see
+true wire sizes).
+"""
+
+from __future__ import annotations
+
+import queue as _stdqueue
+import time
+from typing import Any, Optional, Tuple
+
+from . import serialization
+from .reference import RemoteResource
+
+__all__ = ["Pipe", "Connection", "Queue", "SimpleQueue", "JoinableQueue",
+           "Empty", "Full"]
+
+Empty = _stdqueue.Empty
+Full = _stdqueue.Full
+
+
+class Connection(RemoteResource):
+    """One end of a Pipe. End ``i`` reads list ``c{i}``, writes ``c{1-i}``."""
+
+    _RESOURCE_KIND = "pipe"
+
+    def __init__(self, uid: str, end: int, duplex: bool, _adopt: bool = False,
+                 **kw):
+        super().__init__(uid=uid, _adopt=_adopt, **kw)
+        self._rebuild(end, duplex)
+
+    def _rebuild(self, end: int, duplex: bool) -> None:
+        self._end = end
+        self._duplex = duplex
+        # multiprocessing semantics: with duplex=False, conn1 is read-only
+        # and conn2 is write-only.
+        self.readable = duplex or end == 0
+        self.writable = duplex or end == 1
+
+    def _reduce_state(self) -> Tuple[Any, ...]:
+        return (self._end, self._duplex)
+
+    def _kv_keys(self):
+        return [self._refs_key, self._key("c0"), self._key("c1")]
+
+    @property
+    def _read_key(self) -> str:
+        return self._key(f"c{self._end}")
+
+    @property
+    def _write_key(self) -> str:
+        return self._key(f"c{1 - self._end}")
+
+    # -- API ----------------------------------------------------------------
+
+    def send(self, obj: Any) -> None:
+        self.send_bytes(serialization.dumps(obj))
+
+    def send_bytes(self, data: bytes) -> None:
+        if not self.writable:
+            raise OSError("connection is read-only")
+        self._store.rpush(self._write_key, data)
+
+    def recv(self) -> Any:
+        return serialization.loads(self.recv_bytes())
+
+    def recv_bytes(self, timeout: Optional[float] = None) -> bytes:
+        if not self.readable:
+            raise OSError("connection is write-only")
+        got = self._store.blpop(self._read_key, timeout)
+        if got is None:
+            raise TimeoutError("recv timed out")
+        return got[1]
+
+    def poll(self, timeout: float = 0.0) -> bool:
+        if self._store.llen(self._read_key) > 0:
+            return True
+        if timeout and timeout > 0:
+            deadline = time.monotonic() + timeout
+            while time.monotonic() < deadline:
+                if self._store.llen(self._read_key) > 0:
+                    return True
+                time.sleep(min(0.002, timeout))
+        return self._store.llen(self._read_key) > 0
+
+
+def Pipe(duplex: bool = True) -> Tuple[Connection, Connection]:
+    c0 = Connection(uid=None, end=0, duplex=duplex)
+    c1 = Connection(uid=c0.uid, end=1, duplex=duplex)
+    return c0, c1
+
+
+class Queue(RemoteResource):
+    _RESOURCE_KIND = "queue"
+
+    def __init__(self, maxsize: int = 0, _adopt: bool = False, **kw):
+        super().__init__(_adopt=_adopt, **kw)
+        self._rebuild(maxsize)
+        if not _adopt and maxsize > 0:
+            # capacity tokens: put() consumes one, get() returns one.
+            self._store.rpush(self._slots_key, *([b"s"] * maxsize))
+
+    def _rebuild(self, maxsize: int) -> None:
+        self._maxsize = maxsize
+
+    def _reduce_state(self):
+        return (self._maxsize,)
+
+    @property
+    def _items_key(self) -> str:
+        return self._key("items")
+
+    @property
+    def _slots_key(self) -> str:
+        return self._key("slots")
+
+    def _kv_keys(self):
+        return [self._refs_key, self._items_key, self._slots_key]
+
+    # -- API ----------------------------------------------------------------
+
+    def put(self, obj: Any, block: bool = True, timeout: Optional[float] = None) -> None:
+        blob = serialization.dumps(obj)
+        if self._maxsize > 0:
+            tok = self._store.blpop(self._slots_key, timeout if block else 0.0)
+            if tok is None:
+                raise Full
+        self._store.rpush(self._items_key, blob)
+
+    def put_nowait(self, obj: Any) -> None:
+        self.put(obj, block=False)
+
+    def get(self, block: bool = True, timeout: Optional[float] = None) -> Any:
+        if block:
+            got = self._store.blpop(self._items_key, timeout)
+            if got is None:
+                raise Empty
+            blob = got[1]
+        else:
+            blob = self._store.lpop(self._items_key)
+            if blob is None:
+                raise Empty
+        if self._maxsize > 0:
+            self._store.rpush(self._slots_key, b"s")
+        return serialization.loads(blob)
+
+    def get_nowait(self) -> Any:
+        return self.get(block=False)
+
+    def qsize(self) -> int:
+        return self._store.llen(self._items_key)
+
+    def empty(self) -> bool:
+        return self.qsize() == 0
+
+    def full(self) -> bool:
+        return self._maxsize > 0 and self._store.llen(self._slots_key) == 0
+
+    # local-resource lifecycle methods are no-ops remotely
+    def join_thread(self) -> None:
+        pass
+
+    def cancel_join_thread(self) -> None:
+        pass
+
+
+class SimpleQueue(Queue):
+    _RESOURCE_KIND = "squeue"
+
+    def __init__(self, **kw):
+        super().__init__(maxsize=0, **kw)
+
+
+class JoinableQueue(Queue):
+    _RESOURCE_KIND = "jqueue"
+
+    @property
+    def _unfinished_key(self) -> str:
+        return self._key("unfinished")
+
+    @property
+    def _joinev_key(self) -> str:
+        return self._key("joinev")
+
+    def _kv_keys(self):
+        return super()._kv_keys() + [self._unfinished_key, self._joinev_key]
+
+    def put(self, obj: Any, block: bool = True, timeout: Optional[float] = None) -> None:
+        self._store.incr(self._unfinished_key)
+        super().put(obj, block, timeout)
+
+    def task_done(self) -> None:
+        unfinished_key, joinev_key = self._unfinished_key, self._joinev_key
+
+        def txn(s):  # closes over plain strings only (TCP-transaction safe)
+            left = s.incrby(unfinished_key, -1)
+            if left < 0:
+                raise ValueError("task_done() called too many times")
+            if left == 0:
+                s.rpush(joinev_key, b"done")
+            return left
+        if hasattr(self._store, "shards"):
+            self._store.transaction(txn, key_hint=unfinished_key)
+        else:
+            self._store.transaction(txn)
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            v = self._store.get(self._unfinished_key)
+            if not v or int(v) <= 0:
+                return
+            wait = 0.05
+            if deadline is not None:
+                wait = min(wait, max(0.0, deadline - time.monotonic()))
+                if wait <= 0:
+                    raise TimeoutError("join timed out")
+            self._store.blpop(self._joinev_key, wait)

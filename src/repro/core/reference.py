@@ -1,0 +1,135 @@
+"""Distributed reference counting + TTL backstop for KV-backed resources.
+
+Paper §3.2: "Each proxy resource implements reference counting for garbage
+collection. The counter is consistently stored in Redis, and the resource
+is deleted from Redis when references reach zero. In addition, each
+resource incorporates a key expiration time of an hour by default" as a
+backstop against abrupt termination.
+
+``RemoteResource`` is the base class for every IPC primitive: it owns a
+unique id, the set of KV keys that materialize the resource, and the
+refcount choreography — INCR when a proxy is created *or serialized to a
+child*, DECR on ``__del__``/close, DEL of all keys at zero.
+"""
+
+from __future__ import annotations
+
+import itertools
+import os
+import sys
+import threading
+import uuid
+from typing import Any, List, Optional, Tuple
+
+from . import session as _session
+
+__all__ = ["RemoteResource", "fresh_uid"]
+
+_counter = itertools.count()
+_pid_tag = f"{os.getpid() & 0xFFFF:04x}"
+
+
+def fresh_uid(kind: str) -> str:
+    return f"{kind}-{_pid_tag}-{uuid.uuid4().hex[:12]}-{next(_counter)}"
+
+
+class RemoteResource:
+    """KV-backed resource proxy with distributed refcounting.
+
+    Subclasses define ``_kv_keys()`` -> list of keys to delete at zero and
+    may override ``_on_destroy()``. Refcount lives at ``{uid}:refs`` so a
+    sharded store keeps it on the same shard as tagged resource keys.
+    """
+
+    _RESOURCE_KIND = "res"
+
+    def __init__(self, store: Optional[Any] = None, uid: Optional[str] = None,
+                 ttl_s: Optional[float] = None, _adopt: bool = False):
+        sess = _session.get_session()
+        self._store = store if store is not None else sess.store
+        self.uid = uid or fresh_uid(self._RESOURCE_KIND)
+        self._ttl_s = sess.default_resource_ttl_s if ttl_s is None else ttl_s
+        self._closed = False
+        self._local_lock = threading.Lock()
+        if not _adopt:
+            self._store.incr(self._refs_key)
+            self._touch_ttl()
+
+    # -- key naming (hash-tagged so all keys co-locate on one shard) -------
+
+    @property
+    def _tag(self) -> str:
+        return "{" + self.uid + "}"
+
+    @property
+    def _refs_key(self) -> str:
+        return f"{self._tag}:refs"
+
+    def _key(self, suffix: str) -> str:
+        return f"{self._tag}:{suffix}"
+
+    def _kv_keys(self) -> List[str]:
+        """All keys materializing this resource (subclasses extend)."""
+        return [self._refs_key]
+
+    # -- ttl backstop --------------------------------------------------------
+
+    def _touch_ttl(self) -> None:
+        if self._ttl_s and self._ttl_s > 0:
+            for k in self._kv_keys():
+                self._store.expire(k, self._ttl_s)
+
+    # -- refcounting ---------------------------------------------------------
+
+    def _incref(self) -> int:
+        return self._store.incr(self._refs_key)
+
+    def _decref(self) -> None:
+        if sys.is_finalizing():
+            return  # TTL backstop cleans up; a TCP round-trip would hang here
+        try:
+            left = self._store.decr(self._refs_key)
+            if left <= 0:
+                self._on_destroy()
+                self._store.delete(*self._kv_keys())
+        except Exception:
+            pass  # interpreter shutdown / store gone: TTL backstop cleans up
+
+    def _on_destroy(self) -> None:  # pragma: no cover - default no-op
+        pass
+
+    def close(self) -> None:
+        with self._local_lock:
+            if self._closed:
+                return
+            self._closed = True
+        self._decref()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    # -- serialization: crossing to a child process --------------------------
+
+    def _reduce_state(self) -> Tuple[Any, ...]:
+        """Extra constructor state for subclasses (override)."""
+        return ()
+
+    def _rebuild(self, *state: Any) -> None:
+        """Restore subclass attributes on the receiving side (override)."""
+
+    def __reduce__(self):
+        # INCR now, on the parent side, so the child adopting the reference
+        # can never observe a zero count (paper's consistent counter).
+        self._incref()
+        return (_rebuild_resource,
+                (type(self), self.uid, self._ttl_s, self._reduce_state()))
+
+
+def _rebuild_resource(cls, uid: str, ttl_s: float, state: Tuple[Any, ...]):
+    obj = cls.__new__(cls)
+    RemoteResource.__init__(obj, store=None, uid=uid, ttl_s=ttl_s, _adopt=True)
+    obj._rebuild(*state)
+    return obj

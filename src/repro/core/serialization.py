@@ -1,0 +1,171 @@
+"""Closure-capable serialization (paper §3.1.1 step 2).
+
+Lithops "automatically detects, serializes and uploads" the process
+function, its arguments and referenced globals. Plain ``pickle`` only
+serializes functions *by reference* (module + qualname), which fails for
+lambdas, closures, and anything defined in ``__main__`` or interactively.
+
+``dumps``/``loads`` here extend pickle with by-value function support à la
+cloudpickle: dynamic functions are reduced to (marshaled code, referenced
+globals, defaults, closure cells) and rebuilt on the worker. Only the
+globals actually referenced by the code object (transitively, through
+nested code constants) are captured — this is the paper's "detects ...
+dependencies" step.
+"""
+
+from __future__ import annotations
+
+import importlib
+import io
+import marshal
+import pickle
+import types
+from typing import Any, Dict, Set
+
+__all__ = ["dumps", "loads", "payload_size"]
+
+
+def _is_importable(obj: Any) -> bool:
+    """True if pickle-by-reference would round-trip this function/class."""
+    module = getattr(obj, "__module__", None)
+    qualname = getattr(obj, "__qualname__", None)
+    if module is None or qualname is None or "<locals>" in qualname or "<lambda>" in qualname:
+        return False
+    try:
+        mod = importlib.import_module(module)
+    except Exception:
+        return False
+    found = mod
+    for part in qualname.split("."):
+        found = getattr(found, part, None)
+        if found is None:
+            return False
+    return found is obj
+
+
+def _referenced_globals(code: types.CodeType, globals_: Dict[str, Any],
+                        seen: Set[str]) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    names = set(code.co_names)
+    for const in code.co_consts:
+        if isinstance(const, types.CodeType):
+            out.update(_referenced_globals(const, globals_, seen))
+    for name in names:
+        if name in seen or name not in globals_:
+            continue
+        seen.add(name)
+        out[name] = globals_[name]
+    return out
+
+
+def _make_cell(value):
+    def f():
+        return value
+    return f.__closure__[0]
+
+
+def _make_empty_cell():
+    def f():
+        if False:
+            value = None  # noqa: F841 - creates the cell
+
+        def g():
+            return value  # noqa: F821
+        return g
+    return f().__closure__[0]
+
+
+def _rebuild_function(code_bytes, globals_dict, name, defaults, closure_values,
+                      kwdefaults, qualname, module):
+    code = marshal.loads(code_bytes)
+    globals_dict = dict(globals_dict)
+    globals_dict.setdefault("__builtins__", __builtins__)
+    cells = tuple(
+        _make_empty_cell() if v is _SENTINEL_EMPTY else _make_cell(v)
+        for v in closure_values
+    )
+    fn = types.FunctionType(code, globals_dict, name, defaults, cells or None)
+    fn.__kwdefaults__ = kwdefaults
+    fn.__qualname__ = qualname
+    fn.__module__ = module
+    return fn
+
+
+class _Sentinel:
+    def __repr__(self):  # pragma: no cover
+        return "<empty-cell>"
+
+
+_SENTINEL_EMPTY = _Sentinel()
+
+
+def _apply_function_state(fn, state):
+    """Post-rebuild fixup: point self-referential closure cells at fn."""
+    for i in state.get("self_cells", ()):
+        fn.__closure__[i].cell_contents = fn
+    return fn
+
+
+def _rebuild_class(name, bases, dct, qualname, module):
+    cls = type(name, bases, dct)
+    cls.__qualname__ = qualname
+    cls.__module__ = module
+    return cls
+
+
+class _Pickler(pickle.Pickler):
+    def reducer_override(self, obj):
+        if isinstance(obj, types.ModuleType):
+            # modules captured in closures/globals: pickle by import name
+            return (importlib.import_module, (obj.__name__,))
+        if isinstance(obj, type) and not _is_importable(obj):
+            # dynamic class (defined in a function / __main__): by value
+            dct = {k: v for k, v in obj.__dict__.items()
+                   if k not in ("__dict__", "__weakref__")}
+            return (_rebuild_class, (obj.__name__, obj.__bases__, dct,
+                                     obj.__qualname__, obj.__module__))
+        if isinstance(obj, types.FunctionType) and not _is_importable(obj):
+            return self._reduce_function(obj)
+        return NotImplemented
+
+    def _reduce_function(self, fn: types.FunctionType):
+        code_bytes = marshal.dumps(fn.__code__)
+        globals_dict = _referenced_globals(fn.__code__, fn.__globals__, set())
+        # Avoid self-reference loops (recursive top-level functions).
+        globals_dict = {k: v for k, v in globals_dict.items() if v is not fn}
+        globals_dict.pop("__builtins__", None)
+        closure_values = []
+        self_cells = []
+        if fn.__closure__:
+            for i, cell in enumerate(fn.__closure__):
+                try:
+                    v = cell.cell_contents
+                except ValueError:
+                    v = _SENTINEL_EMPTY
+                if v is fn:  # local recursion: patch after rebuild
+                    self_cells.append(i)
+                    v = _SENTINEL_EMPTY
+                closure_values.append(v)
+        return (
+            _rebuild_function,
+            (code_bytes, globals_dict, fn.__name__, fn.__defaults__,
+             tuple(closure_values), fn.__kwdefaults__, fn.__qualname__,
+             fn.__module__),
+            {"self_cells": self_cells},
+            None, None, _apply_function_state,
+        )
+
+
+def dumps(obj: Any, protocol: int = pickle.DEFAULT_PROTOCOL) -> bytes:
+    buf = io.BytesIO()
+    _Pickler(buf, protocol).dump(obj)
+    return buf.getvalue()
+
+
+def loads(data: bytes) -> Any:
+    return pickle.loads(data)
+
+
+def payload_size(obj: Any) -> int:
+    """Serialized size — used by the latency model and benchmarks."""
+    return len(dumps(obj))

@@ -1,0 +1,96 @@
+"""Process-global session: which disaggregated resources back the mp API.
+
+The paper's Lithops reads ``lithops_config`` (FaaS backend, storage
+backend, Redis endpoint). Our equivalent is a ``Session`` naming:
+
+  * ``store``    — the KV store backing IPC/synchronization (in-process
+                   ``KVStore``, ``ShardedKVStore``, or TCP ``KVClient``);
+  * ``storage``  — the object store backing code/data upload, results
+                   (storage-poll monitoring) and the file façade;
+  * ``executor_defaults`` — FaaS model: backend, cold/warm invocation
+                   latencies, function time limit, monitoring mode.
+
+Everything defaults to zero-latency in-process fakes so unit tests run at
+native speed; benchmarks install paper-calibrated latency models.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+from .kvstore import KVStore
+
+__all__ = ["Session", "get_session", "set_session", "reset_session", "configure"]
+
+
+@dataclass
+class InvocationModel:
+    """Paper Table 1: per-function invocation overheads (seconds)."""
+
+    cold_invoke_s: float = 0.0    # paper: 1.719
+    warm_invoke_s: float = 0.0    # paper: 0.258
+    setup_s: float = 0.0          # paper: ~0.05  (Lithops worker wrapper)
+    serialize_s: float = 0.0      # paper: 0.004
+    upload_s: float = 0.0         # paper: 0.002
+    join_poll_interval_s: float = 0.005   # storage-poll cadence (paper join ~0.63)
+    invoke_rate_per_s: float = float("inf")  # sequential async-invoke throughput
+    scale: float = 1.0            # shrink real sleeps; virtual accounting stays 1:1
+
+
+PAPER_INVOCATION = dict(
+    cold_invoke_s=1.719, warm_invoke_s=0.258, setup_s=0.05,
+    serialize_s=0.004, upload_s=0.002, join_poll_interval_s=0.1,
+    invoke_rate_per_s=300.0,
+)
+
+
+@dataclass
+class Session:
+    store: Any = field(default_factory=lambda: KVStore(name="session-kv"))
+    storage: Any = None  # lazily built ObjectStore (avoid import cycle)
+    executor_defaults: Dict[str, Any] = field(default_factory=dict)
+    invocation: InvocationModel = field(default_factory=InvocationModel)
+    default_resource_ttl_s: float = 3600.0  # paper §3.2: 1-hour backstop
+    kv_address: Optional[tuple] = None  # (host, port) for subprocess workers
+
+    def get_storage(self):
+        if self.storage is None:
+            from .storage import ObjectStore
+            self.storage = ObjectStore(name="session-store")
+        return self.storage
+
+
+_lock = threading.Lock()
+_current: Optional[Session] = None
+
+
+def get_session() -> Session:
+    global _current
+    with _lock:
+        if _current is None:
+            _current = Session()
+        return _current
+
+
+def set_session(session: Session) -> Session:
+    global _current
+    with _lock:
+        _current = session
+    return session
+
+
+def reset_session() -> Session:
+    """Fresh default session (used by tests for isolation)."""
+    return set_session(Session())
+
+
+def configure(**kwargs: Any) -> Session:
+    """Update fields of the current session in place."""
+    s = get_session()
+    for k, v in kwargs.items():
+        if not hasattr(s, k):
+            raise AttributeError(f"Session has no field {k!r}")
+        setattr(s, k, v)
+    return s

@@ -1,0 +1,206 @@
+"""Shared memory abstractions over KV lists (paper §3.2 "Shared state").
+
+Array/Value hold only basic C-typed scalars and are backed by the LIST
+type — "each element of the list will be at most sizeof(long double)" —
+so **every index access is one KV command**. This is deliberately faithful:
+it is exactly the cost model that makes the paper's in-place shared-array
+sort prohibitively slow remotely (Table 3), which our
+``benchmarks/bench_sort.py`` reproduces. Slice reads/writes map to
+LRANGE / per-index LSET inside one transaction.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Any, Iterable, List, Optional, Sequence, Union
+
+from .reference import RemoteResource
+from .synchronize import RLock
+
+__all__ = ["Value", "Array", "RawValue", "RawArray", "typecode_to_type"]
+
+# typecode -> (python cast, struct fmt) ; mirrors ctypes/array typecodes
+_TYPECODES = {
+    "b": int, "B": int, "h": int, "H": int, "i": int, "I": int,
+    "l": int, "L": int, "q": int, "Q": int,
+    "f": float, "d": float,
+    "c": bytes,
+}
+typecode_to_type = {k: v for k, v in _TYPECODES.items()}
+
+
+def _cast(typecode: str, v: Any) -> Any:
+    py = _TYPECODES[typecode]
+    v = py(v)
+    if typecode in ("f",):  # round-trip float32 precision like ctypes
+        v = struct.unpack("f", struct.pack("f", v))[0]
+    return v
+
+
+class RawArray(RemoteResource):
+    """Lock-free shared array of basic C values, one LIST element each."""
+
+    _RESOURCE_KIND = "array"
+
+    def __init__(self, typecode: str, size_or_init: Union[int, Sequence[Any]],
+                 _adopt: bool = False, **kw):
+        if typecode not in _TYPECODES:
+            raise ValueError(f"bad typecode {typecode!r}")
+        super().__init__(_adopt=_adopt, **kw)
+        if isinstance(size_or_init, int):
+            init: List[Any] = [_cast(typecode, 0) if typecode != "c" else b"\x00"
+                               for _ in range(size_or_init)]
+        else:
+            init = [_cast(typecode, v) for v in size_or_init]
+        self._rebuild(typecode, len(init))
+        if not _adopt and init:
+            self._store.rpush(self._data_key, *init)
+
+    def _rebuild(self, typecode: str, length: int) -> None:
+        self._typecode = typecode
+        self._length = length
+
+    def _reduce_state(self):
+        return (self._typecode, self._length)
+
+    @property
+    def typecode(self) -> str:
+        return self._typecode
+
+    @property
+    def _data_key(self) -> str:
+        return self._key("data")
+
+    def _kv_keys(self):
+        return [self._refs_key, self._data_key]
+
+    def __len__(self) -> int:
+        return self._length
+
+    def _index(self, i: int) -> int:
+        if i < 0:
+            i += self._length
+        if not (0 <= i < self._length):
+            raise IndexError("array index out of range")
+        return i
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            start, stop, step = i.indices(self._length)
+            if step == 1:
+                return self._store.lrange(self._data_key, start, stop - 1)
+            return [self._store.lindex(self._data_key, j)
+                    for j in range(start, stop, step)]
+        return self._store.lindex(self._data_key, self._index(i))
+
+    def __setitem__(self, i, value):
+        if isinstance(i, slice):
+            start, stop, step = i.indices(self._length)
+            idxs = list(range(start, stop, step))
+            vals = [_cast(self._typecode, v) for v in value]
+            if len(idxs) != len(vals):
+                raise ValueError("slice assignment length mismatch")
+            data_key = self._data_key
+
+            def txn(s):  # one atomic command batch (closes over plain data)
+                for j, v in zip(idxs, vals):
+                    s.lset(data_key, j, v)
+            if hasattr(self._store, "shards"):
+                self._store.transaction(txn, key_hint=data_key)
+            else:
+                self._store.transaction(txn)
+            return
+        self._store.lset(self._data_key, self._index(i),
+                         _cast(self._typecode, value))
+
+    def __iter__(self):
+        return iter(self[:])
+
+    def tolist(self) -> List[Any]:
+        return self[:]
+
+
+class Array(RawArray):
+    """RawArray + an RLock (multiprocessing's default lock=True)."""
+
+    def __init__(self, typecode: str, size_or_init, lock: bool = True,
+                 _adopt: bool = False, **kw):
+        super().__init__(typecode, size_or_init, _adopt=_adopt, **kw)
+        self._lock_obj: Optional[RLock] = RLock() if lock else None
+
+    def _reduce_state(self):
+        return (self._typecode, self._length, self._lock_obj)
+
+    def _rebuild(self, typecode: str, length: int, lock_obj=None) -> None:
+        super()._rebuild(typecode, length)
+        self._lock_obj = lock_obj
+
+    def get_lock(self) -> RLock:
+        if self._lock_obj is None:
+            raise AttributeError("array created with lock=False")
+        return self._lock_obj
+
+    def get_obj(self) -> "Array":
+        return self
+
+    def acquire(self, *a, **kw):
+        return self.get_lock().acquire(*a, **kw)
+
+    def release(self):
+        return self.get_lock().release()
+
+    def __enter__(self):
+        self.get_lock().acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.get_lock().release()
+
+
+class RawValue(RawArray):
+    """A Value is an Array of size 1 (paper §3.2)."""
+
+    _RESOURCE_KIND = "value"
+
+    def __init__(self, typecode: str, value: Any = 0, _adopt: bool = False, **kw):
+        super().__init__(typecode, [value], _adopt=_adopt, **kw)
+
+    @property
+    def value(self):
+        return self[0]
+
+    @value.setter
+    def value(self, v):
+        self[0] = v
+
+
+class Value(RawValue):
+    def __init__(self, typecode: str, value: Any = 0, lock: bool = True,
+                 _adopt: bool = False, **kw):
+        super().__init__(typecode, value, _adopt=_adopt, **kw)
+        self._lock_obj: Optional[RLock] = RLock() if lock else None
+
+    def _reduce_state(self):
+        return (self._typecode, self._length, self._lock_obj)
+
+    def _rebuild(self, typecode: str, length: int, lock_obj=None) -> None:
+        RawArray._rebuild(self, typecode, length)
+        self._lock_obj = lock_obj
+
+    def get_lock(self) -> RLock:
+        if self._lock_obj is None:
+            raise AttributeError("value created with lock=False")
+        return self._lock_obj
+
+    def acquire(self, *a, **kw):
+        return self.get_lock().acquire(*a, **kw)
+
+    def release(self):
+        return self.get_lock().release()
+
+    def __enter__(self):
+        self.get_lock().acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.get_lock().release()

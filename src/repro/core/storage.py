@@ -1,0 +1,332 @@
+"""Disaggregated object storage + transparent file façade (paper §3.3).
+
+``ObjectStore`` models S3: immutable whole-object put/get with per-op
+latency and per-connection bandwidth, but near-unbounded *aggregate*
+bandwidth across parallel clients (paper Fig. 8 measures 80 GB/s aggregate
+reads from Lambda vs 250 MiB/s for one EBS volume). Latency constants are
+injectable so benchmarks reproduce the S3-vs-Redis monitoring gap (Fig. 4)
+and the disk experiment (Fig. 8).
+
+``open()``/``path``/``listdir``/``remove`` re-implement the parts of
+Python's built-in ``open`` and ``os.path`` that the paper intercepts, so
+unmodified file-using code runs against the object store. Objects are
+immutable: append re-writes the whole object (documented paper caveat).
+"""
+
+from __future__ import annotations
+
+import io
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, List, Optional
+
+__all__ = ["ObjectStore", "KVObjectStore", "StorageLatency", "PAPER_S3_LATENCY",
+           "CloudFile", "open", "path", "listdir", "remove"]
+
+
+@dataclass
+class StorageLatency:
+    """Per-operation S3-like cost model."""
+
+    op_latency_s: float = 0.0          # request RTT (paper: ~10-30 ms)
+    per_conn_bandwidth_bps: float = float("inf")  # ~90 MB/s per connection
+    scale: float = 1.0
+
+    def charge(self, nbytes: int = 0) -> float:
+        c = self.op_latency_s + (nbytes / self.per_conn_bandwidth_bps if nbytes else 0.0)
+        if c > 0 and self.scale > 0:
+            time.sleep(c * self.scale)
+        return c
+
+
+PAPER_S3_LATENCY = dict(op_latency_s=0.015, per_conn_bandwidth_bps=90e6)
+
+
+class ObjectStore:
+    """Flat-namespace immutable object store (S3 analogue)."""
+
+    def __init__(self, latency: Optional[StorageLatency] = None,
+                 name: str = "objstore"):
+        self.name = name
+        self.latency = latency
+        self._lock = threading.Lock()
+        self._objects: Dict[str, bytes] = {}
+        self.ops: Dict[str, int] = {}
+        self.bytes_read = 0
+        self.bytes_written = 0
+
+    def _charge(self, op: str, nbytes: int = 0) -> None:
+        with self._lock:
+            self.ops[op] = self.ops.get(op, 0) + 1
+        if self.latency is not None:
+            self.latency.charge(nbytes)
+
+    def put(self, key: str, data: bytes) -> None:
+        if not isinstance(data, (bytes, bytearray, memoryview)):
+            raise TypeError("object store holds bytes")
+        data = bytes(data)
+        with self._lock:
+            self._objects[key] = data
+            self.bytes_written += len(data)
+        self._charge("PUT", len(data))
+
+    def get(self, key: str) -> bytes:
+        with self._lock:
+            if key not in self._objects:
+                missing = True
+                data = b""
+            else:
+                missing = False
+                data = self._objects[key]
+                self.bytes_read += len(data)
+        self._charge("GET", 0 if missing else len(data))
+        if missing:
+            raise KeyError(key)
+        return data
+
+    def head(self, key: str) -> Optional[int]:
+        with self._lock:
+            data = self._objects.get(key)
+        self._charge("HEAD")
+        return None if data is None else len(data)
+
+    def exists(self, key: str) -> bool:
+        return self.head(key) is not None
+
+    def delete(self, *keys: str) -> int:
+        n = 0
+        with self._lock:
+            for k in keys:
+                if k in self._objects:
+                    del self._objects[k]
+                    n += 1
+        self._charge("DELETE")
+        return n
+
+    def list(self, prefix: str = "") -> List[str]:
+        with self._lock:
+            out = sorted(k for k in self._objects if k.startswith(prefix))
+        self._charge("LIST")
+        return out
+
+    def clear(self) -> None:
+        with self._lock:
+            self._objects.clear()
+
+
+class KVObjectStore(ObjectStore):
+    """ObjectStore backed by a (possibly remote/TCP) KV store.
+
+    Used by the ``subprocess`` executor backend: a real OS-process worker
+    reaches *all* disaggregated state — IPC and storage — through one TCP
+    connection to the KV server, mirroring the paper's Lambda workers that
+    reach Redis in-VPC.
+    """
+
+    def __init__(self, kv, prefix: str = "objstore:",
+                 latency: Optional[StorageLatency] = None,
+                 name: str = "kv-objstore"):
+        super().__init__(latency=latency, name=name)
+        self._kv = kv
+        self._prefix = prefix
+
+    def _k(self, key: str) -> str:
+        return self._prefix + key
+
+    def put(self, key: str, data: bytes) -> None:
+        data = bytes(data)
+        self._kv.set(self._k(key), data)
+        with self._lock:
+            self.bytes_written += len(data)
+        self._charge("PUT", len(data))
+
+    def get(self, key: str) -> bytes:
+        data = self._kv.get(self._k(key))
+        self._charge("GET", 0 if data is None else len(data))
+        if data is None:
+            raise KeyError(key)
+        with self._lock:
+            self.bytes_read += len(data)
+        return data
+
+    def head(self, key: str) -> Optional[int]:
+        data = self._kv.get(self._k(key))
+        self._charge("HEAD")
+        return None if data is None else len(data)
+
+    def delete(self, *keys: str) -> int:
+        n = self._kv.delete(*[self._k(k) for k in keys])
+        self._charge("DELETE")
+        return n
+
+    def list(self, prefix: str = "") -> List[str]:
+        plen = len(self._prefix)
+        out = sorted(k[plen:] for k in self._kv.keys(self._k(prefix) + "*"))
+        self._charge("LIST")
+        return out
+
+    def clear(self) -> None:
+        ks = self._kv.keys(self._prefix + "*")
+        if ks:
+            self._kv.delete(*ks)
+
+
+# ---------------------------------------------------------------------------
+# Transparent file façade
+# ---------------------------------------------------------------------------
+
+
+def _store(store: Optional[ObjectStore]) -> ObjectStore:
+    if store is not None:
+        return store
+    from . import session as _session
+    return _session.get_session().get_storage()
+
+
+class CloudFile:
+    """File-like object over an ObjectStore key.
+
+    Reads materialize the object once; writes buffer locally and PUT the
+    whole object on close/flush — the §3.3 immutability caveat.
+    """
+
+    def __init__(self, key: str, mode: str = "r", store: Optional[ObjectStore] = None,
+                 encoding: str = "utf-8"):
+        self.key = key
+        self.mode = mode
+        self.encoding = encoding
+        self._st = _store(store)
+        self._binary = "b" in mode
+        self._writable = any(m in mode for m in "wax+")
+        self._readable = "r" in mode or "+" in mode
+        self._closed = False
+        if "r" in mode:
+            raw = self._st.get(key)  # raises KeyError like FileNotFoundError
+            self._buf = io.BytesIO(raw)
+            if "+" not in mode:
+                self._writable = False
+        elif "a" in mode:
+            try:
+                raw = self._st.get(key)
+            except KeyError:
+                raw = b""
+            self._buf = io.BytesIO(raw)
+            self._buf.seek(0, io.SEEK_END)
+        else:  # w / x
+            if "x" in mode and self._st.exists(key):
+                raise FileExistsError(key)
+            self._buf = io.BytesIO()
+
+    # -- io protocol -------------------------------------------------------
+
+    def read(self, size: int = -1):
+        data = self._buf.read(size)
+        return data if self._binary else data.decode(self.encoding)
+
+    def readline(self):
+        data = self._buf.readline()
+        return data if self._binary else data.decode(self.encoding)
+
+    def __iter__(self):
+        while True:
+            line = self.readline()
+            if not line:
+                return
+            yield line
+
+    def write(self, data) -> int:
+        if not self._writable:
+            raise io.UnsupportedOperation("not writable")
+        if not self._binary and isinstance(data, str):
+            data = data.encode(self.encoding)
+        return self._buf.write(data)
+
+    def seek(self, pos: int, whence: int = 0) -> int:
+        return self._buf.seek(pos, whence)
+
+    def tell(self) -> int:
+        return self._buf.tell()
+
+    def flush(self) -> None:
+        if self._writable and not self._closed:
+            self._st.put(self.key, self._buf.getvalue())
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self.flush()
+        self._closed = True
+
+    def __enter__(self) -> "CloudFile":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def open(key: str, mode: str = "r", store: Optional[ObjectStore] = None,
+         encoding: str = "utf-8") -> CloudFile:  # noqa: A001 - mirrors builtin
+    try:
+        return CloudFile(key, mode, store, encoding)
+    except KeyError as e:
+        raise FileNotFoundError(str(e)) from None
+
+
+def listdir(prefix: str = "", store: Optional[ObjectStore] = None) -> List[str]:
+    pref = prefix.rstrip("/") + "/" if prefix else ""
+    seen, out = set(), []
+    for k in _store(store).list(pref):
+        rest = k[len(pref):]
+        name = rest.split("/", 1)[0]
+        if name not in seen:
+            seen.add(name)
+            out.append(name)
+    return out
+
+
+def remove(key: str, store: Optional[ObjectStore] = None) -> None:
+    if not _store(store).delete(key):
+        raise FileNotFoundError(key)
+
+
+class _PathModule:
+    """Replica of the ``os.path`` subset the paper intercepts."""
+
+    @staticmethod
+    def exists(key: str, store: Optional[ObjectStore] = None) -> bool:
+        st = _store(store)
+        if st.exists(key):
+            return True
+        return bool(st.list(key.rstrip("/") + "/"))
+
+    @staticmethod
+    def getsize(key: str, store: Optional[ObjectStore] = None) -> int:
+        size = _store(store).head(key)
+        if size is None:
+            raise FileNotFoundError(key)
+        return size
+
+    @staticmethod
+    def isfile(key: str, store: Optional[ObjectStore] = None) -> bool:
+        return _store(store).exists(key)
+
+    @staticmethod
+    def isdir(key: str, store: Optional[ObjectStore] = None) -> bool:
+        return bool(_store(store).list(key.rstrip("/") + "/"))
+
+    @staticmethod
+    def join(*parts: str) -> str:
+        return "/".join(p.strip("/") for p in parts if p)
+
+    @staticmethod
+    def basename(key: str) -> str:
+        return key.rstrip("/").rsplit("/", 1)[-1]
+
+    @staticmethod
+    def dirname(key: str) -> str:
+        head, _, _ = key.rstrip("/").rpartition("/")
+        return head
+
+
+path = _PathModule()

@@ -1,0 +1,366 @@
+"""Synchronization primitives over KV lists (paper §3.2 "Synchronization").
+
+Semaphore -> a LIST holding N tokens; ``acquire`` = BLPOP (blocks when no
+             token, i.e. N holders inside), ``release`` = LPUSH. A Lock is
+             the N=1 case. Exactly the paper's construction.
+Condition -> each waiter registers a fresh *notification list* in the
+             condition's waiter registry and BLPOPs it; ``notify`` pops
+             waiter ids and pushes a token to each notification list.
+Event / Barrier -> specific cases of Condition (paper), implemented on the
+             same notification-list machinery plus a flag / arrival
+             counter + generation number.
+RLock     -> Lock + owner key + recursion counter (owner identity =
+             process uid + thread id), checked transactionally.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Optional, Tuple
+
+from .reference import RemoteResource, fresh_uid
+
+__all__ = ["Lock", "RLock", "Semaphore", "BoundedSemaphore", "Condition",
+           "Event", "Barrier", "BrokenBarrierError"]
+
+
+class BrokenBarrierError(RuntimeError):
+    pass
+
+
+def _caller_identity() -> str:
+    from .process import current_process
+    return f"{current_process().pid}:{threading.get_ident()}"
+
+
+class Semaphore(RemoteResource):
+    _RESOURCE_KIND = "sem"
+
+    def __init__(self, value: int = 1, _adopt: bool = False, **kw):
+        if value < 0:
+            raise ValueError("semaphore initial value must be >= 0")
+        super().__init__(_adopt=_adopt, **kw)
+        self._rebuild(value)
+        if not _adopt and value > 0:
+            self._store.rpush(self._tokens_key, *([b"t"] * value))
+
+    def _rebuild(self, value: int) -> None:
+        self._initial = value
+
+    def _reduce_state(self):
+        return (self._initial,)
+
+    @property
+    def _tokens_key(self) -> str:
+        return self._key("tokens")
+
+    def _kv_keys(self):
+        return [self._refs_key, self._tokens_key]
+
+    def acquire(self, block: bool = True, timeout: Optional[float] = None) -> bool:
+        got = self._store.blpop(self._tokens_key, timeout if block else 0.0)
+        return got is not None
+
+    def release(self) -> None:
+        self._store.lpush(self._tokens_key, b"t")
+
+    def get_value(self) -> int:
+        return self._store.llen(self._tokens_key)
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+
+
+class BoundedSemaphore(Semaphore):
+    _RESOURCE_KIND = "bsem"
+
+    def release(self) -> None:
+        tokens_key, initial = self._tokens_key, self._initial
+
+        def txn(s):
+            if s.llen(tokens_key) >= initial:
+                raise ValueError("semaphore released too many times")
+            s.lpush(tokens_key, b"t")
+        self._txn(txn, tokens_key)
+
+    def _txn(self, fn, key_hint):
+        if hasattr(self._store, "shards"):
+            return self._store.transaction(fn, key_hint=key_hint)
+        return self._store.transaction(fn)
+
+
+class Lock(Semaphore):
+    _RESOURCE_KIND = "lock"
+
+    def __init__(self, _adopt: bool = False, **kw):
+        super().__init__(value=1, _adopt=_adopt, **kw)
+
+    def _rebuild(self, value: int = 1) -> None:
+        super()._rebuild(1)
+
+    def locked(self) -> bool:
+        return self.get_value() == 0
+
+
+class RLock(Lock):
+    _RESOURCE_KIND = "rlock"
+
+    @property
+    def _owner_key(self) -> str:
+        return self._key("owner")
+
+    @property
+    def _count_key(self) -> str:
+        return self._key("count")
+
+    def _kv_keys(self):
+        return super()._kv_keys() + [self._owner_key, self._count_key]
+
+    def acquire(self, block: bool = True, timeout: Optional[float] = None) -> bool:
+        me = _caller_identity()
+        if self._store.get(self._owner_key) == me:
+            self._store.incr(self._count_key)
+            return True
+        if not super().acquire(block, timeout):
+            return False
+        self._store.set(self._owner_key, me)
+        self._store.set(self._count_key, 1)
+        return True
+
+    def release(self) -> None:
+        me = _caller_identity()
+        if self._store.get(self._owner_key) != me:
+            raise RuntimeError("cannot release un-acquired RLock")
+        left = self._store.decr(self._count_key)
+        if left <= 0:
+            self._store.delete(self._owner_key, self._count_key)
+            super().release()
+
+
+class Condition(RemoteResource):
+    _RESOURCE_KIND = "cond"
+
+    def __init__(self, lock: Optional[Lock] = None, _adopt: bool = False, **kw):
+        super().__init__(_adopt=_adopt, **kw)
+        self._rebuild(lock if lock is not None else Lock(store=kw.get("store")))
+
+    def _rebuild(self, lock: Lock) -> None:
+        self._lock = lock
+
+    def _reduce_state(self):
+        return (self._lock,)
+
+    @property
+    def _waiters_key(self) -> str:
+        return self._key("waiters")
+
+    def _kv_keys(self):
+        return [self._refs_key, self._waiters_key]
+
+    # lock delegation
+    def acquire(self, *a, **kw):
+        return self._lock.acquire(*a, **kw)
+
+    def release(self):
+        return self._lock.release()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        # Register a fresh notification list, drop the lock, block on it
+        # (paper: "the process registers a new list to the notification
+        # list set and blocks to it with a BLPOP command").
+        notify_key = self._key("n-" + fresh_uid("w"))
+        self._store.rpush(self._waiters_key, notify_key.encode())
+        self.release()
+        try:
+            got = self._store.blpop(notify_key, timeout)
+            return got is not None
+        finally:
+            self._store.delete(notify_key)
+            self.acquire()
+
+    def wait_for(self, predicate, timeout: Optional[float] = None) -> bool:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        result = predicate()
+        while not result:
+            remaining = None
+            if deadline is not None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return predicate()
+            self.wait(remaining)
+            result = predicate()
+        return result
+
+    def notify(self, n: int = 1) -> None:
+        for _ in range(n):
+            got = self._store.lpop(self._waiters_key)
+            if got is None:
+                return
+            self._store.rpush(got.decode(), b"n")
+
+    def notify_all(self) -> None:
+        self.notify(1 << 30)
+
+
+class Event(RemoteResource):
+    _RESOURCE_KIND = "event"
+
+    @property
+    def _flag_key(self) -> str:
+        return self._key("flag")
+
+    @property
+    def _waiters_key(self) -> str:
+        return self._key("waiters")
+
+    def _kv_keys(self):
+        return [self._refs_key, self._flag_key, self._waiters_key]
+
+    def is_set(self) -> bool:
+        return bool(self._store.get(self._flag_key))
+
+    def set(self) -> None:
+        flag_key, waiters_key = self._flag_key, self._waiters_key
+
+        def txn(s):  # closes over plain strings only (TCP-transaction safe)
+            s.set(flag_key, 1)
+            while True:
+                w = s.lpop(waiters_key)
+                if w is None:
+                    return
+                s.rpush(w.decode(), b"n")
+        self._txn(txn)
+
+    def clear(self) -> None:
+        self._store.delete(self._flag_key)
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        if self.is_set():
+            return True
+        notify_key = self._key("n-" + fresh_uid("w"))
+        # Register, then re-check the flag to close the set() race.
+        self._store.rpush(self._waiters_key, notify_key.encode())
+        if self.is_set():
+            self._store.delete(notify_key)
+            return True
+        try:
+            got = self._store.blpop(notify_key, timeout)
+            return got is not None or self.is_set()
+        finally:
+            self._store.delete(notify_key)
+
+    def _txn(self, fn):
+        if hasattr(self._store, "shards"):
+            return self._store.transaction(fn, key_hint=self._flag_key)
+        return self._store.transaction(fn)
+
+
+class Barrier(RemoteResource):
+    _RESOURCE_KIND = "barrier"
+
+    def __init__(self, parties: int, action=None, timeout: Optional[float] = None,
+                 _adopt: bool = False, **kw):
+        super().__init__(_adopt=_adopt, **kw)
+        self._rebuild(parties, timeout)
+        self._action = action  # runs in the releasing process only
+
+    def _rebuild(self, parties: int, timeout: Optional[float]) -> None:
+        self.parties = parties
+        self._timeout = timeout
+        self._action = None
+
+    def _reduce_state(self):
+        return (self.parties, self._timeout)
+
+    @property
+    def _count_key(self):
+        return self._key("count")
+
+    @property
+    def _broken_key(self):
+        return self._key("broken")
+
+    @property
+    def _waiters_key(self):
+        return self._key("waiters")
+
+    def _kv_keys(self):
+        return [self._refs_key, self._count_key, self._broken_key,
+                self._waiters_key]
+
+    @property
+    def n_waiting(self) -> int:
+        v = self._store.get(self._count_key)
+        return int(v) if v else 0
+
+    @property
+    def broken(self) -> bool:
+        return bool(self._store.get(self._broken_key))
+
+    def abort(self) -> None:
+        broken_key, waiters_key = self._broken_key, self._waiters_key
+
+        def txn(s):
+            s.set(broken_key, 1)
+            while True:
+                w = s.lpop(waiters_key)
+                if w is None:
+                    return
+                s.rpush(w.decode(), b"abort")
+        self._txn(txn)
+
+    def reset(self) -> None:
+        self.abort()
+        self._store.delete(self._broken_key, self._count_key)
+
+    def wait(self, timeout: Optional[float] = None) -> int:
+        if self.broken:
+            raise BrokenBarrierError
+        timeout = timeout if timeout is not None else self._timeout
+        notify_key = self._key("n-" + fresh_uid("w"))
+        count_key, waiters_key, parties = self._count_key, self._waiters_key, self.parties
+
+        def txn(s):  # closes over plain strings/ints only
+            arrived = s.incr(count_key)
+            if arrived >= parties:
+                # Releasing party: wake everyone, reset the generation.
+                s.delete(count_key)
+                while True:
+                    w = s.lpop(waiters_key)
+                    if w is None:
+                        break
+                    s.rpush(w.decode(), b"go")
+            else:
+                s.rpush(waiters_key, notify_key.encode())
+            return arrived
+
+        arrived = self._txn(txn)
+        if arrived >= parties:
+            if self._action is not None:
+                self._action()
+            return self.parties - 1
+        got = self._store.blpop(notify_key, timeout)
+        self._store.delete(notify_key)
+        if got is None:
+            self.abort()
+            raise BrokenBarrierError("barrier wait timed out")
+        if got[1] == b"abort" or self.broken:
+            raise BrokenBarrierError
+        return arrived - 1
+
+    def _txn(self, fn):
+        if hasattr(self._store, "shards"):
+            return self._store.transaction(fn, key_hint=self._count_key)
+        return self._store.transaction(fn)

@@ -1,0 +1,55 @@
+"""Entry point for the ``subprocess`` executor backend.
+
+This is the full-fidelity mode: the worker is a real OS process (like a
+Lambda container) whose only channel to the rest of the system is a TCP
+connection to the KV server (``REPRO_KV_ADDR``). It replicates the generic
+Lithops worker: download payload from (KV-backed) storage, deserialize,
+execute under the error wrapper, deliver the result via queue-notify or
+storage-poll.
+
+Usage (spawned by FunctionExecutor):
+    python -m repro.core.worker_main <task_id> <monitoring> <result_list_key>
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+
+def main() -> int:
+    task_id, monitoring, result_list = sys.argv[1], sys.argv[2], sys.argv[3]
+    host, port = os.environ["REPRO_KV_ADDR"].rsplit(":", 1)
+
+    from . import serialization
+    from . import session as S
+    from .kvserver import KVClient
+    from .storage import KVObjectStore
+
+    client = KVClient((host, int(port)))
+    sess = S.Session(store=client, storage=KVObjectStore(client))
+    S.set_session(sess)
+
+    payload = sess.storage.get(f"jobs/{task_id}/payload")
+    t0 = time.perf_counter()
+    try:
+        func, args, kwargs = serialization.loads(payload)
+        status, body = "ok", func(*args, **kwargs)
+    except BaseException as exc:
+        status, body = "error", (f"{type(exc).__name__}: {exc}",
+                                 traceback.format_exc())
+    run_s = time.perf_counter() - t0
+
+    blob = serialization.dumps((task_id, status, body, {"run_s": run_s}))
+    if monitoring == "storage":
+        sess.storage.put(f"jobs/{task_id}/result", blob)
+    else:
+        client.rpush(result_list, blob)
+    client.close()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,1 @@
+from .pipeline import SyntheticLM, DataPipeline, shard_registry  # noqa: F401

@@ -1,0 +1,109 @@
+"""Pallas flash-decode: one query token vs a (padded) KV cache.
+
+TPU adaptation of flash-decoding: the kv-block axis is the sequential
+inner grid dimension; the online-softmax state for all G grouped query
+heads rides in VMEM scratch across kv blocks (GPU flash-decode's
+split-k + cross-SM reduction becomes grid-sequential accumulation —
+there is no shared-memory combine step to port). Per-sequence ``lengths``
+mask out unwritten cache tail blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # pragma: no cover
+    from jax.experimental.pallas import tpu as pltpu
+    _HAVE_PLTPU = True
+except Exception:  # pragma: no cover
+    pltpu = None
+    _HAVE_PLTPU = False
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_K = 512
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, sm_scale, block_k):
+    j = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    # skip whole blocks beyond the valid length
+    @pl.when(j * block_k < length)
+    def compute():
+        q = q_ref[0].astype(jnp.float32) * sm_scale        # [G, D]
+        k = k_ref[0].astype(jnp.float32)                   # [bk, D]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G, bk]
+        cols = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(cols < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None] + jax.lax.dot(p, v))
+        m_scr[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def emit():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                 lengths: jax.Array, *, sm_scale: Optional[float] = None,
+                 block_k: int = DEFAULT_BLOCK_K,
+                 interpret: bool = False) -> jax.Array:
+    """q: [B, H, D]; caches [B, S, K, D]; lengths [B] -> [B, H, D]."""
+    B, H, D = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+    block_k = min(block_k, S)
+    pad = (-S) % block_k
+    if pad:  # masked by lengths
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S += pad
+    nk = S // block_k
+
+    qf = q.reshape(B, K, G, D).reshape(B * K, G, D)
+    kf = jnp.moveaxis(k_cache, 2, 1).reshape(B * K, S, D)
+    vf = jnp.moveaxis(v_cache, 2, 1).reshape(B * K, S, D)
+    lens = lengths.astype(jnp.int32)
+
+    kernel = functools.partial(_decode_kernel, sm_scale=scale,
+                               block_k=block_k)
+    scratch = ([pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G, D), jnp.float32)]
+               if _HAVE_PLTPU else None)
+    o = pl.pallas_call(
+        kernel,
+        grid=(B * K, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j, K=K: (i // K,)),
+            pl.BlockSpec((1, G, D), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, block_k, D), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda i, j: (i, 0, 0)),
+        scratch_shapes=scratch,
+        out_shape=jax.ShapeDtypeStruct((B * K, G, D), q.dtype),
+        interpret=interpret,
+    )(lens, qf, kf, vf)
+    return o.reshape(B, H, D)

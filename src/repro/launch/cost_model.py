@@ -1,0 +1,300 @@
+"""Scan-aware analytical cost model over jaxprs.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body **once**,
+so anything under ``lax.scan`` (layers, microbatches, recurrences) is
+undercounted by its trip count (verified empirically — see
+EXPERIMENTS.md §Dry-run "methodology"). This walker traverses the traced
+jaxpr instead, multiplying scan bodies by their static lengths, giving
+trip-count-exact FLOPs and a *fused-ideal* HBM byte estimate.
+
+FLOP conventions:
+  * dot_general / ragged_dot: 2·M·N·K (×batch dims)
+  * elementwise / reduce: 1 flop per element (transcendentals included —
+    documented simplification)
+  * everything else: 0
+
+Byte model ("fused-ideal" — what a perfectly fused TPU program must still
+move through HBM):
+  * dot operands + outputs, EXCEPT (a) operands that are the enclosing
+    scan's per-iteration xs/carry (already counted at the scan level) and
+    (b) outputs whose per-device size fits VMEM (attention score tiles,
+    online-softmax state — a flash kernel never spills them);
+  * gather/scatter/dynamic-slice/-update outputs (+ operand for scatter)
+  * scan: per-iteration xs slices + ys slices ×length; carry read/write
+    ×length only when the per-device carry exceeds the VMEM budget
+    (a layer-scan's [B,S,D] activations stream through HBM; an SSM
+    recurrence's [heads, P, N] state stays resident)
+  * top-level invars (params/opt/batch read once) + outvars (state write)
+  * elementwise / broadcast / transpose / reshape / convert: free (fused)
+
+Both terms are computed on the *global* (pre-SPMD) program; divide by
+chip count for per-chip values. Sharding-induced redundancy (e.g. remat
+of replicated compute) is therefore not included — the extrapolated
+cost-analysis cross-check in dryrun.py covers that direction.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.extend import core
+
+__all__ = ["estimate_cost", "CostEstimate"]
+
+#: per-device bytes below which an intermediate is assumed VMEM-resident
+VMEM_BUDGET = 8 * 1024 * 1024
+
+
+@dataclass
+class CostEstimate:
+    flops: float = 0.0
+    bytes: float = 0.0
+    by_prim: Dict[str, float] = field(default_factory=dict)
+    bytes_by_prim: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, prim: str, flops: float, nbytes: float) -> None:
+        self.flops += flops
+        self.bytes += nbytes
+        self.by_prim[prim] = self.by_prim.get(prim, 0.0) + flops
+        self.bytes_by_prim[prim] = self.bytes_by_prim.get(prim, 0.0) + nbytes
+
+
+def _nbytes(aval) -> float:
+    try:
+        return float(np.prod(aval.shape) * aval.dtype.itemsize)
+    except Exception:
+        return 0.0
+
+
+def _size(aval) -> float:
+    try:
+        return float(np.prod(aval.shape))
+    except Exception:
+        return 0.0
+
+
+_ELEMENTWISE = {
+    "add", "sub", "mul", "div", "max", "min", "pow", "exp", "log", "tanh",
+    "logistic", "rsqrt", "sqrt", "neg", "sign", "abs", "floor", "ceil",
+    "round", "erf", "exp2", "log1p", "expm1", "integer_pow", "select_n",
+    "ge", "gt", "le", "lt", "eq", "ne", "and", "or", "not", "xor", "rem",
+    "clamp", "nextafter", "is_finite", "square", "cos", "sin", "atan2",
+    "cumsum", "cumprod", "cummax",
+}
+
+_REDUCE = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+           "reduce_and", "reduce_or", "argmax", "argmin", "reduce_precision",
+           "logsumexp"}
+
+_GATHERISH = {"gather", "dynamic_slice", "take", "take_along_axis"}
+_SCATTERISH = {"scatter", "scatter-add", "scatter_add", "dynamic_update_slice",
+               "scatter_apply"}
+
+_FREE = {"broadcast_in_dim", "reshape", "transpose", "convert_element_type",
+         "squeeze", "expand_dims", "slice", "rev", "iota", "copy",
+         "stop_gradient", "device_put", "sharding_constraint", "pad",
+         "concatenate", "split"}
+
+_CALL_PARAM_NAMES = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr")
+
+
+def _dot_flops(eqn) -> float:
+    (lhs, rhs) = eqn.invars[:2]
+    dn = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dn
+    lshape = lhs.aval.shape
+    m = np.prod([d for i, d in enumerate(lshape)
+                 if i not in lc and i not in lb], initial=1.0)
+    k = np.prod([lshape[i] for i in lc], initial=1.0)
+    b = np.prod([lshape[i] for i in lb], initial=1.0)
+    rshape = rhs.aval.shape
+    n = np.prod([d for i, d in enumerate(rshape)
+                 if i not in rc and i not in rb], initial=1.0)
+    return 2.0 * b * m * n * k
+
+
+def _ragged_dot_flops(eqn) -> float:
+    lhs, rhs = eqn.invars[0].aval.shape, eqn.invars[1].aval.shape
+    # lhs [m, k], rhs [g, k, n] -> [m, n]; every row multiplies one group
+    m, k = lhs[-2], lhs[-1]
+    n = rhs[-1]
+    return 2.0 * m * k * n
+
+
+def _walk(jaxpr, est: CostEstimate, mult: float, n_dev: int,
+          loop_vars: frozenset) -> None:
+    """loop_vars: body invars fed by the enclosing scan's xs/carry — their
+    bytes are already accounted at the scan level."""
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+
+        if name == "scan":
+            length = float(eqn.params.get("length", 1))
+            num_consts = eqn.params.get("num_consts", 0)
+            num_carry = eqn.params.get("num_carry", 0)
+            inner = eqn.params["jaxpr"].jaxpr
+            body_loop_vars = frozenset(inner.invars[num_consts:])
+            _walk(inner, est, mult * length, n_dev, body_loop_vars)
+            # xs per-iteration slices + ys writes. An xs whose only body
+            # use is as the in-place target of dynamic_update_slice is a
+            # pass-through buffer (donated KV cache): no full read.
+            uses = {}
+            for beqn in inner.eqns:
+                for iv in beqn.invars:
+                    if not isinstance(iv, core.Literal):
+                        uses.setdefault(iv, []).append(beqn)
+            xs_bytes = 0.0
+            for bv in inner.invars[num_consts + num_carry:]:
+                bv_uses = uses.get(bv, [])
+                inplace_only = bool(bv_uses) and all(
+                    u.primitive.name == "dynamic_update_slice"
+                    and u.invars and u.invars[0] is bv for u in bv_uses)
+                if not inplace_only:
+                    xs_bytes += _nbytes(bv.aval)
+            xs_bytes *= length  # body invars are per-iteration slices
+            carry_bytes = sum(_nbytes(v.aval)
+                              for v in eqn.invars[num_consts:num_consts + num_carry])
+            # ys produced in place (dynamic_update_slice of a body input,
+            # e.g. a donated KV cache) cost only their update slice
+            ys_bytes = 0.0
+            def_eqn = {}
+            for beqn in inner.eqns:
+                for ov in beqn.outvars:
+                    def_eqn[ov] = beqn
+            for ov in inner.outvars[num_carry:]:
+                src = def_eqn.get(ov, None) if hasattr(ov, "aval") else None
+                if (src is not None and
+                        src.primitive.name == "dynamic_update_slice" and
+                        src.invars and not isinstance(src.invars[0],
+                                                      core.Literal)
+                        and src.invars[0] in body_loop_vars):
+                    ys_bytes += _nbytes(src.invars[1].aval)  # update slice
+                else:
+                    ys_bytes += _nbytes(ov.aval)             # per-iter full
+            ys_bytes *= length
+            traffic = xs_bytes + ys_bytes
+            # carry streams HBM per iteration only if it exceeds VMEM
+            if carry_bytes / n_dev > VMEM_BUDGET:
+                traffic += 2 * length * carry_bytes
+            else:
+                traffic += 2 * carry_bytes
+            est.add("scan_traffic", 0.0, mult * traffic)
+            continue
+
+        if name == "shard_map":
+            # body shapes are PER-SHARD: global cost = body x mesh size
+            mesh = eqn.params.get("mesh")
+            size = getattr(mesh, "size", None) or int(
+                np.prod(getattr(mesh, "axis_sizes", (1,))))
+            inner = eqn.params["jaxpr"]
+            inner = inner.jaxpr if hasattr(inner, "jaxpr") else inner
+            _walk(inner, est, mult * size, n_dev, frozenset())
+            continue
+
+        if name == "while":
+            # we never emit unbounded whiles in model code; count body once
+            _walk(eqn.params["body_jaxpr"].jaxpr, est, mult, n_dev,
+                  frozenset())
+            est.by_prim["UNSCALED_WHILE"] = est.by_prim.get(
+                "UNSCALED_WHILE", 0) + 1
+            continue
+
+        if name == "cond":
+            branches = eqn.params["branches"]
+            sub = CostEstimate()
+            for br in branches:
+                b_est = CostEstimate()
+                _walk(br.jaxpr, b_est, mult, n_dev, frozenset())
+                if b_est.flops > sub.flops:
+                    sub = b_est
+            est.flops += sub.flops
+            est.bytes += sub.bytes
+            continue
+
+        handled_call = False
+        for pname in _CALL_PARAM_NAMES:
+            if pname in eqn.params:
+                inner = eqn.params[pname]
+                inner = inner.jaxpr if hasattr(inner, "jaxpr") else inner
+                # map loop-var status through the call boundary
+                sub_loop = frozenset(
+                    bv for bv, ov in zip(inner.invars, eqn.invars)
+                    if not isinstance(ov, core.Literal) and ov in loop_vars)
+                _walk(inner, est, mult, n_dev, sub_loop)
+                handled_call = True
+                break
+        if handled_call:
+            continue
+
+        # propagate loop-var (already-counted) status through layout ops so
+        # e.g. a convert(xs_slice) fed to a dot is not double-counted
+        if name in _FREE or name == "convert_element_type":
+            if (eqn.invars and all(
+                    isinstance(v, core.Literal) or v in loop_vars
+                    for v in eqn.invars if hasattr(v, "aval"))):
+                loop_vars = loop_vars | frozenset(
+                    ov for ov in eqn.outvars)
+            continue
+
+        out_bytes = sum(_nbytes(v.aval) for v in eqn.outvars)
+        in_bytes = sum(_nbytes(v.aval) for v in eqn.invars
+                       if hasattr(v, "aval") and
+                       (isinstance(v, core.Literal) or v not in loop_vars))
+        out_size = sum(_size(v.aval) for v in eqn.outvars)
+        # small outputs stay VMEM-resident in a fused kernel
+        out_traffic = out_bytes if out_bytes / n_dev > VMEM_BUDGET else 0.0
+
+        if name == "dot_general":
+            est.add("dot_general", mult * _dot_flops(eqn),
+                    mult * (in_bytes + out_traffic))
+        elif name == "ragged_dot":
+            est.add("ragged_dot", mult * _ragged_dot_flops(eqn),
+                    mult * (in_bytes + out_traffic))
+        elif name in ("conv_general_dilated",):
+            # depthwise convs in mamba are tiny; approximate via im2col dot
+            est.add(name, mult * 2 * out_size *
+                    np.prod(eqn.invars[1].aval.shape[:2]),
+                    mult * (in_bytes + out_traffic))
+        elif name in _ELEMENTWISE:
+            est.add("elementwise", mult * out_size, 0.0)
+        elif name in _REDUCE:
+            est.add("reduce", mult * sum(_size(v.aval) for v in eqn.invars
+                                         if hasattr(v, "aval")), 0.0)
+        elif name in _GATHERISH:
+            # gathered/sliced data streams from HBM regardless of size
+            # (e.g. KV blocks re-read per query block in flash attention);
+            # downstream consumers of the fetched block don't re-pay
+            est.add("gather", 0.0, mult * out_bytes)
+            loop_vars = loop_vars | frozenset(eqn.outvars)
+        elif name == "dynamic_update_slice":
+            # in-place update model: only the slice (+indices) moves; the
+            # big operand was counted where it was produced/read
+            est.add("scatter", 0.0, mult * in_bytes)
+        elif name in _SCATTERISH:
+            est.add("scatter", 0.0, mult * (in_bytes + out_traffic))
+        elif name in ("sort", "top_k"):
+            n = max(out_size, 1.0)
+            est.add(name, mult * n * math.log2(max(n, 2)),
+                    mult * (in_bytes + out_traffic))
+        elif name in _FREE:
+            pass
+        else:
+            est.add(f"other:{name}", mult * out_size, 0.0)
+
+
+def estimate_cost(fn, *abstract_args, n_devices: int = 256) -> CostEstimate:
+    """Trace ``fn`` with abstract args and walk the jaxpr.
+
+    Traffic is attributed at the op that moves it (dots read weights,
+    scans stream xs/ys, gathers/scatters move slices); there is no
+    separate top-level io term, so purely-elementwise passes over state
+    (the optimizer update's read-modify-write) are a documented
+    undercount, bounded by ~3x the parameter+state bytes."""
+    closed = jax.make_jaxpr(fn)(*abstract_args)
+    est = CostEstimate()
+    _walk(closed.jaxpr, est, 1.0, max(n_devices, 1), frozenset())
+    return est

@@ -1,0 +1,179 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run inputs).
+
+``build_cell(arch, shape, rules)`` returns the function to lower and the
+abstract, sharding-annotated arguments for one (architecture x input
+shape) cell — no device memory is ever allocated.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..models import SHAPES, LONG_CONTEXT_ARCHS, build_model
+from ..models.config import ModelConfig, ShapeConfig
+from ..optim import AdamWConfig, adamw_init
+from ..serve import make_serve_step
+from ..sharding import (MeshRules, batch_sharding, cache_sharding,
+                        opt_state_sharding, param_sharding)
+from ..sharding.ctx import activation_sharding
+from ..train import make_train_step
+
+#: per-arch dry-run knobs: microbatches for train_4k, optimizer state dtype
+CELL_TUNING: Dict[str, Dict[str, Any]] = {
+    "llama3-8b": dict(microbatches=16),
+    "qwen1.5-4b": dict(microbatches=16),
+    "qwen1.5-0.5b": dict(microbatches=4),
+    "minicpm-2b": dict(microbatches=8),
+    "phi3.5-moe-42b-a6.6b": dict(microbatches=8),
+    "kimi-k2-1t-a32b": dict(microbatches=16, state_dtype="int8"),
+    "rwkv6-7b": dict(microbatches=8),
+    "internvl2-2b": dict(microbatches=8),
+    "zamba2-2.7b": dict(microbatches=8),
+    "seamless-m4t-medium": dict(microbatches=4),
+}
+
+#: decoder-side encoder-memory length for enc-dec decode cells
+ENCDEC_ENC_LEN = 4096
+
+
+def cell_is_skipped(arch: str, shape_name: str) -> Optional[str]:
+    if shape_name == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        return ("full-attention arch: long_500k needs sub-quadratic "
+                "attention (see DESIGN.md §4)")
+    return None
+
+
+def _abstract(tree, shardings):
+    def one(leaf, sh):
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=sh)
+    return jax.tree.map(one, tree, shardings)
+
+
+def make_opt_config(cfg: ModelConfig, tuning: Dict[str, Any]) -> AdamWConfig:
+    return AdamWConfig(lr=3e-4, state_dtype=tuning.get("state_dtype", "float32"))
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_prefix_embeddings, cfg.d_model), cfg.act_dtype())
+    if cfg.family == "encdec":
+        batch["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                               cfg.act_dtype())
+    return batch
+
+
+def _with_activation_ctx(fn, rules: MeshRules):
+    """Trace-time activation-constraint policy (see sharding/ctx.py)."""
+    def wrapped(*args):
+        with activation_sharding(rules):
+            return fn(*args)
+    return wrapped
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    cfg: ModelConfig
+    kind: str                       # train | prefill | decode
+    fn: Callable                    # the function to jit
+    args: Tuple[Any, ...]           # abstract, sharded arguments
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def build_cell(arch: str, shape_name: str, rules: MeshRules,
+               overrides: Optional[Dict[str, Any]] = None) -> Cell:
+    """overrides: microbatches, state_dtype, num_layers (analysis),
+    scan_layers (analysis), unroll_microbatches (analysis)."""
+    shape = SHAPES[shape_name]
+    cfg = configs.get_config(arch)
+    tuning = dict(CELL_TUNING.get(arch, {}))
+    tuning.update(overrides or {})
+    if tuning.get("num_layers"):
+        repl = dict(num_layers=int(tuning["num_layers"]))
+        if cfg.is_encdec:
+            repl["encoder_layers"] = int(tuning["num_layers"])
+        cfg = cfg.replace(**repl)
+    if "scan_layers" in tuning:
+        cfg = cfg.replace(scan_layers=bool(tuning["scan_layers"]))
+    for knob in ("moe_impl", "decode_cache_update", "remat",
+                 "capacity_factor"):
+        if knob in tuning:
+            cfg = cfg.replace(**{knob: tuning[knob]})
+    model = build_model(cfg)
+
+    params_shape = model.abstract_params()
+    p_shard = param_sharding(rules, params_shape)
+
+    if shape.kind == "train":
+        opt_cfg = make_opt_config(cfg, tuning)
+        state_shape = jax.eval_shape(
+            lambda p: {"params": p, "opt": adamw_init(opt_cfg, p)},
+            params_shape)
+        s_shard = {"params": p_shard,
+                   "opt": opt_state_sharding(rules, state_shape["opt"])}
+        b_shape = batch_struct(cfg, shape)
+        b_shard = batch_sharding(rules, b_shape)
+        step = make_train_step(
+            model, opt_cfg,
+            num_microbatches=tuning.get("microbatches", 1),
+            unroll_microbatches=bool(tuning.get("unroll_microbatches")))
+        args = (_abstract(state_shape, s_shard), _abstract(b_shape, b_shard))
+        return Cell(arch, shape, cfg, "train",
+                    _with_activation_ctx(step, rules), args,
+                    in_shardings=(s_shard, b_shard),
+                    out_shardings=(s_shard, None),
+                    donate_argnums=(0,))
+
+    if shape.kind == "prefill":
+        b_shape = dict(batch_struct(cfg, shape))
+        b_shape.pop("labels")
+        b_shard = batch_sharding(rules, b_shape)
+        max_len = shape.seq_len + (cfg.num_prefix_embeddings or 0)
+        if cfg.family == "encdec":
+            max_len = shape.seq_len
+
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, max_len)
+
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, max_len,
+                                     enc_len=shape.seq_len
+                                     if cfg.family == "encdec" else 0))
+        c_shard = cache_sharding(rules, cache_shape)
+        args = (_abstract(params_shape, p_shard), _abstract(b_shape, b_shard))
+        return Cell(arch, shape, cfg, "prefill",
+                    _with_activation_ctx(prefill_fn, rules), args,
+                    in_shardings=(p_shard, b_shard),
+                    out_shardings=(None, c_shard))
+
+    # decode: one new token against a cache of seq_len
+    B = shape.global_batch
+    enc_len = ENCDEC_ENC_LEN if cfg.family == "encdec" else 0
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(B, shape.seq_len, enc_len=enc_len))
+    c_shard = cache_sharding(rules, cache_shape)
+    tok_shape = jax.ShapeDtypeStruct((B,), jnp.int32)
+    tok_shard = batch_sharding(rules, tok_shape)
+    serve = make_serve_step(model)
+    args = (_abstract(params_shape, p_shard),
+            _abstract(cache_shape, c_shard),
+            _abstract(tok_shape, tok_shard))
+    return Cell(arch, shape, cfg, "decode",
+                _with_activation_ctx(serve, rules), args,
+                in_shardings=(p_shard, c_shard, tok_shard),
+                out_shardings=(tok_shard, None, c_shard),
+                donate_argnums=(1,))

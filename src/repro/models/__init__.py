@@ -1,0 +1,2 @@
+from .config import ModelConfig, ShapeConfig, SHAPES, LONG_CONTEXT_ARCHS  # noqa: F401
+from .model import Model, build_model, cross_entropy  # noqa: F401

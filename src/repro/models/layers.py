@@ -1,0 +1,315 @@
+"""Shared transformer layers: norms, rotary, GQA attention, SwiGLU MLP.
+
+Pure-pytree style: ``init_*`` builds a dict of arrays, ``apply_*`` consumes
+it. Sharding is annotated at the training-step level (sharding/rules.py
+maps parameter paths to PartitionSpecs), so layers stay mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _norm_init(D: int, dtype) -> jax.Array:
+    return jnp.ones((D,), dtype)
+
+
+def dense_init(key, fan_in: int, fan_out: int, dtype,
+               scale: Optional[float] = None) -> jax.Array:
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, (fan_in, fan_out), jnp.float32) * std).astype(dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    """RMSNorm with a hand-written VJP.
+
+    Autodiff through the f32 variance path materializes f32 [B,S,D]
+    cotangents, and XLA then places the per-layer tensor-parallel
+    all-reduces on the f32 merged gradient — 2x the bytes (measured at
+    llama3/train_4k; EXPERIMENTS.md §Perf cell 2). The custom backward
+    does all math in f32 internally but hands back cotangents in the
+    activation dtype, keeping every cross-device gradient tensor narrow.
+
+        y  = x * r * w,          r = rsqrt(mean(x^2) + eps)
+        dx = r*(w*g) - x * r^3 * mean(x*w*g)
+        dw = sum_batch(x * r * g)
+    """
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    scale = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * scale * w.astype(x.dtype)
+
+
+def _rms_fwd(x, w, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps)                     # [..., 1] f32
+    y = x * r.astype(x.dtype) * w.astype(x.dtype)
+    return y, (x, w, r)
+
+
+def _rms_bwd(eps, res, g):
+    x, w, r = res
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    xwg = jnp.mean(xf * wf * gf, axis=-1, keepdims=True)   # [..., 1]
+    dx = r * wf * gf - xf * (r ** 3) * xwg
+    dw = jnp.sum((xf * r * gf).reshape(-1, x.shape[-1]), axis=0)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+rms_norm.defvjp(_rms_fwd, _rms_bwd)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [..., S, H, D]; positions: [..., S].
+    Angles are computed in f32; cos/sin are cast to the activation dtype
+    before the rotation so large tensors (and their cotangents) stay
+    narrow — see rms_norm."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, d_model: Optional[int] = None) -> Params:
+    D = d_model or cfg.d_model
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    dt = cfg.p_dtype()
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], D, H * hd, dt),
+        "wk": dense_init(ks[1], D, K * hd, dt),
+        "wv": dense_init(ks[2], D, K * hd, dt),
+        "wo": dense_init(ks[3], H * hd, D, dt, scale=(H * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((K * hd,), dt)
+        p["bv"] = jnp.zeros((K * hd,), dt)
+    return p
+
+
+def _project_qkv(p: Params, cfg: ModelConfig, x: jax.Array,
+                 positions: jax.Array, use_rope: bool = True):
+    B, S, _ = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,df->bsf", x, p["wq"])
+    k = jnp.einsum("bsd,df->bsf", x, p["wk"])
+    v = jnp.einsum("bsd,df->bsf", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def apply_attention(p: Params, cfg: ModelConfig, x: jax.Array,
+                    positions: jax.Array, causal: bool = True) -> jax.Array:
+    """Full-sequence (training / prefill) self-attention."""
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    o = ops.attention(q, k, v, causal=causal)
+    B, S = x.shape[:2]
+    return jnp.einsum("bsf,fd->bsd", o.reshape(B, S, -1), p["wo"])
+
+
+def apply_attention_prefill(p: Params, cfg: ModelConfig, x: jax.Array,
+                            positions: jax.Array,
+                            ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Prefill: returns output and the (k, v) cache for this layer."""
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    o = ops.attention(q, k, v, causal=True)
+    B, S = x.shape[:2]
+    out = jnp.einsum("bsf,fd->bsd", o.reshape(B, S, -1), p["wo"])
+    return out, (k, v)
+
+
+def apply_attention_decode(p: Params, cfg: ModelConfig, x: jax.Array,
+                           cache_k: jax.Array, cache_v: jax.Array,
+                           lengths: jax.Array,
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode. x: [B, 1, D]; cache_[kv]: [B, S_max, K, hd];
+    lengths: [B] valid entries (the new token is written at ``lengths``).
+
+    Cache-update policy (cfg.decode_cache_update):
+      * "onehot"  — per-row masked add; handles ragged lengths but reads
+        AND rewrites the full cache every step (paper-era baseline).
+      * "dynamic" — dynamic_update_slice at the (uniform) position; with
+        the cache donated, XLA updates one slot in place. Requires
+        synchronized decode (all rows share a position), which the
+        serving engine guarantees.
+    """
+    B = x.shape[0]
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q, k, v = _project_qkv(p, cfg, x, lengths[:, None], use_rope=True)
+    if cfg.decode_cache_update == "dynamic":
+        pos = lengths[0]
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+    else:
+        idx = lengths  # [B]
+        oh = jax.nn.one_hot(idx, cache_k.shape[1], dtype=cache_k.dtype)
+        cache_k = cache_k + oh[:, :, None, None] * k.astype(cache_k.dtype)
+        cache_v = cache_v + oh[:, :, None, None] * v.astype(cache_v.dtype)
+    o = ops.decode_attention(q[:, 0], cache_k, cache_v, lengths + 1)
+    out = jnp.einsum("bf,fd->bd", o.reshape(B, -1), p["wo"])[:, None, :]
+    return out, cache_k, cache_v
+
+
+def init_cross_attention(key, cfg: ModelConfig) -> Params:
+    return init_attention(key, cfg)
+
+
+def apply_cross_attention(p: Params, cfg: ModelConfig, x: jax.Array,
+                          enc_kv: Tuple[jax.Array, jax.Array]) -> jax.Array:
+    """Decoder cross-attention. enc_kv = (k, v) precomputed from encoder
+    output: [B, T, K, hd]."""
+    B, S, _ = x.shape
+    H, hd = cfg.num_heads, cfg.hd
+    q = jnp.einsum("bsd,df->bsf", x, p["wq"]).reshape(B, S, H, hd)
+    k, v = enc_kv
+    o = ops.attention(q, k, v, causal=False)
+    return jnp.einsum("bsf,fd->bsd", o.reshape(B, S, -1), p["wo"])
+
+
+def encoder_kv(p: Params, cfg: ModelConfig, enc_out: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    B, T, _ = enc_out.shape
+    K, hd = cfg.num_kv_heads, cfg.hd
+    k = jnp.einsum("btd,df->btf", enc_out, p["wk"]).reshape(B, T, K, hd)
+    v = jnp.einsum("btd,df->btf", enc_out, p["wv"]).reshape(B, T, K, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.p_dtype()
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(ks[0], D, F, dt),
+        "wg": dense_init(ks[1], D, F, dt),
+        "wo": dense_init(ks[2], F, D, dt, scale=F ** -0.5),
+    }
+
+
+def apply_mlp(p: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wg"]))
+    h = h * jnp.einsum("bsd,df->bsf", x, p["wi"])
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, cfg: ModelConfig) -> Params:
+    dt = cfg.p_dtype()
+    ks = jax.random.split(key, 2)
+    p = {"tok": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                   jnp.float32) * 0.02).astype(dt)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(ks[1], cfg.d_model, cfg.vocab_size, dt)
+    return p
+
+
+def embed(p: Params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(p["tok"], tokens, axis=0).astype(cfg.act_dtype())
+    return x * cfg.emb_scale
+
+
+def unembed(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["tok"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["head"].astype(x.dtype))
+    if cfg.logit_soft_cap is not None:
+        logits = cfg.logit_soft_cap * jnp.tanh(logits / cfg.logit_soft_cap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Dense transformer block
+# ---------------------------------------------------------------------------
+
+
+def init_dense_block(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "attn": init_attention(ks[0], cfg),
+        "mlp": init_mlp(ks[1], cfg),
+        "norm1": _norm_init(cfg.d_model, cfg.p_dtype()),
+        "norm2": _norm_init(cfg.d_model, cfg.p_dtype()),
+    }
+
+
+def apply_dense_block(p: Params, cfg: ModelConfig, x: jax.Array,
+                      positions: jax.Array) -> jax.Array:
+    # Sub-block boundaries are pinned too: left free, XLA's partitioner
+    # shards the f32 rms intermediates over the tensor axis and pays
+    # full-width f32 all-reduces in the backward (measured: +2x collective
+    # bytes at llama3/train_4k — EXPERIMENTS.md §Perf cell 2 iter 3).
+    from ..sharding.ctx import constrain
+    r = cfg.residual_scale
+    h = constrain(rms_norm(x, p["norm1"], cfg.norm_eps), "batch", "seq", None)
+    x = x + r * constrain(apply_attention(p["attn"], cfg, h, positions),
+                          "batch", "seq", None)
+    h = constrain(rms_norm(x, p["norm2"], cfg.norm_eps), "batch", "seq", None)
+    x = x + r * constrain(apply_mlp(p["mlp"], h), "batch", "seq", None)
+    return x
+
+
+def apply_dense_block_prefill(p, cfg, x, positions):
+    r = cfg.residual_scale
+    a, kv = apply_attention_prefill(p["attn"], cfg,
+                                    rms_norm(x, p["norm1"], cfg.norm_eps),
+                                    positions)
+    x = x + r * a
+    x = x + r * apply_mlp(p["mlp"], rms_norm(x, p["norm2"], cfg.norm_eps))
+    return x, kv
+
+
+def apply_dense_block_decode(p, cfg, x, cache_k, cache_v, lengths):
+    r = cfg.residual_scale
+    a, ck, cv = apply_attention_decode(
+        p["attn"], cfg, rms_norm(x, p["norm1"], cfg.norm_eps),
+        cache_k, cache_v, lengths)
+    x = x + r * a
+    x = x + r * apply_mlp(p["mlp"], rms_norm(x, p["norm2"], cfg.norm_eps))
+    return x, ck, cv

@@ -1,0 +1,76 @@
+"""Mamba2 (SSD) block — the zamba2-2.7b backbone.
+
+Structure per Mamba-2: fused in_proj producing (z, x, B, C, dt), causal
+depthwise conv over x, SSD recurrence with scalar-per-head decay
+(ops.mamba2_scan — chunked Pallas kernel on TPU), gated SiLU output,
+out_proj. State for decode = (conv tail, SSM state h).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .config import ModelConfig
+from .layers import dense_init, rms_norm
+
+Params = Dict[str, Any]
+
+
+def init_mamba_block(key, cfg: ModelConfig) -> Params:
+    D, din, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = cfg.ssm_heads
+    dt = cfg.p_dtype()
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * din + 2 * N + H, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, din),
+                                     jnp.float32) * 0.2).astype(dt),
+        "a_log": jnp.zeros((H,), jnp.float32),        # a = -exp(a_log)
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), dt),
+        "out_proj": dense_init(ks[2], din, D, dt, scale=din ** -0.5),
+        "norm": jnp.ones((D,), dt),
+        "gate_norm": jnp.ones((din,), dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 tail: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x: [B, S, C]; w: [W, C]; tail: [B, W-1, C]."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)           # [B, S+W-1, C]
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :].astype(x.dtype)
+              for i in range(W))
+    new_tail = xp[:, -(W - 1):, :]
+    return jax.nn.silu(out), new_tail
+
+
+def apply_mamba_block(p: Params, cfg: ModelConfig, x: jax.Array,
+                      state: Optional[Dict[str, jax.Array]] = None
+                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """state: {"conv": [B, W-1, din], "ssm": [B, H, P, N]} or None."""
+    st = state or {}
+    B, S, D = x.shape
+    din, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,de->bse", h, p["in_proj"])
+    z, xs, b, c, dt_raw = jnp.split(
+        zxbcdt, [din, 2 * din, 2 * din + N, 2 * din + 2 * N], axis=-1)
+    xs, conv_tail = _causal_conv(xs, p["conv_w"], st.get("conv"))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"][None, None, :])          # [B, S, H]
+    a = -jnp.exp(p["a_log"])                                   # [H]
+    xh = xs.reshape(B, S, H, P)
+    y, ssm = ops.mamba2_scan(xh, dt, a, b, c, st.get("ssm"))
+    y = y + xh * p["d_skip"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(B, S, din)
+    y = rms_norm(y, p["gate_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return x + out, {"conv": conv_tail, "ssm": ssm}

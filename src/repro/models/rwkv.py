@@ -1,0 +1,122 @@
+"""RWKV6 "Finch" block (rwkv6-7b): attention-free time mixing with
+data-dependent decay + channel mixing.
+
+Faithful to the RWKV6 structure (token shift, LoRA-produced decay,
+per-head WKV state, grouped output norm); the low-rank sizes follow the
+released 7B (lora 64 for decay/gate). The WKV recurrence itself lives in
+kernels (ops.rwkv6_scan) with a chunked Pallas kernel on TPU.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .config import ModelConfig
+from .layers import dense_init, rms_norm
+
+Params = Dict[str, Any]
+
+_LORA = 64
+
+
+def init_rwkv_block(key, cfg: ModelConfig) -> Params:
+    D = cfg.d_model
+    H, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    F = cfg.d_ff
+    dt = cfg.p_dtype()
+    ks = jax.random.split(key, 12)
+    return {
+        "tm": {  # time mixing
+            "mu": jnp.full((5, D), 0.5, dt),     # shift-mix for r,k,v,g,w
+            "wr": dense_init(ks[0], D, D, dt),
+            "wk": dense_init(ks[1], D, D, dt),
+            "wv": dense_init(ks[2], D, D, dt),
+            "wg": dense_init(ks[3], D, D, dt),
+            "w0": jnp.full((D,), -0.6, dt),      # base decay bias
+            "wa": dense_init(ks[4], D, _LORA, dt),
+            "wb": dense_init(ks[5], _LORA, D, dt),
+            "u": (jax.random.normal(ks[6], (H, hd), jnp.float32) * 0.02).astype(dt),
+            "wo": dense_init(ks[7], D, D, dt),
+            "ln_x": jnp.ones((D,), dt),          # per-head group norm scale
+        },
+        "cm": {  # channel mixing
+            "mu": jnp.full((2, D), 0.5, dt),
+            "wk": dense_init(ks[8], D, F, dt),
+            "wv": dense_init(ks[9], F, D, dt),
+            "wr": dense_init(ks[10], D, D, dt),
+        },
+        "norm1": jnp.ones((D,), dt),
+        "norm2": jnp.ones((D,), dt),
+    }
+
+
+def _token_shift(x: jax.Array, last: Optional[jax.Array] = None) -> jax.Array:
+    """x[t-1] per position; `last` is the carried value for step mode."""
+    if x.shape[1] == 1 and last is not None:
+        return last[:, None, :]
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _time_mix(p: Params, cfg: ModelConfig, x: jax.Array,
+              state: Optional[jax.Array], x_last: Optional[jax.Array]
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, D = x.shape
+    H, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    xs = _token_shift(x, x_last)
+    mu = p["mu"].astype(x.dtype)
+
+    def mix(i):
+        return x * mu[i] + xs * (1 - mu[i])
+
+    r = jnp.einsum("bsd,de->bse", mix(0), p["wr"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", mix(1), p["wk"]).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,de->bse", mix(2), p["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", mix(3), p["wg"]))
+    # data-dependent decay in (0, 1): w = exp(-exp(w0 + lora(x)))
+    wlog = (p["w0"].astype(jnp.float32) +
+            jnp.einsum("bsl,ld->bsd",
+                       jnp.tanh(jnp.einsum("bsd,dl->bsl", mix(4), p["wa"])),
+                       p["wb"]).astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(wlog)).reshape(B, S, H, hd).astype(x.dtype)
+
+    o, new_state = ops.rwkv6_scan(r, k, v, w, p["u"], state)
+    o = o.reshape(B, S, H, hd)
+    # grouped rms-norm over each head, then project
+    of = o.astype(jnp.float32)
+    var = jnp.mean(of * of, axis=-1, keepdims=True)
+    o = (of * jax.lax.rsqrt(var + 64e-5)).reshape(B, S, D).astype(x.dtype)
+    o = o * p["ln_x"].astype(x.dtype) * g
+    out = jnp.einsum("bsd,de->bse", o, p["wo"])
+    return out, new_state, x[:, -1, :]
+
+
+def _channel_mix(p: Params, x: jax.Array, x_last: Optional[jax.Array]
+                 ) -> Tuple[jax.Array, jax.Array]:
+    xs = _token_shift(x, x_last)
+    mu = p["mu"].astype(x.dtype)
+    xk = x * mu[0] + xs * (1 - mu[0])
+    xr = x * mu[1] + xs * (1 - mu[1])
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"])
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"]))
+    return r * kv, x[:, -1, :]
+
+
+def apply_rwkv_block(p: Params, cfg: ModelConfig, x: jax.Array,
+                     state: Optional[Dict[str, jax.Array]] = None
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """state: {"wkv": [B,H,hd,hd], "tm_x": [B,D], "cm_x": [B,D]} or None."""
+    st = state or {}
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    o, wkv, tm_x = _time_mix(p["tm"], cfg, h, st.get("wkv"), st.get("tm_x"))
+    x = x + o
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    o, cm_x = _channel_mix(p["cm"], h, st.get("cm_x"))
+    x = x + o
+    return x, {"wkv": wkv, "tm_x": tm_x, "cm_x": cm_x}

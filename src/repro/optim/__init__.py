@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, OptState  # noqa: F401
+from .schedules import wsd_schedule, cosine_schedule, linear_warmup  # noqa: F401
+from .quant import quantize_int8, dequantize_int8  # noqa: F401

@@ -1,0 +1,105 @@
+"""AdamW with selectable state precision (fp32 / bf16 / int8).
+
+Hand-rolled (no optax dependency) so state dtype, sharding and update
+fusion stay fully under our control — the int8 path is what makes the
+kimi-k2 single-pod memory budget even approachable (see EXPERIMENTS.md
+§Roofline). Update math follows Loshchilov & Hutter with bias correction.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .quant import QTensor, dequantize_int8, quantize_int8
+
+OptState = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: Optional[float] = 1.0
+    state_dtype: str = "float32"     # float32 | bfloat16 | int8
+
+    def lr_at(self, step) -> jax.Array:
+        if callable(self.lr):
+            return jnp.asarray(self.lr(step), jnp.float32)
+        return jnp.asarray(self.lr, jnp.float32)
+
+
+def _encode(x: jax.Array, dtype: str):
+    if dtype == "int8":
+        return quantize_int8(x)
+    return x.astype(jnp.dtype(dtype))
+
+
+def _decode(x, dtype: str) -> jax.Array:
+    if dtype == "int8":
+        return dequantize_int8(x)
+    return x.astype(jnp.float32)
+
+
+def adamw_init(cfg: AdamWConfig, params) -> OptState:
+    zeros = jax.tree.map(
+        lambda p: _encode(jnp.zeros(p.shape, jnp.float32), cfg.state_dtype),
+        params, is_leaf=lambda x: hasattr(x, "shape"))
+    zeros2 = jax.tree.map(
+        lambda p: _encode(jnp.zeros(p.shape, jnp.float32), cfg.state_dtype),
+        params, is_leaf=lambda x: hasattr(x, "shape"))
+    return {"m": zeros, "v": zeros2, "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: OptState, params
+                 ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    gnorm = global_norm(grads)
+    if cfg.grad_clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gnorm, 1e-9))
+    else:
+        scale = jnp.ones((), jnp.float32)
+    lr = cfg.lr_at(state["count"])
+    bc1 = 1.0 - cfg.b1 ** cf
+    bc2 = 1.0 - cfg.b2 ** cf
+
+    is_q = lambda x: isinstance(x, QTensor)  # noqa: E731
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        mf = _decode(m, cfg.state_dtype)
+        vf = _decode(v, cfg.state_dtype)
+        mf = cfg.b1 * mf + (1 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1 - cfg.b2) * g * g
+        mhat = mf / bc1
+        vhat = vf / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (step + cfg.weight_decay * pf)
+        return (pf.astype(p.dtype), _encode(mf, cfg.state_dtype),
+                _encode(vf, cfg.state_dtype))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"], is_leaf=is_q)
+    flat_v = jax.tree.leaves(state["v"], is_leaf=is_q)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "count": count}, metrics

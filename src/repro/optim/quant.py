@@ -1,0 +1,58 @@
+"""Int8 row-quantization for optimizer state (and gradient compression).
+
+8-bit optimizer state is a distributed-optimization necessity at kimi-k2
+scale: Adam's fp32 (m, v) alone is 8 TB for 1T params. The int8 payload
+keeps the **original tensor shape** with one f32 scale per last-axis row,
+so both payload and scales inherit the parameter's sharding unchanged —
+a flat [blocks, 256] layout is 4x denser in scales but its reshape back
+to (61, 384, ...) expert dims is not evenly shardable and forces XLA SPMD
+to fully rematerialize the f32 state per device (measured: 8.4 TB/device
+for kimi-k2; see EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class QTensor:
+    """int8 payload (original shape) + per-row f32 scale."""
+
+    def __init__(self, q: jax.Array, scale: jax.Array, shape: Tuple[int, ...]):
+        self.q = q          # int8, original shape
+        self.scale = scale  # f32, shape[:-1]
+        self.shape = tuple(shape)
+
+    def tree_flatten_with_keys(self):
+        ga = jax.tree_util.GetAttrKey
+        return ((ga("q"), self.q), (ga("scale"), self.scale)), self.shape
+
+    def tree_flatten(self):
+        return (self.q, self.scale), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, shape, children):
+        return cls(children[0], children[1], shape)
+
+    @property
+    def dtype(self):  # for sharding-rule traversal
+        return jnp.int8
+
+    def __repr__(self):  # pragma: no cover
+        return f"QTensor(shape={self.shape})"
+
+
+def quantize_int8(x: jax.Array) -> QTensor:
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = absmax / 127.0
+    q = jnp.clip(jnp.round(xf / jnp.maximum(scale, 1e-12)), -127, 127)
+    return QTensor(q.astype(jnp.int8), scale[..., 0], x.shape)
+
+
+def dequantize_int8(t: QTensor) -> jax.Array:
+    return t.q.astype(jnp.float32) * t.scale[..., None]

@@ -1,0 +1,32 @@
+"""Learning-rate schedules. WSD (warmup-stable-decay) is a paper-listed
+feature of minicpm-2b [arXiv:2404.06395]: linear warmup, long stable
+plateau, short exponential/linear decay tail."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, base_lr: float, warmup_steps: int):
+    s = jnp.asarray(step, jnp.float32)
+    return base_lr * jnp.minimum(1.0, (s + 1) / max(1, warmup_steps))
+
+
+def cosine_schedule(step, base_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1) / max(1, warmup_steps))
+    prog = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps), 0, 1)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * cos
+
+
+def wsd_schedule(step, base_lr: float, warmup_steps: int, stable_steps: int,
+                 decay_steps: int, final_frac: float = 0.01):
+    """Warmup-Stable-Decay: the minicpm schedule."""
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1) / max(1, warmup_steps))
+    decay_start = warmup_steps + stable_steps
+    prog = jnp.clip((s - decay_start) / max(1, decay_steps), 0.0, 1.0)
+    decay = final_frac ** prog  # exponential anneal to final_frac
+    return base_lr * warm * jnp.where(s < decay_start, 1.0, decay)

@@ -1,0 +1,5 @@
+from .jobs import JobRunner, JobFailedError  # noqa: F401
+from .checkpoint import CheckpointManager  # noqa: F401
+from .elastic import ElasticPolicy, ElasticController  # noqa: F401
+from .compression import (topk_compress, topk_decompress,  # noqa: F401
+                          int8_compress, int8_decompress, ErrorFeedback)

@@ -1,0 +1,85 @@
+"""Gradient compression for KV-store-mediated data parallelism.
+
+The paper's Redis saturates around 256 concurrent workers (§6.3) because
+a single-threaded store caps aggregate bandwidth. When gradients move
+through the disaggregated memory layer (our "serverless DP" examples),
+the fix on the *sender* side is compression:
+
+  * top-k sparsification with **error feedback** (residual accumulation,
+    Stich et al.) — ~1-2% of values at k=1%, convergence-safe;
+  * int8 row quantization (shared with the 8-bit optimizer state).
+
+Both are pure-jnp and measured end-to-end in
+benchmarks/bench_compression.py.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..optim.quant import QTensor, dequantize_int8, quantize_int8
+
+__all__ = ["topk_compress", "topk_decompress", "int8_compress",
+           "int8_decompress", "ErrorFeedback"]
+
+
+def topk_compress(x: jax.Array, ratio: float = 0.01
+                  ) -> Tuple[jax.Array, jax.Array, Tuple[int, ...]]:
+    """Keep the k = ratio*n largest-magnitude entries.
+    Returns (indices int32, values, shape)."""
+    flat = x.reshape(-1)
+    k = max(1, int(flat.size * ratio))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return idx.astype(jnp.int32), flat[idx], x.shape
+
+
+def topk_decompress(idx: jax.Array, vals: jax.Array,
+                    shape: Tuple[int, ...]) -> jax.Array:
+    n = int(np.prod(shape))
+    return jnp.zeros((n,), vals.dtype).at[idx].set(vals).reshape(shape)
+
+
+def int8_compress(x: jax.Array) -> QTensor:
+    return quantize_int8(x)
+
+
+def int8_decompress(t: QTensor) -> jax.Array:
+    return dequantize_int8(t)
+
+
+class ErrorFeedback:
+    """Residual-accumulating wrapper: compress(g + residual), keep what
+    was dropped for the next round. Makes top-k unbiased over time."""
+
+    def __init__(self, ratio: float = 0.01):
+        self.ratio = ratio
+        self._residual: Dict[str, jax.Array] = {}
+
+    def compress_tree(self, grads):
+        out = {}
+        flat = jax.tree_util.tree_flatten_with_path(grads)[0]
+        for path, g in flat:
+            key = jax.tree_util.keystr(path)
+            r = self._residual.get(key)
+            corrected = g + r if r is not None else g
+            idx, vals, shape = topk_compress(corrected, self.ratio)
+            self._residual[key] = corrected - topk_decompress(idx, vals, shape)
+            out[key] = (np.asarray(idx), np.asarray(vals), shape)
+        return out
+
+    @staticmethod
+    def decompress_tree(payload, like):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path, g in flat:
+            idx, vals, shape = payload[jax.tree_util.keystr(path)]
+            leaves.append(topk_decompress(jnp.asarray(idx), jnp.asarray(vals),
+                                          shape))
+        return jax.tree_util.tree_unflatten(treedef, [l for l in leaves])
+
+    def compressed_bytes(self, payload) -> int:
+        return sum(i.nbytes + v.nbytes for i, v, _ in payload.values())

@@ -1,0 +1,85 @@
+"""Elastic scaling policy (the paper's core value proposition, §5.3/§6.4:
+serverless resources attach instantly and without prior provisioning).
+
+``ElasticController`` watches the job queue depth and worker idleness in
+the KV store and resizes a Pool/JobRunner between [min_workers,
+max_workers]. Scale-up is aggressive (the whole point of FaaS — §6.4
+shows a VM "vertically scaled" with +48 lambdas mid-run); scale-down is
+conservative (hysteresis) to avoid thrashing warm containers.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Optional
+
+__all__ = ["ElasticPolicy", "ElasticController"]
+
+
+@dataclass
+class ElasticPolicy:
+    min_workers: int = 1
+    max_workers: int = 64
+    backlog_per_worker: float = 2.0    # scale up above this queue depth
+    idle_cycles_before_shrink: int = 5
+    step: int = 4                      # workers added per decision
+
+    def decide(self, n_workers: int, backlog: int, idle_cycles: int) -> int:
+        if backlog > self.backlog_per_worker * max(n_workers, 1):
+            want = min(self.max_workers,
+                       max(n_workers + self.step,
+                           int(backlog / self.backlog_per_worker)))
+            return want
+        if backlog == 0 and idle_cycles >= self.idle_cycles_before_shrink:
+            return max(self.min_workers, n_workers - self.step)
+        return n_workers
+
+
+class ElasticController:
+    """Background controller bound to a Pool or JobRunner (anything with
+    ``resize(n)``, ``n_workers`` and a ``{tag}:jobs`` KV list)."""
+
+    def __init__(self, target: Any, policy: Optional[ElasticPolicy] = None,
+                 interval: float = 0.2):
+        self.target = target
+        self.policy = policy or ElasticPolicy()
+        self.interval = interval
+        self._stop = threading.Event()
+        self._idle_cycles = 0
+        self.decisions: list = []
+        self._thread: Optional[threading.Thread] = None
+
+    def _backlog(self) -> int:
+        store = self.target.session.store
+        tag = getattr(self.target, "_tag")
+        return store.llen(f"{tag}:jobs")
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.interval):
+            backlog = self._backlog()
+            self._idle_cycles = self._idle_cycles + 1 if backlog == 0 else 0
+            cur = self.target.n_workers
+            want = self.policy.decide(cur, backlog, self._idle_cycles)
+            if want != cur:
+                self.decisions.append((time.monotonic(), cur, want, backlog))
+                self.target.resize(want)
+                self._idle_cycles = 0
+
+    def start(self) -> "ElasticController":
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="elastic-controller")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2)
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()

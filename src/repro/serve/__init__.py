@@ -1,0 +1,1 @@
+from .engine import make_serve_step, make_prefill, ServeEngine  # noqa: F401

@@ -1,0 +1,67 @@
+"""Serving: prefill + single-token decode (serve_step) + a small batched
+engine for the examples.
+
+``make_serve_step`` builds the function the decode-shape dry-runs lower:
+one new token against a KV cache of ``seq_len`` (the assignment's
+``decode_*`` semantics). The cache is donated so XLA updates it in place.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+
+
+def make_prefill(model: Model, max_len: int):
+    def prefill(params, batch):
+        return model.prefill(params, batch, max_len)
+    return prefill
+
+
+def make_serve_step(model: Model, greedy: bool = True):
+    """serve_step(params, cache, tokens) -> (next_tokens, logits, cache)."""
+
+    def serve_step(params, cache, tokens):
+        logits, cache = model.decode(params, cache, tokens)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, logits, cache
+
+    return serve_step
+
+
+class ServeEngine:
+    """Minimal batched generation engine (examples/serve_lm.py).
+
+    Static batch, greedy decoding, eos-aware early exit bookkeeping —
+    enough to demonstrate batched serving through the public API without
+    pretending to be a full continuous-batching scheduler.
+    """
+
+    def __init__(self, model: Model, params, max_len: int = 256,
+                 eos_id: Optional[int] = None):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self._prefill = jax.jit(make_prefill(model, max_len))
+        self._step = jax.jit(make_serve_step(model))
+
+    def generate(self, prompts: jax.Array, max_new_tokens: int = 32
+                 ) -> jax.Array:
+        """prompts: [B, S] int32 (right-aligned, no padding support needed
+        for the demo). Returns [B, max_new_tokens]."""
+        logits, cache = self._prefill(self.params, {"tokens": prompts})
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out: List[jax.Array] = [tok]
+        done = jnp.zeros(tok.shape, bool)
+        for _ in range(max_new_tokens - 1):
+            tok, _, cache = self._step(self.params, cache, tok)
+            if self.eos_id is not None:
+                done = done | (tok == self.eos_id)
+                tok = jnp.where(done, self.eos_id, tok)
+            out.append(tok)
+        return jnp.stack(out, axis=1)

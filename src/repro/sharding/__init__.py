@@ -1,0 +1,3 @@
+from .rules import (MeshRules, param_sharding, param_spec,  # noqa: F401
+                    opt_state_sharding, batch_sharding, cache_sharding,
+                    state_sharding)

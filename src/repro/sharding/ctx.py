@@ -1,0 +1,63 @@
+"""Activation-sharding constraint context.
+
+Model code is mesh-agnostic; the launcher activates a policy and the
+model pins its activations at block boundaries via ``constrain``:
+
+    with activation_sharding(rules):
+        lowered = jax.jit(step, ...).lower(...)
+
+Without constraints, XLA's SPMD partitioner may resolve FSDP-weight vs
+batch conflicts on the shared "data" axis by all-gathering *activations*
+to the full global batch (measured: a 33 GB/device logits gather at
+llama3 scale). Pinning activations to P(batch, ...) forces the cheap
+direction — weight-shard gathers — which is what production frameworks
+(MaxText et al.) do with logical axis rules.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_tls = threading.local()
+
+
+def current_rules():
+    return getattr(_tls, "rules", None)
+
+
+@contextmanager
+def activation_sharding(rules):
+    prev = getattr(_tls, "rules", None)
+    _tls.rules = rules
+    try:
+        yield
+    finally:
+        _tls.rules = prev
+
+
+def constrain(x: jax.Array, *dims: Optional[str]) -> jax.Array:
+    """dims entries: "batch" | "tensor" | "seq" | None, one per axis of x.
+    "seq" maps to the tensor axis only under a sequence-parallel policy.
+    Axes whose size doesn't divide the named mesh axes stay unsharded."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    parts = []
+    for d, size in zip(dims, x.shape):
+        if d == "seq":
+            d = "tensor" if getattr(rules, "sequence_parallel", False) else None
+        if d == "batch":
+            ax = rules.batch_axes
+            parts.append(ax if size % rules.axis_size(ax) == 0 else None)
+        elif d == "tensor":
+            ax = rules.tensor_axis
+            parts.append(ax if size % rules.axis_size(ax) == 0 else None)
+        else:
+            parts.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*parts)))

@@ -1,0 +1,260 @@
+"""Parameter/activation/cache partitioning rules (DP / FSDP / TP / EP).
+
+Axis conventions over the production mesh (launch/mesh.py):
+
+  * ``data``  (+ ``pod`` when multi-pod)  — batch dimension of activations;
+    optionally FSDP shards of parameters/optimizer state.
+  * ``model`` — tensor parallelism: attention heads / MLP hidden dim /
+    vocab, and **expert parallelism** for MoE (experts live on the model
+    axis, the standard TPU EP mapping).
+
+Rules are name-based over the parameter tree path — megatron-style:
+
+  wq/wk/wv : [.., D, H*hd]  -> (.., fsdp?, model)     column-parallel
+  attn wo  : [.., H*hd, D]  -> (.., model, fsdp?)     row-parallel
+  mlp wi/wg: [.., D, F]     -> (.., fsdp?, model)
+  mlp wo   : [.., F, D]     -> (.., model, fsdp?)
+  moe wi/wg/wo: [L, E, ...] -> (None, model, ...)     expert-parallel
+  embed tok: [V, D]         -> (model, fsdp?)         vocab-parallel
+  lm head  : [D, V]         -> (fsdp?, model)
+  norms/biases/scalars      -> replicated
+
+KV caches shard batch over data and sequence over model (kv-head counts
+rarely divide the model axis); B==1 long-context shards sequence over
+every axis.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..optim.quant import QTensor
+
+
+@dataclass(frozen=True)
+class MeshRules:
+    mesh: Mesh
+    tensor_axis: str = "model"
+    fsdp: bool = False                     # shard params over data axes too
+    fsdp_axes: Tuple[str, ...] = ("data",)
+    #: Megatron-style sequence parallelism: between-block activations are
+    #: sharded over (batch, seq) instead of (batch,), turning per-layer
+    #: all-reduces into reduce-scatter/all-gather pairs and making the
+    #: (token-local) MLP communication-free.
+    sequence_parallel: bool = False
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+    def axis_size(self, name) -> int:
+        if isinstance(name, tuple):
+            return int(np.prod([self.axis_size(n) for n in name]))
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[name]
+
+
+def _last2(path: Tuple[str, ...]) -> Tuple[str, str]:
+    names = [p for p in path]
+    leaf = names[-1] if names else ""
+    parent = names[-2] if len(names) > 1 else ""
+    return parent, leaf
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+# column-parallel (output dim sharded on model axis)
+_COL = {"wq", "wk", "wv", "wi", "wg", "in_proj", "wr", "head"}
+# row-parallel (input dim sharded on model axis)
+_ROW = {"wo", "wv_cm", "out_proj"}
+# always replicated
+_REPL = {"router", "wa", "wb", "conv_w", "mu", "w0", "u", "ln_x", "a_log",
+         "dt_bias", "d_skip", "norm", "norm1", "norm2", "norm3", "gate_norm",
+         "final_norm", "enc_norm", "bq", "bk", "bv"}
+
+
+def _base_spec(rules: MeshRules, path: Tuple[str, ...], ndim: int,
+               shape: Tuple[int, ...]) -> P:
+    parent, leaf = _last2(path)
+    ta = rules.tensor_axis
+    tsize = rules.axis_size(ta)
+
+    # channel-mix wv is row-parallel but shares the name "wv"
+    if parent == "cm" and leaf == "wv":
+        leaf = "wv_cm"
+    if parent == "cm" and leaf == "wk":
+        leaf = "wi"  # [D, F] column-parallel
+
+    if leaf == "tok":  # embedding [V, D]
+        return P(ta, None) if shape[0] % tsize == 0 else P(None, None)
+
+    is_moe = parent in ("moe",) or (len(path) >= 2 and "moe" in path)
+    if is_moe and leaf in ("wi", "wg", "wo") and ndim >= 3:
+        # [L?, E, D, F] — expert parallel on E
+        spec = [None] * ndim
+        e_dim = ndim - 3
+        if shape[e_dim] % tsize == 0:
+            spec[e_dim] = ta
+        return P(*spec)
+
+    if leaf in _REPL:
+        return P(*([None] * ndim))
+
+    if leaf in _COL and ndim >= 2:
+        spec = [None] * ndim
+        if shape[-1] % tsize == 0:
+            spec[-1] = ta
+        return P(*spec)
+
+    if leaf in _ROW and ndim >= 2:
+        spec = [None] * ndim
+        if shape[-2] % tsize == 0:
+            spec[-2] = ta
+        return P(*spec)
+
+    return P(*([None] * ndim))
+
+
+def _add_fsdp(rules: MeshRules, spec: P, shape: Tuple[int, ...],
+              skip_first: bool) -> P:
+    """Shard the first free (None) dim over the fsdp axes if divisible."""
+    if not rules.fsdp:
+        return spec
+    fa = rules.fsdp_axes if len(rules.fsdp_axes) > 1 else rules.fsdp_axes[0]
+    fsize = rules.axis_size(rules.fsdp_axes if len(rules.fsdp_axes) > 1
+                            else rules.fsdp_axes[0])
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    start = 1 if skip_first and len(shape) > 2 else 0
+    for i in range(start, len(shape)):
+        if parts[i] is None and shape[i] % fsize == 0 and shape[i] >= 512:
+            parts[i] = fa
+            break
+    return P(*parts)
+
+
+def param_spec(rules: MeshRules, path, leaf) -> P:
+    names = _path_names(path)
+    shape = tuple(leaf.shape)
+    spec = _base_spec(rules, names, len(shape), shape)
+    stacked = "layers" in names or "enc_layers" in names
+    return _add_fsdp(rules, spec, shape, skip_first=stacked)
+
+
+def param_sharding(rules: MeshRules, params_shape) -> Any:
+    """Tree of NamedSharding matching an (abstract) params tree."""
+    def one(path, leaf):
+        return NamedSharding(rules.mesh, param_spec(rules, path, leaf))
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_state_sharding(rules: MeshRules, opt_shape) -> Any:
+    """m/v mirror the param sharding. An int8 QTensor's payload keeps the
+    parameter's shape (and therefore its sharding); its per-row scale
+    drops the last spec entry."""
+
+    def one(path, leaf):
+        names = _path_names(path)
+        if isinstance(leaf, QTensor):
+            raise TypeError("flatten QTensors before sharding")
+        if names and names[-1] == "count":
+            return NamedSharding(rules.mesh, P())
+        if names and names[-1] == "q":
+            # strip "m"/"v" prefix and the "q" leaf key
+            spec = param_spec(rules, path[1:-1], leaf)
+            return NamedSharding(rules.mesh, spec)
+        if names and names[-1] == "scale":
+            parent = path[1:-1]
+
+            class _Fake:  # parameter-shaped stand-in (scale = shape[:-1])
+                shape = tuple(leaf.shape) + (1,)
+                dtype = leaf.dtype
+            spec = param_spec(rules, parent, _Fake)
+            return NamedSharding(rules.mesh, P(*tuple(spec)[:len(leaf.shape)]))
+        # plain m/v leaf: strip the leading "m"/"v" key, reuse param rule
+        return NamedSharding(rules.mesh, param_spec(rules, path[1:], leaf))
+    return jax.tree_util.tree_map_with_path(one, opt_shape)
+
+
+def batch_sharding(rules: MeshRules, batch_shape) -> Any:
+    """tokens/labels [B, S]; frames/patches [B, T, D]."""
+    ba = rules.batch_axes
+    bsize = rules.axis_size(ba)
+
+    def one(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(rules.mesh, P())
+        if leaf.shape[0] % bsize == 0:
+            return NamedSharding(rules.mesh,
+                                 P(ba, *([None] * (leaf.ndim - 1))))
+        return NamedSharding(rules.mesh, P(*([None] * leaf.ndim)))
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def cache_sharding(rules: MeshRules, cache_shape) -> Any:
+    """KV caches [L, B, S, K, hd]; ssm states [L, B, H, ...]."""
+    ba = rules.batch_axes
+    ta = rules.tensor_axis
+    bsize = rules.axis_size(ba)
+    tsize = rules.axis_size(ta)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        leafname = names[-1] if names else ""
+        nd = leaf.ndim
+        if leafname == "lengths":
+            shard_b = leaf.shape[0] % bsize == 0
+            return NamedSharding(rules.mesh, P(ba) if shard_b else P(None))
+        spec = [None] * nd
+        if leafname in ("k", "v", "enc_k", "enc_v", "attn_k", "attn_v"):
+            # [L|G, B, S, K, hd]
+            B, S, K = leaf.shape[1], leaf.shape[2], leaf.shape[3]
+            if B % bsize == 0:
+                spec[1] = ba
+                if K % tsize == 0:
+                    spec[3] = ta
+                elif S % tsize == 0:
+                    spec[2] = ta
+            else:  # B == 1 long-context: shard sequence over everything
+                both = ba + (ta,)
+                if S % rules.axis_size(both) == 0:
+                    spec[2] = both
+                elif S % tsize == 0:
+                    spec[2] = ta
+        elif leafname in ("wkv", "ssm"):
+            # [L, B, H, ...] — heads over model, batch over data
+            B, H = leaf.shape[1], leaf.shape[2]
+            if B % bsize == 0:
+                spec[1] = ba
+            if H % tsize == 0:
+                spec[2] = ta
+        elif leafname in ("tm_x", "cm_x", "conv"):
+            B = leaf.shape[1]
+            if B % bsize == 0:
+                spec[1] = ba
+            if leaf.shape[-1] % tsize == 0:
+                spec[-1] = ta
+        return NamedSharding(rules.mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def state_sharding(rules: MeshRules, state_shape) -> Dict[str, Any]:
+    return {
+        "params": param_sharding(rules, state_shape["params"]),
+        "opt": opt_state_sharding(rules, state_shape["opt"]),
+    }

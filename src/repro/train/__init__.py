@@ -1,0 +1,1 @@
+from .step import TrainState, make_train_step, init_train_state  # noqa: F401

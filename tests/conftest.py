@@ -1,0 +1,9 @@
+import pytest
+
+from repro.core import reset_session
+
+
+@pytest.fixture(autouse=True)
+def fresh_session():
+    """Isolate each test: fresh in-process KV store + object store."""
+    yield reset_session()

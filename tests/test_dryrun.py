@@ -1,0 +1,90 @@
+"""Multi-pod dry-run machinery smoke: run launch/dryrun.py in a subprocess
+with 8 forced host devices and tiny shape cells (lower+compile+analyze end
+to end on a real multi-axis mesh, without the 512-device cost)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.models import SHAPES
+from repro.models.config import ShapeConfig
+from repro.sharding import MeshRules
+from repro.launch.specs import build_cell
+from repro.launch.dryrun import parse_collectives
+from repro.launch.cost_model import estimate_cost
+
+SHAPES["t_train"] = ShapeConfig("t_train", "train", 128, 4)
+SHAPES["t_decode"] = ShapeConfig("t_decode", "decode", 128, 4)
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     devices=jax.devices(),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+rules = MeshRules(mesh=mesh, fsdp=True)
+out = {}
+for arch, shape in [("qwen1.5-0.5b", "t_train"), ("qwen1.5-0.5b", "t_decode")]:
+    cell = build_cell(arch, shape, rules, overrides={"microbatches": 2})
+    with mesh:
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate_argnums)
+        compiled = jitted.lower(*cell.args).compile()
+    mem = compiled.memory_analysis()
+    coll = parse_collectives(compiled.as_text())
+    est = estimate_cost(cell.fn, *cell.args, n_devices=8)
+    out[f"{arch}/{shape}"] = {
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "coll_ops": sum(v["count"] for v in coll["per_op"].values()),
+        "flops": est.flops,
+    }
+import json
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_multiaxis_mesh_compiles():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    train = out["qwen1.5-0.5b/t_train"]
+    decode = out["qwen1.5-0.5b/t_decode"]
+    assert train["flops"] > decode["flops"] > 0
+    assert train["coll_ops"] > 0          # pod axis actually shards
+    assert train["temp_bytes"] > 0
+
+
+def test_cell_skip_rules():
+    from repro.launch.specs import cell_is_skipped
+    assert cell_is_skipped("llama3-8b", "long_500k") is not None
+    assert cell_is_skipped("rwkv6-7b", "long_500k") is None
+    assert cell_is_skipped("zamba2-2.7b", "long_500k") is None
+    assert cell_is_skipped("llama3-8b", "train_4k") is None
+
+
+def test_artifacts_if_present_are_wellformed():
+    art = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                       "artifacts", "dryrun")
+    if not os.path.isdir(art):
+        pytest.skip("no dry-run artifacts yet")
+    names = [n for n in os.listdir(art) if n.endswith(".json")]
+    if not names:
+        pytest.skip("no dry-run artifacts yet")
+    for name in names:
+        with open(os.path.join(art, name)) as f:
+            rec = json.load(f)
+        assert rec["status"] in ("ok", "skipped", "error")
+        if rec["status"] == "ok":
+            assert rec["t_step"] > 0
+            assert rec["bottleneck"] in ("compute", "memory", "collective")
+            assert 0 <= rec["roofline_fraction"]

@@ -1,0 +1,58 @@
+"""Examples run end-to-end as subprocesses (reduced sizes)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+SRC = os.path.join(ROOT, "src")
+
+
+def run_example(script, *args, timeout=600):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "examples", script), *args],
+        env=env, capture_output=True, text=True, timeout=timeout, cwd=ROOT)
+    assert proc.returncode == 0, f"{script}: {proc.stderr[-2000:]}"
+    return proc.stdout
+
+
+@pytest.mark.slow
+class TestExamples:
+    def test_quickstart(self):
+        out = run_example("quickstart.py", "--samples", "100000",
+                          "--procs", "4")
+        assert "pi ~= 3.1" in out
+        assert "OK" in out
+
+    def test_evolution_strategies(self):
+        out = run_example("evolution_strategies.py", "--iters", "10",
+                          "--pop", "24", "--procs", "4")
+        assert "final error" in out
+
+    def test_grid_search(self):
+        out = run_example("grid_search.py", "--procs", "4")
+        assert "best:" in out
+
+    def test_ppo(self):
+        out = run_example("ppo.py", "--envs", "2", "--iters", "2",
+                          "--horizon", "16")
+        assert "piped env workers" in out
+
+    def test_train_lm_and_resume(self):
+        out = run_example("train_lm.py", "--steps", "12",
+                          "--ckpt-every", "6", "--batch", "2",
+                          "--seq", "32")
+        assert "checkpoints:" in out
+
+    def test_train_lm_dp(self):
+        out = run_example("train_lm.py", "--steps", "3", "--dp", "2",
+                          "--batch", "2", "--seq", "32")
+        assert "[dp]" in out
+
+    def test_serve_lm(self):
+        out = run_example("serve_lm.py", "--batch", "2",
+                          "--prompt-len", "8", "--new-tokens", "8")
+        assert "decode == teacher-forced argmax: OK" in out

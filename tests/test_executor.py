@@ -1,0 +1,83 @@
+import time
+
+import pytest
+
+from repro.core import Session, set_session
+from repro.core.executor import (FunctionExecutor, FunctionTimeoutError,
+                                 RemoteError)
+from repro.core.session import InvocationModel
+
+
+class TestExecutor:
+    def test_call_and_map(self):
+        ex = FunctionExecutor()
+        assert ex.call_async(lambda a, b: a + b, (1, 2)).result(5) == 3
+        futs = ex.map(lambda x: x ** 2, range(6))
+        assert [f.result(5) for f in futs] == [0, 1, 4, 9, 16, 25]
+        ex.shutdown()
+
+    def test_both_monitoring_modes(self):
+        for monitoring in ("queue", "storage"):
+            ex = FunctionExecutor(monitoring=monitoring)
+            futs = ex.map(lambda x: x + 1, range(4))
+            assert [f.result(10) for f in futs] == [1, 2, 3, 4]
+            ex.shutdown()
+
+    def test_remote_error_carries_traceback(self):
+        ex = FunctionExecutor()
+
+        def boom():
+            raise ValueError("inner detail")
+        fut = ex.call_async(boom)
+        with pytest.raises(RemoteError, match="inner detail") as ei:
+            fut.result(5)
+        assert "ValueError" in ei.value.remote_traceback
+        ex.shutdown()
+
+    def test_cold_then_warm(self):
+        set_session(Session())
+        ex = FunctionExecutor()
+        f1 = ex.call_async(lambda: 1)
+        f1.result(5)
+        assert f1.cold is True
+        f2 = ex.call_async(lambda: 2)
+        f2.result(5)
+        assert f2.cold is False  # container reused
+        ex.shutdown()
+
+    def test_prewarm_pool(self):
+        ex = FunctionExecutor(prewarm=3)
+        futs = ex.map(lambda x: x, range(3))
+        [f.result(5) for f in futs]
+        assert all(f.cold is False for f in futs)
+        ex.shutdown()
+
+    def test_time_limit(self):
+        ex = FunctionExecutor(time_limit_s=0.01)
+        fut = ex.call_async(time.sleep, (0.1,))
+        with pytest.raises(FunctionTimeoutError):
+            fut.result(5)
+        ex.shutdown()
+
+    def test_invocation_model_accounting(self):
+        sess = set_session(Session())
+        sess.invocation = InvocationModel(
+            cold_invoke_s=1.719, warm_invoke_s=0.258, setup_s=0.05,
+            serialize_s=0.004, upload_s=0.002, scale=0.001)
+        ex = FunctionExecutor()
+        cold = ex.call_async(lambda: 0)
+        cold.result(5)
+        warm = ex.call_async(lambda: 0)
+        warm.result(5)
+        # Table 1 structure: virtual stats carry the unscaled values
+        assert cold.stats["invoke_s"] == pytest.approx(1.719)
+        assert warm.stats["invoke_s"] == pytest.approx(0.258)
+        assert warm.stats["setup_s"] == pytest.approx(0.05)
+        ex.shutdown()
+
+    def test_payload_travels_through_storage(self):
+        sess = set_session(Session())
+        ex = FunctionExecutor()
+        ex.call_async(lambda: None).result(5)
+        assert any(k.startswith("jobs/") for k in sess.get_storage().list())
+        ex.shutdown()

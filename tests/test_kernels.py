@@ -1,0 +1,200 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret-mode Pallas vs the
+pure-jnp oracles in kernels/ref.py, and gradient checks for the
+custom-vjp flash attention."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import flash_decode
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba2_scan import mamba2_chunked
+from repro.kernels.rwkv6_scan import rwkv6_chunked
+
+KEY = jax.random.PRNGKey(0)
+
+ATTN_SWEEP = [
+    # B, S, H, K, D, causal, dtype
+    (2, 256, 8, 4, 64, True, jnp.float32),
+    (1, 128, 4, 4, 32, False, jnp.float32),
+    (2, 512, 8, 2, 128, True, jnp.float32),
+    (1, 256, 4, 2, 112, True, jnp.float32),   # kimi head dim (pad to 128)
+    (2, 256, 8, 4, 64, True, jnp.bfloat16),
+    (1, 64, 2, 1, 64, True, jnp.float32),     # MHA==GQA(1)
+]
+
+
+def _qkv(B, S, H, K, D, dtype):
+    ks = jax.random.split(KEY, 3)
+    return (jax.random.normal(ks[0], (B, S, H, D), dtype),
+            jax.random.normal(ks[1], (B, S, K, D), dtype),
+            jax.random.normal(ks[2], (B, S, K, D), dtype))
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,S,H,K,D,causal,dtype", ATTN_SWEEP)
+    def test_forward_matches_oracle(self, B, S, H, K, D, causal, dtype):
+        q, k, v = _qkv(B, S, H, K, D, dtype)
+        o_ref = ref.attention(q, k, v, causal=causal)
+        o = flash_attention(q, k, v, causal=causal, block_q=128,
+                            block_k=128, interpret=True)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(np.array(o, np.float32),
+                                   np.array(o_ref, np.float32),
+                                   atol=tol, rtol=tol)
+
+    def test_blocked_ref_matches_oracle(self):
+        for (B, S, H, K, D, causal, dtype) in ATTN_SWEEP[:3]:
+            q, k, v = _qkv(B, S, H, K, D, dtype)
+            o1 = ref.attention(q, k, v, causal=causal)
+            o2 = ref.attention_blocked(q, k, v, causal=causal,
+                                       block_q=64, block_k=64)
+            np.testing.assert_allclose(np.array(o1, np.float32),
+                                       np.array(o2, np.float32),
+                                       atol=2e-5, rtol=2e-5)
+
+    def test_gradients_match_oracle(self):
+        B, S, H, K, D = 1, 128, 4, 2, 64
+        q, k, v = _qkv(B, S, H, K, D, jnp.float32)
+
+        def loss_flash(q, k, v):
+            return (flash_attention(q, k, v, causal=True, block_q=64,
+                                    block_k=64, interpret=True) ** 2).sum()
+
+        def loss_ref(q, k, v):
+            return (ref.attention(q, k, v, causal=True) ** 2).sum()
+
+        g1 = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.array(a), np.array(b),
+                                       atol=5e-4, rtol=5e-4)
+
+    def test_noncausal_gradients(self):
+        B, S, H, K, D = 1, 128, 2, 2, 32
+        q, k, v = _qkv(B, S, H, K, D, jnp.float32)
+        g1 = jax.grad(lambda q: (flash_attention(
+            q, k, v, causal=False, block_q=64, block_k=64,
+            interpret=True) ** 2).sum())(q)
+        g2 = jax.grad(lambda q: (ref.attention(
+            q, k, v, causal=False) ** 2).sum())(q)
+        np.testing.assert_allclose(np.array(g1), np.array(g2),
+                                   atol=5e-4, rtol=5e-4)
+
+    @settings(max_examples=8, deadline=None,
+              suppress_health_check=[HealthCheck.function_scoped_fixture])
+    @given(B=st.integers(1, 2), nheads=st.sampled_from([(4, 4), (8, 2)]),
+           S=st.sampled_from([64, 128, 192]),
+           D=st.sampled_from([32, 64]))
+    def test_property_shapes(self, B, nheads, S, D):
+        H, K = nheads
+        q, k, v = _qkv(B, S, H, K, D, jnp.float32)
+        o_ref = ref.attention(q, k, v, causal=True)
+        o = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                            interpret=True)
+        np.testing.assert_allclose(np.array(o), np.array(o_ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+class TestFlashDecode:
+    @pytest.mark.parametrize("B,S,H,K,D", [
+        (2, 256, 8, 4, 64), (3, 300, 4, 2, 128), (1, 128, 4, 4, 32),
+        (2, 96, 8, 8, 64),
+    ])
+    def test_matches_oracle(self, B, S, H, K, D):
+        ks = jax.random.split(KEY, 4)
+        q = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+        kc = jax.random.normal(ks[1], (B, S, K, D), jnp.float32)
+        vc = jax.random.normal(ks[2], (B, S, K, D), jnp.float32)
+        lens = jax.random.randint(ks[3], (B,), 1, S + 1)
+        o_ref = ref.decode_attention(q, kc, vc, lens)
+        o = flash_decode(q, kc, vc, lens, block_k=64, interpret=True)
+        np.testing.assert_allclose(np.array(o), np.array(o_ref),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_decode_equals_last_position_of_full(self):
+        B, S, H, K, D = 2, 64, 8, 4, 32
+        q, k, v = _qkv(B, S, H, K, D, jnp.float32)
+        full = ref.attention(q, k, v, causal=True)
+        dec = flash_decode(q[:, -1], k, v, jnp.full((B,), S, jnp.int32),
+                           block_k=32, interpret=True)
+        np.testing.assert_allclose(np.array(full[:, -1]), np.array(dec),
+                                   atol=2e-5, rtol=2e-5)
+
+
+class TestRWKV6:
+    @pytest.mark.parametrize("B,S,H,D,chunk", [
+        (2, 64, 4, 16, 16), (1, 128, 2, 32, 32), (2, 96, 3, 16, 16),
+    ])
+    def test_matches_oracle(self, B, S, H, D, chunk):
+        ks = jax.random.split(KEY, 5)
+        r = jax.random.normal(ks[0], (B, S, H, D))
+        k = jax.random.normal(ks[1], (B, S, H, D))
+        v = jax.random.normal(ks[2], (B, S, H, D))
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, D))) * 0.5 + 0.45
+        u = jax.random.normal(ks[4], (H, D)) * 0.1
+        st_ = jax.random.normal(KEY, (B, H, D, D)) * 0.1
+        o_ref, s_ref = ref.rwkv6_scan(r, k, v, w, u, st_)
+        o, s = rwkv6_chunked(r, k, v, w, u, st_, chunk=chunk, interpret=True)
+        np.testing.assert_allclose(np.array(o), np.array(o_ref),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.array(s), np.array(s_ref),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_state_carrying_splits_sequence(self):
+        """scan(S) == scan(S/2) ∘ scan(S/2) with carried state."""
+        B, S, H, D = 1, 64, 2, 16
+        ks = jax.random.split(KEY, 5)
+        r, k, v = (jax.random.normal(ks[i], (B, S, H, D)) for i in range(3))
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, D)))
+        u = jax.random.normal(ks[4], (H, D)) * 0.1
+        o_full, s_full = ref.rwkv6_scan(r, k, v, w, u)
+        o1, s1 = ref.rwkv6_scan(r[:, :32], k[:, :32], v[:, :32], w[:, :32], u)
+        o2, s2 = ref.rwkv6_scan(r[:, 32:], k[:, 32:], v[:, 32:], w[:, 32:],
+                                u, s1)
+        np.testing.assert_allclose(np.array(o_full),
+                                   np.concatenate([o1, o2], 1),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.array(s_full), np.array(s2),
+                                   atol=1e-4, rtol=1e-4)
+
+
+class TestMamba2:
+    @pytest.mark.parametrize("B,S,H,P,N,chunk", [
+        (2, 64, 4, 16, 16, 16), (1, 128, 2, 32, 16, 32),
+        (2, 96, 3, 16, 32, 16),
+    ])
+    def test_matches_oracle(self, B, S, H, P, N, chunk):
+        ks = jax.random.split(KEY, 5)
+        x = jax.random.normal(ks[0], (B, S, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+        a = -jnp.abs(jax.random.normal(ks[2], (H,)))
+        b = jax.random.normal(ks[3], (B, S, N))
+        c = jax.random.normal(ks[4], (B, S, N))
+        st_ = jax.random.normal(KEY, (B, H, P, N)) * 0.1
+        y_ref, h_ref = ref.mamba2_scan(x, dt, a, b, c, st_)
+        y, h = mamba2_chunked(x, dt, a, b, c, st_, chunk=chunk,
+                              interpret=True)
+        np.testing.assert_allclose(np.array(y), np.array(y_ref),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.array(h), np.array(h_ref),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_chunked_ref_bptt_matches_plain_scan(self):
+        """The remat-chunked ref recurrence must not change gradients."""
+        B, S, H, P, N = 1, 128, 2, 8, 8
+        ks = jax.random.split(KEY, 5)
+        x = jax.random.normal(ks[0], (B, S, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+        a = -jnp.abs(jax.random.normal(ks[2], (H,)))
+        b = jax.random.normal(ks[3], (B, S, N))
+        c = jax.random.normal(ks[4], (B, S, N))
+
+        def loss(x):
+            y, _ = ref.mamba2_scan(x, dt, a, b, c)
+            return (y ** 2).sum()
+        g = jax.grad(loss)(x)
+        assert bool(jnp.isfinite(g).all())

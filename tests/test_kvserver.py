@@ -1,0 +1,91 @@
+"""Remote-mode tests: the IPC primitives against a genuine TCP KV server,
+plus the full-fidelity subprocess executor backend."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import (KVClient, KVServer, Session, mp, set_session)
+from repro.core.executor import FunctionExecutor
+from repro.core.storage import KVObjectStore
+
+
+@pytest.fixture
+def server():
+    with KVServer() as srv:
+        yield srv
+
+
+class TestKVServer:
+    def test_basic_commands(self, server):
+        c = KVClient(server.address)
+        c.set("k", b"v")
+        assert c.get("k") == b"v"
+        c.rpush("l", b"1", b"2")
+        assert c.lrange("l", 0, -1) == [b"1", b"2"]
+        assert c.incr("n") == 1
+        c.hset("h", "f", b"x")
+        assert c.hgetall("h") == {"f": b"x"}
+        c.close()
+
+    def test_blocking_across_connections(self, server):
+        c1, c2 = KVClient(server.address), KVClient(server.address)
+        out = []
+        t = threading.Thread(target=lambda: out.append(c2.blpop("q", 5)))
+        t.start()
+        time.sleep(0.05)
+        c1.rpush("q", b"msg")
+        t.join(3)
+        assert out == [("q", b"msg")]
+        c1.close()
+        c2.close()
+
+    def test_exception_propagates(self, server):
+        c = KVClient(server.address)
+        c.set("k", b"v")
+        with pytest.raises(TypeError):
+            c.rpush("k", b"x")   # WRONGTYPE crosses the wire
+        c.close()
+
+    def test_mp_primitives_over_tcp(self, server):
+        set_session(Session(store=KVClient(server.address)))
+        q = mp.Queue()
+        lock = mp.Lock()
+        v = mp.Value("i", 0)
+
+        def child(q, lock, v):
+            with lock:
+                v.value += 5
+            q.put("done")
+        pr = mp.Process(target=child, args=(q, lock, v))
+        pr.start()
+        assert q.get(timeout=5) == "done"
+        pr.join(5)
+        assert v.value == 5
+
+
+@pytest.mark.slow
+class TestSubprocessBackend:
+    def test_real_process_roundtrip(self, server):
+        client = KVClient(server.address)
+        set_session(Session(store=client,
+                            storage=KVObjectStore(client),
+                            kv_address=server.address))
+        ex = FunctionExecutor(backend="subprocess")
+        assert ex.call_async(lambda a, b: a * b, (6, 7)).result(90) == 42
+        ex.shutdown(wait=False)
+
+    def test_real_process_uses_ipc(self, server):
+        client = KVClient(server.address)
+        set_session(Session(store=client,
+                            storage=KVObjectStore(client),
+                            kv_address=server.address))
+        q = mp.Queue()
+        sess_defaults = {"backend": "subprocess"}
+        from repro.core import get_session
+        get_session().executor_defaults.update(sess_defaults)
+        pr = mp.Process(target=lambda q: q.put(("pid-proof", 123)), args=(q,))
+        pr.start()
+        assert q.get(timeout=90) == ("pid-proof", 123)
+        pr.join(30)

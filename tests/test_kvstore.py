@@ -1,0 +1,200 @@
+import threading
+import time
+
+import pytest
+
+from repro.core.kvstore import (KVStore, LatencyModel, ShardedKVStore,
+                                WrongTypeError)
+
+
+@pytest.fixture
+def kv():
+    return KVStore()
+
+
+class TestLists:
+    def test_push_pop_order(self, kv):
+        kv.rpush("l", b"a", b"b")
+        kv.lpush("l", b"z")
+        assert kv.lrange("l", 0, -1) == [b"z", b"a", b"b"]
+        assert kv.lpop("l") == b"z"
+        assert kv.rpop("l") == b"b"
+        assert kv.llen("l") == 1
+
+    def test_lindex_lset(self, kv):
+        kv.rpush("l", b"a", b"b", b"c")
+        assert kv.lindex("l", 1) == b"b"
+        assert kv.lindex("l", -1) == b"c"
+        kv.lset("l", 1, b"B")
+        assert kv.lrange("l", 0, -1) == [b"a", b"B", b"c"]
+
+    def test_lrange_negative(self, kv):
+        kv.rpush("l", *[str(i).encode() for i in range(5)])
+        assert kv.lrange("l", -2, -1) == [b"3", b"4"]
+        assert kv.lrange("l", 1, 2) == [b"1", b"2"]
+
+    def test_empty_list_removed(self, kv):
+        kv.rpush("l", b"x")
+        kv.lpop("l")
+        assert not kv.exists("l")
+
+    def test_blpop_blocks_until_push(self, kv):
+        out = []
+        t = threading.Thread(target=lambda: out.append(kv.blpop("q", 5)))
+        t.start()
+        time.sleep(0.05)
+        assert not out
+        kv.rpush("q", b"v")
+        t.join(2)
+        assert out == [("q", b"v")]
+
+    def test_blpop_timeout(self, kv):
+        t0 = time.monotonic()
+        assert kv.blpop("missing", 0.05) is None
+        assert time.monotonic() - t0 >= 0.04
+
+    def test_blpop_multiple_keys(self, kv):
+        kv.rpush("b", b"2")
+        assert kv.blpop(["a", "b"], 0.1) == ("b", b"2")
+
+    def test_rpoplpush(self, kv):
+        kv.rpush("src", b"1", b"2")
+        assert kv.rpoplpush("src", "dst") == b"2"
+        assert kv.lrange("dst", 0, -1) == [b"2"]
+
+
+class TestStringsAndCounters:
+    def test_set_get(self, kv):
+        kv.set("k", b"v")
+        assert kv.get("k") == b"v"
+        assert kv.get("missing") is None
+
+    def test_setnx(self, kv):
+        assert kv.setnx("k", 1)
+        assert not kv.setnx("k", 2)
+        assert kv.get("k") == 1
+
+    def test_incr_decr(self, kv):
+        assert kv.incr("c") == 1
+        assert kv.incrby("c", 10) == 11
+        assert kv.decr("c") == 10
+
+    def test_getset(self, kv):
+        assert kv.getset("k", b"new") is None
+        assert kv.getset("k", b"newer") == b"new"
+
+
+class TestHashes:
+    def test_basic(self, kv):
+        kv.hset("h", "f", b"v")
+        kv.hset("h", mapping={"g": b"w"})
+        assert kv.hget("h", "f") == b"v"
+        assert kv.hgetall("h") == {"f": b"v", "g": b"w"}
+        assert kv.hlen("h") == 2
+        assert sorted(kv.hkeys("h")) == ["f", "g"]
+        assert kv.hdel("h", "f") == 1
+        assert not kv.hexists("h", "f")
+
+    def test_hsetnx_hincrby(self, kv):
+        assert kv.hsetnx("h", "f", 1)
+        assert not kv.hsetnx("h", "f", 2)
+        assert kv.hincrby("h", "n", 5) == 5
+        assert kv.hincrby("h", "n", -2) == 3
+
+
+class TestSets:
+    def test_basic(self, kv):
+        assert kv.sadd("s", b"a", b"b") == 2
+        assert kv.sadd("s", b"a") == 0
+        assert kv.smembers("s") == {b"a", b"b"}
+        assert kv.sismember("s", b"a")
+        assert kv.srem("s", b"a") == 1
+        assert kv.scard("s") == 1
+
+
+class TestExpiry:
+    def test_ttl_expires(self, kv):
+        kv.set("k", b"v", ex=0.05)
+        assert kv.get("k") == b"v"
+        assert 0 < kv.ttl("k") <= 0.05
+        time.sleep(0.07)
+        assert kv.get("k") is None
+        assert kv.ttl("k") == -2
+
+    def test_expire_and_persist(self, kv):
+        kv.set("k", b"v")
+        assert kv.ttl("k") == -1
+        kv.expire("k", 100)
+        assert kv.ttl("k") > 0
+        kv.persist("k")
+        assert kv.ttl("k") == -1
+
+
+class TestSemantics:
+    def test_wrong_type(self, kv):
+        kv.set("k", b"v")
+        with pytest.raises(WrongTypeError):
+            kv.rpush("k", b"x")
+
+    def test_transaction_atomic(self, kv):
+        def txn(s):
+            v = s.incr("a")
+            s.rpush("log", str(v).encode())
+            return v
+        assert kv.transaction(txn) == 1
+        assert kv.lrange("log", 0, -1) == [b"1"]
+
+    def test_keys_pattern(self, kv):
+        kv.set("a:1", 1)
+        kv.set("a:2", 2)
+        kv.set("b:1", 3)
+        assert sorted(kv.keys("a:*")) == ["a:1", "a:2"]
+
+    def test_concurrent_incr_is_atomic(self, kv):
+        def bump():
+            for _ in range(200):
+                kv.incr("n")
+        ts = [threading.Thread(target=bump) for _ in range(4)]
+        [t.start() for t in ts]
+        [t.join() for t in ts]
+        assert kv.get("n") == 800
+
+
+class TestLatencyModel:
+    def test_virtual_time_accrues(self):
+        kv = KVStore(LatencyModel(rtt_s=0.001, bandwidth_bps=1e6, scale=0.0))
+        kv.set("k", b"x" * 1000)
+        assert kv.latency.virtual_time == pytest.approx(0.002, rel=0.01)
+
+    def test_scaled_sleep(self):
+        kv = KVStore(LatencyModel(rtt_s=0.1, scale=0.1))
+        t0 = time.monotonic()
+        kv.set("k", 1)
+        assert 0.005 <= time.monotonic() - t0 < 0.1
+
+
+class TestSharded:
+    def test_routing_consistent(self):
+        sh = ShardedKVStore([KVStore(name=f"s{i}") for i in range(4)])
+        for i in range(50):
+            sh.set(f"key-{i}", i)
+        for i in range(50):
+            assert sh.get(f"key-{i}") == i
+        assert sh.dbsize() == 50
+        # keys spread over more than one shard
+        assert sum(1 for s in sh.shards if s.dbsize() > 0) > 1
+
+    def test_hash_tags_colocate(self):
+        sh = ShardedKVStore([KVStore(name=f"s{i}") for i in range(4)])
+        assert sh.shard_for("{u1}:a") is sh.shard_for("{u1}:b")
+
+    def test_blocking_across_shards(self):
+        sh = ShardedKVStore([KVStore(name=f"s{i}") for i in range(4)])
+        out = []
+        t = threading.Thread(
+            target=lambda: out.append(sh.blpop(["{x}:q", "{y}:q"], 3)))
+        t.start()
+        time.sleep(0.05)
+        sh.rpush("{y}:q", b"v")
+        t.join(2)
+        assert out == [("{y}:q", b"v")]

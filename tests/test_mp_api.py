@@ -1,0 +1,406 @@
+"""Behavioural tests for the full transparent multiprocessing API."""
+
+import time
+
+import pytest
+
+from repro.core import mp
+
+
+class TestPool:
+    def test_map_order(self):
+        with mp.Pool(4) as p:
+            assert p.map(lambda x: x * 2, range(20)) == [x * 2 for x in range(20)]
+
+    def test_starmap_apply(self):
+        with mp.Pool(2) as p:
+            assert p.starmap(lambda a, b: a - b, [(5, 3), (1, 1)]) == [2, 0]
+            assert p.apply(lambda a: a + 1, (41,)) == 42
+            r = p.apply_async(lambda: "x")
+            assert r.get(5) == "x"
+            assert r.successful()
+
+    def test_imap(self):
+        with mp.Pool(2) as p:
+            assert list(p.imap(lambda x: x * x, range(6))) == [0, 1, 4, 9, 16, 25]
+            assert sorted(p.imap_unordered(lambda x: x + 1, range(6))) == \
+                [1, 2, 3, 4, 5, 6]
+
+    def test_error_propagates(self):
+        from repro.core.executor import RemoteError
+        with mp.Pool(2) as p:
+            res = p.map_async(lambda x: 1 // x, [1, 0, 2])
+            with pytest.raises(RemoteError, match="ZeroDivisionError"):
+                res.get(10)
+
+    def test_initializer_runs_per_worker(self):
+        from repro.core import get_session
+
+        def init(tag):
+            get_session().store.incr(f"{tag}:inits")
+
+        with mp.Pool(3, initializer=init, initargs=("t",)) as p:
+            p.map(lambda x: x, range(6))
+            assert get_session().store.get("t:inits") == 3
+
+    def test_single_lpush_submission(self):
+        """Paper §3.1.2: a map is one batched submit, not per-task invokes."""
+        from repro.core import get_session
+        with mp.Pool(2) as p:
+            before = get_session().store.metrics.commands.get("RPUSH", 0)
+            p.map(lambda x: x, range(16), chunksize=4)
+            pushes = get_session().store.metrics.commands.get("RPUSH", 0) - before
+            # 1 job submit (4 chunks in one RPUSH) + 4 result pushes
+            assert pushes <= 6
+
+    def test_resize(self):
+        p = mp.Pool(2)
+        try:
+            p.resize(5)
+            time.sleep(0.2)
+            assert p.n_workers == 5
+            assert p.map(lambda x: x, range(10)) == list(range(10))
+        finally:
+            p.terminate()
+            p.join(5)
+
+    def test_callbacks(self):
+        hits = []
+        with mp.Pool(2) as p:
+            r = p.map_async(lambda x: x, [1, 2], callback=hits.append)
+            r.get(5)
+            time.sleep(0.05)
+        assert hits == [[1, 2]]
+
+
+class TestProcess:
+    def test_lifecycle(self):
+        q = mp.Queue()
+        pr = mp.Process(target=lambda q: q.put(21 * 2), args=(q,))
+        assert pr.exitcode is None
+        pr.start()
+        pr.join(5)
+        assert pr.exitcode == 0
+        assert q.get(timeout=1) == 42
+
+    def test_exitcode_on_error(self):
+        pr = mp.Process(target=lambda: 1 / 0)
+        pr.start()
+        pr.join(5)
+        assert pr.exitcode == 1
+
+    def test_active_children_and_names(self):
+        ev = mp.Event()
+        pr = mp.Process(target=lambda ev: ev.wait(5), args=(ev,), name="w1")
+        pr.start()
+        assert pr.name == "w1"
+        assert any(p.name == "w1" for p in mp.active_children())
+        ev.set()
+        pr.join(5)
+
+    def test_current_process_in_child(self):
+        q = mp.Queue()
+
+        def child(q):
+            q.put(mp.current_process().name)
+        pr = mp.Process(target=child, args=(q,), name="childX")
+        pr.start()
+        pr.join(5)
+        assert q.get(timeout=1) == "childX"
+
+
+class TestQueuesAndPipes:
+    def test_fifo_across_processes(self):
+        q = mp.Queue()
+        done = mp.Queue()
+
+        def producer(q, done):
+            for i in range(20):
+                q.put(i)
+            done.put("ok")
+        pr = mp.Process(target=producer, args=(q, done))
+        pr.start()
+        assert done.get(timeout=5) == "ok"
+        assert [q.get(timeout=1) for _ in range(20)] == list(range(20))
+        pr.join()
+
+    def test_bounded_queue_blocks(self):
+        q = mp.Queue(maxsize=2)
+        q.put(1)
+        q.put(2)
+        with pytest.raises(mp.Full):
+            q.put_nowait(3)
+        assert q.full()
+        assert q.get() == 1
+        q.put_nowait(3)
+
+    def test_get_nowait_empty(self):
+        q = mp.Queue()
+        with pytest.raises(mp.Empty):
+            q.get_nowait()
+
+    def test_joinable_queue(self):
+        q = mp.JoinableQueue()
+
+        def consumer(q):
+            while True:
+                item = q.get()
+                q.task_done()
+                if item is None:
+                    return
+        pr = mp.Process(target=consumer, args=(q,))
+        pr.start()
+        for i in range(5):
+            q.put(i)
+        q.put(None)
+        q.join(timeout=10)
+        pr.join(5)
+
+    def test_pipe_duplex(self):
+        a, b = mp.Pipe()
+
+        def echo(conn):
+            conn.send(conn.recv() * 3)
+        pr = mp.Process(target=echo, args=(b,))
+        pr.start()
+        a.send("ab")
+        assert a.recv() == "ababab"
+        pr.join(5)
+
+    def test_pipe_simplex(self):
+        r, w = mp.Pipe(duplex=False)
+        w.send(1)
+        assert r.recv() == 1
+        with pytest.raises(OSError):
+            r.send(2)
+        with pytest.raises(OSError):
+            w.recv_bytes(0.01)
+
+    def test_pipe_poll(self):
+        a, b = mp.Pipe()
+        assert not a.poll()
+        b.send(1)
+        assert a.poll(1.0)
+
+
+class TestSync:
+    def test_lock_mutual_exclusion(self):
+        lock = mp.Lock()
+        val = mp.Value("i", 0, lock=False)
+
+        def bump(lock, val):
+            for _ in range(30):
+                with lock:
+                    val.value += 1
+        ps = [mp.Process(target=bump, args=(lock, val)) for _ in range(3)]
+        [p.start() for p in ps]
+        [p.join(20) for p in ps]
+        assert val.value == 90
+
+    def test_rlock_reentrant(self):
+        rl = mp.RLock()
+        assert rl.acquire()
+        assert rl.acquire()
+        rl.release()
+        rl.release()
+        assert rl.acquire(block=False)
+        rl.release()
+
+    def test_semaphore_counts(self):
+        sem = mp.Semaphore(2)
+        assert sem.acquire(block=False)
+        assert sem.acquire(block=False)
+        assert not sem.acquire(block=False)
+        sem.release()
+        assert sem.acquire(block=False)
+
+    def test_bounded_semaphore_over_release(self):
+        bs = mp.BoundedSemaphore(1)
+        with pytest.raises(ValueError):
+            bs.release()
+
+    def test_event_broadcast(self):
+        ev = mp.Event()
+        q = mp.Queue()
+
+        def waiter(ev, q, i):
+            ev.wait()
+            q.put(i)
+        ps = [mp.Process(target=waiter, args=(ev, q, i)) for i in range(3)]
+        [p.start() for p in ps]
+        time.sleep(0.1)
+        assert q.qsize() == 0
+        ev.set()
+        [p.join(10) for p in ps]
+        assert sorted(q.get(timeout=1) for _ in range(3)) == [0, 1, 2]
+
+    def test_event_set_before_wait(self):
+        ev = mp.Event()
+        ev.set()
+        assert ev.wait(0.1)
+        ev.clear()
+        assert not ev.wait(0.05)
+
+    def test_barrier(self):
+        bar = mp.Barrier(3)
+        q = mp.Queue()
+
+        def arrive(bar, q, i):
+            q.put(("before", i))
+            bar.wait()
+            q.put(("after", i))
+        ps = [mp.Process(target=arrive, args=(bar, q, i)) for i in range(3)]
+        [p.start() for p in ps]
+        [p.join(10) for p in ps]
+        events = [q.get(timeout=1) for _ in range(6)]
+        assert [e[0] for e in events[:3]] == ["before"] * 3
+        assert [e[0] for e in events[3:]] == ["after"] * 3
+
+    def test_barrier_timeout_breaks(self):
+        bar = mp.Barrier(2)
+        with pytest.raises(mp.BrokenBarrierError):
+            bar.wait(timeout=0.05)
+        assert bar.broken
+
+    def test_condition_notify(self):
+        cond = mp.Condition()
+        q = mp.Queue()
+
+        def waiter(cond, q):
+            with cond:
+                cond.wait(5)
+            q.put("woke")
+        pr = mp.Process(target=waiter, args=(cond, q))
+        pr.start()
+        time.sleep(0.15)
+        with cond:
+            cond.notify()
+        assert q.get(timeout=5) == "woke"
+        pr.join(5)
+
+
+class TestSharedCtypes:
+    def test_value_types(self):
+        v = mp.Value("d", 1.5)
+        assert v.value == 1.5
+        v.value = 2.5
+        assert v.value == 2.5
+        i = mp.Value("i", 7)
+        i.value += 1
+        assert i.value == 8
+
+    def test_array_slices(self):
+        arr = mp.Array("i", range(10))
+        assert arr[3] == 3
+        assert arr[2:5] == [2, 3, 4]
+        arr[0] = 99
+        arr[5:8] = [50, 60, 70]
+        assert arr[:] == [99, 1, 2, 3, 4, 50, 60, 70, 8, 9]
+        assert len(arr) == 10
+
+    def test_array_across_processes(self):
+        arr = mp.Array("d", [0.0] * 6)
+
+        def fill(arr, lo, hi):
+            for i in range(lo, hi):
+                arr[i] = float(i * i)
+        ps = [mp.Process(target=fill, args=(arr, 0, 3)),
+              mp.Process(target=fill, args=(arr, 3, 6))]
+        [p.start() for p in ps]
+        [p.join(10) for p in ps]
+        assert arr[:] == [float(i * i) for i in range(6)]
+
+    def test_get_lock(self):
+        arr = mp.Array("i", 3)
+        with arr.get_lock():
+            arr[0] = 1
+        raw = mp.RawArray("i", 3)
+        with pytest.raises(AttributeError):
+            raw.get_lock()
+
+
+class TestManager:
+    def test_dict_list_namespace(self):
+        m = mp.Manager()
+        d = m.dict()
+        l = m.list([1])
+        ns = m.Namespace(x=0)
+
+        def child(d, l, ns):
+            d["k"] = {"nested": [1, 2]}
+            d[("tuple", "key")] = 3
+            l.append(2)
+            l[0] = 10
+            ns.x = "done"
+        pr = mp.Process(target=child, args=(d, l, ns))
+        pr.start()
+        pr.join(10)
+        assert d["k"] == {"nested": [1, 2]}
+        assert d[("tuple", "key")] == 3
+        assert list(l) == [10, 2]
+        assert ns.x == "done"
+
+    def test_dict_methods(self):
+        m = mp.Manager()
+        d = m.dict({"a": 1})
+        d.update({"b": 2}, c=3)
+        assert len(d) == 3
+        assert sorted(d.keys()) == ["a", "b", "c"]
+        assert d.pop("a") == 1
+        assert d.get("missing", 9) == 9
+        assert d.setdefault("z", 5) == 5
+        assert "z" in d
+        assert d.copy() == {"b": 2, "c": 3, "z": 5}
+
+    def test_registered_class_rmi(self):
+        class Counter:
+            def __init__(self, start=0):
+                self.n = start
+
+            def inc(self, k=1):
+                self.n += k
+                return self.n
+
+        m = mp.Manager()
+        m.register("Counter", Counter)
+        c = m.Counter(10)
+
+        def child(c):
+            for _ in range(5):
+                c.inc(2)
+        ps = [mp.Process(target=child, args=(c,)) for _ in range(2)]
+        [p.start() for p in ps]
+        [p.join(10) for p in ps]
+        assert c.n == 30
+
+
+class TestRefcounting:
+    def test_queue_deleted_at_zero_refs(self):
+        from repro.core import get_session
+        q = mp.Queue()
+        q.put(1)
+        uid = q.uid
+        store = get_session().store
+        assert store.exists("{" + uid + "}:items")
+        q.close()
+        assert not store.exists("{" + uid + "}:items")
+        assert not store.exists("{" + uid + "}:refs")
+
+    def test_child_reference_keeps_alive(self):
+        from repro.core import serialization, get_session
+        q = mp.Queue()
+        blob = serialization.dumps(q)  # simulates passing to a child
+        store = get_session().store
+        q.close()
+        assert store.exists("{" + q.uid + "}:refs")  # child ref remains
+        q2 = serialization.loads(blob)
+        q2.put(5)
+        assert q2.get(timeout=1) == 5
+        q2.close()
+        assert not store.exists("{" + q.uid + "}:refs")
+
+    def test_ttl_backstop_set(self):
+        from repro.core import get_session
+        q = mp.Queue()
+        ttl = get_session().store.ttl("{" + q.uid + "}:refs")
+        assert 0 < ttl <= 3600

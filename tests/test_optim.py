@@ -1,0 +1,109 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         cosine_schedule, dequantize_int8, quantize_int8,
+                         wsd_schedule)
+
+
+def _reference_adamw(params, grads, m, v, t, lr, b1, b2, eps, wd):
+    """Textbook AdamW in numpy."""
+    out_p, out_m, out_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        out_m[k] = b1 * m[k] + (1 - b1) * g
+        out_v[k] = b2 * v[k] + (1 - b2) * g * g
+        mhat = out_m[k] / (1 - b1 ** t)
+        vhat = out_v[k] / (1 - b2 ** t)
+        out_p[k] = params[k] - lr * (mhat / (np.sqrt(vhat) + eps)
+                                     + wd * params[k])
+    return out_p, out_m, out_v
+
+
+class TestAdamW:
+    def test_matches_reference_math(self):
+        rng = np.random.default_rng(0)
+        params = {"w": rng.standard_normal((4, 5)).astype(np.float32),
+                  "b": rng.standard_normal(5).astype(np.float32)}
+        grads = {k: rng.standard_normal(v.shape).astype(np.float32)
+                 for k, v in params.items()}
+        cfg = AdamWConfig(lr=1e-2, b1=0.9, b2=0.95, eps=1e-8,
+                          weight_decay=0.1, grad_clip_norm=None)
+        jp = {k: jnp.asarray(v) for k, v in params.items()}
+        state = adamw_init(cfg, jp)
+        new_p, new_state, _ = adamw_update(
+            cfg, {k: jnp.asarray(v) for k, v in grads.items()}, state, jp)
+        ref_p, _, _ = _reference_adamw(
+            params, grads,
+            {k: np.zeros_like(v) for k, v in params.items()},
+            {k: np.zeros_like(v) for k, v in params.items()},
+            1, 1e-2, 0.9, 0.95, 1e-8, 0.1)
+        for k in params:
+            np.testing.assert_allclose(np.array(new_p[k]), ref_p[k],
+                                       atol=1e-6, rtol=1e-6)
+
+    def test_grad_clipping(self):
+        cfg = AdamWConfig(lr=1.0, grad_clip_norm=1.0, weight_decay=0.0)
+        p = {"w": jnp.zeros(4)}
+        st = adamw_init(cfg, p)
+        big = {"w": jnp.full(4, 100.0)}
+        _, _, m = adamw_update(cfg, big, st, p)
+        assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+    @pytest.mark.parametrize("sd", ["float32", "bfloat16", "int8"])
+    def test_state_dtypes_train_similarly(self, sd):
+        cfg = AdamWConfig(lr=0.1, state_dtype=sd, weight_decay=0.0,
+                          grad_clip_norm=None)
+        p = {"w": jnp.ones((8, 256))}
+        st = adamw_init(cfg, p)
+        target = jnp.zeros((8, 256))
+        for _ in range(20):
+            g = {"w": p["w"] - target}
+            p, st, _ = adamw_update(cfg, g, st, p)
+        # all precisions should have moved most of the way to the target
+        assert float(jnp.abs(p["w"]).mean()) < 0.3
+
+    def test_schedule_callable_lr(self):
+        cfg = AdamWConfig(lr=lambda s: wsd_schedule(s, 1.0, 10, 100, 50))
+        assert float(cfg.lr_at(0)) == pytest.approx(0.1)
+        assert float(cfg.lr_at(50)) == pytest.approx(1.0)
+
+
+class TestSchedules:
+    def test_wsd_phases(self):
+        lr = lambda s: float(wsd_schedule(s, 1.0, warmup_steps=10,  # noqa
+                                          stable_steps=80, decay_steps=100))
+        assert lr(0) == pytest.approx(0.1)
+        assert lr(9) == pytest.approx(1.0)
+        assert lr(50) == pytest.approx(1.0)      # stable plateau
+        assert lr(89) == pytest.approx(1.0)
+        assert 0.01 <= lr(140) < 1.0             # decaying
+        assert lr(190) == pytest.approx(0.01, rel=0.01)
+
+    def test_cosine(self):
+        assert float(cosine_schedule(0, 1.0, 10, 100)) == pytest.approx(0.1)
+        assert float(cosine_schedule(100, 1.0, 10, 100)) == pytest.approx(0.1, rel=0.05)
+
+
+class TestQuant:
+    def test_roundtrip_error(self):
+        x = jnp.asarray(np.random.default_rng(1).standard_normal((7, 33)) * 5)
+        back = dequantize_int8(quantize_int8(x))
+        assert float(jnp.abs(back - x).max()) < 5 * 2 / 127 * 1.5
+
+    def test_shapes_preserved(self):
+        for shape in [(4,), (3, 5), (2, 3, 7)]:
+            x = jnp.ones(shape)
+            t = quantize_int8(x)
+            assert t.q.shape == shape
+            assert t.scale.shape == shape[:-1]
+            assert dequantize_int8(t).shape == shape
+
+    def test_pytree_registration(self):
+        t = quantize_int8(jnp.ones((4, 8)))
+        leaves = jax.tree.leaves(t)
+        assert len(leaves) == 2
+        t2 = jax.tree.map(lambda x: x, t)
+        assert t2.shape == (4, 8)

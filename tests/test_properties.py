@@ -1,0 +1,185 @@
+"""Property-based tests (hypothesis) for system invariants."""
+
+import threading
+
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import mp, serialization
+from repro.core.kvstore import KVStore, ShardedKVStore
+
+FAST = settings(max_examples=25, deadline=None,
+                suppress_health_check=[HealthCheck.function_scoped_fixture,
+                                       HealthCheck.too_slow])
+
+
+# --------------------------------------------------------------- KV model
+
+
+@FAST
+@given(ops=st.lists(st.one_of(
+    st.tuples(st.just("rpush"), st.binary(max_size=8)),
+    st.tuples(st.just("lpush"), st.binary(max_size=8)),
+    st.tuples(st.just("lpop"), st.none()),
+    st.tuples(st.just("rpop"), st.none()),
+), max_size=60))
+def test_list_matches_python_model(ops):
+    kv = KVStore()
+    model = []
+    for op, arg in ops:
+        if op == "rpush":
+            kv.rpush("k", arg)
+            model.append(arg)
+        elif op == "lpush":
+            kv.lpush("k", arg)
+            model.insert(0, arg)
+        elif op == "lpop":
+            assert kv.lpop("k") == (model.pop(0) if model else None)
+        elif op == "rpop":
+            assert kv.rpop("k") == (model.pop() if model else None)
+    assert kv.lrange("k", 0, -1) == model
+
+
+@FAST
+@given(items=st.lists(st.binary(max_size=16), max_size=40),
+       shards=st.integers(1, 5))
+def test_sharded_store_equivalent_to_single(items, shards):
+    sh = ShardedKVStore([KVStore(name=f"s{i}") for i in range(shards)])
+    for i, b in enumerate(items):
+        sh.set(f"k{i}", b)
+    for i, b in enumerate(items):
+        assert sh.get(f"k{i}") == b
+
+
+# ------------------------------------------------------------ queue FIFO
+
+
+@FAST
+@given(items=st.lists(st.integers(), min_size=1, max_size=30))
+def test_queue_fifo_single_consumer(items):
+    q = mp.Queue()
+    for x in items:
+        q.put(x)
+    assert [q.get(timeout=1) for _ in items] == items
+    q.close()
+
+
+@FAST
+@given(items=st.lists(st.integers(), min_size=1, max_size=20),
+       n_consumers=st.integers(1, 4))
+def test_queue_multiconsumer_partition(items, n_consumers):
+    """Every item delivered exactly once across concurrent consumers."""
+    q = mp.Queue()
+    got, lock = [], threading.Lock()
+
+    def consume():
+        while True:
+            try:
+                v = q.get(timeout=0.2)
+            except mp.Empty:
+                return
+            with lock:
+                got.append(v)
+
+    for x in items:
+        q.put(x)
+    ts = [threading.Thread(target=consume) for _ in range(n_consumers)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert sorted(got) == sorted(items)
+    q.close()
+
+
+# ------------------------------------------------- semaphore invariant
+
+
+@FAST
+@given(value=st.integers(1, 4), n_threads=st.integers(2, 6))
+def test_semaphore_never_exceeds_capacity(value, n_threads):
+    sem = mp.Semaphore(value)
+    active = [0]
+    peak = [0]
+    lock = threading.Lock()
+
+    def worker():
+        for _ in range(5):
+            with sem:
+                with lock:
+                    active[0] += 1
+                    peak[0] = max(peak[0], active[0])
+                with lock:
+                    active[0] -= 1
+
+    ts = [threading.Thread(target=worker) for _ in range(n_threads)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert peak[0] <= value
+    assert sem.get_value() == value
+
+
+# ------------------------------------------------------ manager vs dict
+
+
+@FAST
+@given(ops=st.lists(st.tuples(
+    st.sampled_from(["set", "del", "update"]),
+    st.integers(0, 5), st.integers(-100, 100)), max_size=30))
+def test_manager_dict_matches_dict(ops):
+    m = mp.Manager()
+    d = m.dict()
+    model = {}
+    for op, k, v in ops:
+        if op == "set":
+            d[k] = v
+            model[k] = v
+        elif op == "del":
+            if k in model:
+                del d[k]
+                del model[k]
+        elif op == "update":
+            d.update({k: v, "fixed": op})
+            model.update({k: v, "fixed": op})
+    assert d.copy() == model
+    assert len(d) == len(model)
+    assert sorted(map(repr, d.keys())) == sorted(map(repr, model.keys()))
+
+
+# ------------------------------------------------- serialization roundtrip
+
+
+@FAST
+@given(obj=st.recursive(
+    st.one_of(st.integers(), st.floats(allow_nan=False), st.text(max_size=8),
+              st.binary(max_size=8), st.booleans(), st.none()),
+    lambda children: st.one_of(
+        st.lists(children, max_size=4),
+        st.dictionaries(st.text(max_size=4), children, max_size=4),
+        st.tuples(children, children)),
+    max_leaves=12))
+def test_serialization_roundtrip(obj):
+    assert serialization.loads(serialization.dumps(obj)) == obj
+
+
+@FAST
+@given(a=st.integers(-1000, 1000), b=st.integers(-1000, 1000))
+def test_closure_roundtrip(a, b):
+    def make(x):
+        def inner(y):
+            return x + y + b
+        return inner
+    fn = serialization.loads(serialization.dumps(make(a)))
+    assert fn(10) == a + 10 + b
+
+
+# ------------------------------------------------------- shared Array
+
+
+@FAST
+@given(values=st.lists(st.integers(-2**31, 2**31 - 1), min_size=1,
+                       max_size=24))
+def test_array_roundtrip_and_slices(values):
+    arr = mp.Array("q", values)
+    assert arr[:] == values
+    assert arr[::2] == values[::2]
+    rev = list(reversed(values))
+    arr[:] = rev
+    assert arr.tolist() == rev

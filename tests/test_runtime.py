@@ -1,0 +1,183 @@
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import get_session
+from repro.runtime import (CheckpointManager, ElasticPolicy, ErrorFeedback,
+                           JobFailedError, JobRunner, int8_compress,
+                           int8_decompress, topk_compress, topk_decompress)
+
+
+class TestJobRunner:
+    def test_ordered_results(self):
+        r = JobRunner(n_workers=3)
+        try:
+            assert r.run(lambda x: x * 10, range(12)) == \
+                [x * 10 for x in range(12)]
+        finally:
+            r.shutdown()
+
+    def test_retry_on_transient_failure(self):
+        r = JobRunner(n_workers=2, lease_ttl=0.5)
+
+        def flaky(x):
+            from repro.core import get_session
+            n = get_session().store.incr(f"flk:{x}")
+            if n < 3:
+                raise RuntimeError("transient")
+            return x
+        try:
+            assert r.run(flaky, [7, 8]) == [7, 8]
+            assert r.stats["retries"] >= 4
+        finally:
+            r.shutdown()
+
+    def test_permanent_failure_raises(self):
+        r = JobRunner(n_workers=2, max_retries=1, lease_ttl=0.5)
+
+        def always(x):
+            raise ValueError("permanent")
+        try:
+            with pytest.raises(JobFailedError, match="permanent"):
+                r.run(always, [1])
+        finally:
+            r.shutdown()
+
+    def test_straggler_speculation(self):
+        r = JobRunner(n_workers=4, lease_ttl=0.4, speculate_factor=3.0)
+
+        def slow_one(x):
+            time.sleep(1.2 if x == 3 else 0.03)
+            return x
+        try:
+            assert r.run(slow_one, range(8)) == list(range(8))
+            assert r.stats["speculations"] >= 1
+        finally:
+            r.shutdown()
+
+    def test_elastic_resize(self):
+        r = JobRunner(n_workers=1)
+        try:
+            r.resize(4)
+            assert r.run(lambda x: x, range(8)) == list(range(8))
+            r.resize(2)
+        finally:
+            r.shutdown()
+
+
+class TestCheckpoint:
+    def test_roundtrip_pytree(self):
+        ck = CheckpointManager(prefix="c1")
+        state = {"a": jnp.arange(6.0), "b": {"c": np.ones((2, 3)),
+                                             "d": jnp.int32(5)}}
+        info = ck.save(3, state)
+        assert info["n_leaves"] == 3
+        step, restored = ck.restore()
+        assert step == 3
+        np.testing.assert_array_equal(restored["a"], state["a"])
+        np.testing.assert_array_equal(restored["b"]["c"], state["b"]["c"])
+
+    def test_latest_pointer_and_gc(self):
+        ck = CheckpointManager(prefix="c2", keep=2)
+        st = {"x": jnp.zeros(3)}
+        for s in (1, 2, 3, 4):
+            ck.save(s, st)
+        assert ck.latest_step() == 4
+        assert ck.steps() == [3, 4]  # old ones GC'd
+
+    def test_async_save(self):
+        ck = CheckpointManager(prefix="c3")
+        ck.save_async(7, {"x": jnp.ones(4)})
+        ck.wait()
+        step, restored = ck.restore()
+        assert step == 7
+
+    def test_parallel_io_through_runner(self):
+        r = JobRunner(n_workers=3)
+        try:
+            ck = CheckpointManager(prefix="c4", runner=r)
+            state = {f"w{i}": jnp.full((8,), float(i)) for i in range(6)}
+            ck.save(1, state)
+            _, restored = ck.restore(1)
+            for i in range(6):
+                np.testing.assert_array_equal(restored[f"w{i}"],
+                                              state[f"w{i}"])
+        finally:
+            r.shutdown()
+
+    def test_restore_missing_raises(self):
+        ck = CheckpointManager(prefix="c5")
+        with pytest.raises(FileNotFoundError):
+            ck.restore()
+
+
+class TestElasticPolicy:
+    def test_scale_up_on_backlog(self):
+        p = ElasticPolicy(min_workers=1, max_workers=16,
+                          backlog_per_worker=2.0)
+        assert p.decide(n_workers=2, backlog=20, idle_cycles=0) > 2
+
+    def test_scale_down_when_idle(self):
+        p = ElasticPolicy(min_workers=1, idle_cycles_before_shrink=3)
+        assert p.decide(n_workers=8, backlog=0, idle_cycles=5) < 8
+        assert p.decide(n_workers=8, backlog=0, idle_cycles=1) == 8
+
+    def test_bounds(self):
+        p = ElasticPolicy(min_workers=2, max_workers=4)
+        assert p.decide(1000, backlog=10 ** 6, idle_cycles=0) == 4
+        assert p.decide(2, backlog=0, idle_cycles=99) == 2
+
+
+class TestCompression:
+    def test_topk_roundtrip_keeps_largest(self):
+        x = jnp.asarray(np.random.default_rng(0).standard_normal((64, 32)))
+        idx, vals, shape = topk_compress(x, 0.1)
+        back = topk_decompress(idx, vals, shape)
+        kept = np.abs(np.asarray(back)).ravel()
+        thresh = np.sort(np.abs(np.asarray(x)).ravel())[-len(vals)]
+        assert (kept[kept > 0] >= thresh - 1e-6).all()
+
+    def test_int8_error_bounded(self):
+        x = jnp.asarray(np.random.default_rng(0).standard_normal((32, 256)))
+        err = jnp.abs(int8_decompress(int8_compress(x)) - x)
+        # row-absmax/127 quantization step bound
+        assert float(err.max()) < float(jnp.abs(x).max()) / 100
+
+    def test_error_feedback_conserves_gradient_mass(self):
+        ef = ErrorFeedback(ratio=0.1)
+        g = {"w": jnp.ones((100,))}
+        total = jnp.zeros((100,))
+        for _ in range(10):
+            payload = ef.compress_tree(g)
+            total = total + ef.decompress_tree(payload, g)["w"]
+        residual = ef._residual["['w']"]
+        # transmitted + residual == everything that was ever fed in
+        np.testing.assert_allclose(float(total.sum() + residual.sum()),
+                                   10 * 100, rtol=1e-5)
+        # EF rotated through coordinates: most were sent at least once
+        assert float((total > 0).mean()) > 0.9
+
+
+class TestElasticPool:
+    def test_controller_scales_pool(self):
+        from repro.core import mp
+        from repro.runtime import ElasticController
+        pool = mp.Pool(1)
+        try:
+            ctl = ElasticController(
+                pool, ElasticPolicy(min_workers=1, max_workers=8,
+                                    backlog_per_worker=1.0,
+                                    idle_cycles_before_shrink=100),
+                interval=0.05)
+            with ctl:
+                res = pool.map_async(lambda x: time.sleep(0.05) or x,
+                                     range(40), chunksize=1)
+                res.get(30)
+            assert ctl.decisions, "controller never scaled"
+            assert max(d[2] for d in ctl.decisions) > 1
+        finally:
+            pool.terminate()
+            pool.join(5)

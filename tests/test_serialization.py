@@ -1,0 +1,89 @@
+import functools
+
+import numpy as np
+import pytest
+
+from repro.core import serialization as ser
+
+GLOBAL = 13
+
+
+def module_fn(x):
+    return x + GLOBAL
+
+
+def recursive(n):
+    return 1 if n <= 1 else n * recursive(n - 1)
+
+
+class TestSerialization:
+    def test_importable_by_reference(self):
+        fn = ser.loads(ser.dumps(module_fn))
+        assert fn(1) == 14
+
+    def test_lambda_with_global(self):
+        fn = ser.loads(ser.dumps(lambda x: x * GLOBAL))
+        assert fn(2) == 26
+
+    def test_closure(self):
+        def make(a):
+            b = a * 2
+
+            def inner(c):
+                return a + b + c
+            return inner
+        fn = ser.loads(ser.dumps(make(5)))
+        assert fn(1) == 16
+
+    def test_recursive_function(self):
+        fn = ser.loads(ser.dumps(recursive))
+        assert fn(5) == 120
+
+    def test_local_recursive_function(self):
+        def fib(n):
+            return n if n < 2 else fib(n - 1) + fib(n - 2)
+        fn = ser.loads(ser.dumps(fib))
+        assert fn(10) == 55
+
+    def test_defaults_and_kwdefaults(self):
+        def f(a, b=2, *, c=3):
+            return a + b + c
+        fn = ser.loads(ser.dumps(f))
+        assert fn(1) == 6
+        assert fn(1, b=0, c=0) == 1
+
+    def test_partial(self):
+        fn = ser.loads(ser.dumps(functools.partial(module_fn, 7)))
+        assert fn() == 20
+
+    def test_numpy_payload(self):
+        arr = np.arange(12).reshape(3, 4)
+        out = ser.loads(ser.dumps(arr))
+        np.testing.assert_array_equal(out, arr)
+
+    def test_captured_module(self):
+        import math
+
+        def f(x):
+            return math.sqrt(x)
+        fn = ser.loads(ser.dumps(f))
+        assert fn(9) == 3.0
+
+    def test_dynamic_class(self):
+        class Point:
+            def __init__(self, x):
+                self.x = x
+
+            def double(self):
+                return self.x * 2
+        cls = ser.loads(ser.dumps(Point))
+        assert cls(4).double() == 8
+
+    def test_nested_functions_in_containers(self):
+        obj = {"fns": [lambda x: x + 1, lambda x: x * 2], "n": 5}
+        out = ser.loads(ser.dumps(obj))
+        assert out["fns"][0](1) == 2
+        assert out["fns"][1](3) == 6
+
+    def test_payload_size(self):
+        assert ser.payload_size({"a": 1}) > 0

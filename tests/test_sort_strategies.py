@@ -1,0 +1,30 @@
+"""Paper Table 3 correctness: all three sort strategies produce sorted
+output, and their KV command profiles have the paper's ordering
+(inplace >> localcopy > message)."""
+
+import numpy as np
+
+from benchmarks.bench_sort import _run_strategy
+from repro.core import get_session
+
+
+def test_all_strategies_sort_correctly():
+    rng = np.random.default_rng(0)
+    data = rng.random(200).tolist()
+    expected = sorted(data)
+    for strategy in ("inplace", "localcopy", "message"):
+        assert _run_strategy(strategy, list(data), 4) == expected, strategy
+
+
+def test_command_count_ordering_matches_paper():
+    rng = np.random.default_rng(1)
+    data = rng.random(120).tolist()
+    counts = {}
+    for strategy in ("inplace", "localcopy", "message"):
+        store = get_session().store
+        before = store.metrics.total_commands()
+        _run_strategy(strategy, list(data), 4)
+        counts[strategy] = store.metrics.total_commands() - before
+    # Table 3's lesson in command-space
+    assert counts["inplace"] > 10 * counts["localcopy"]
+    assert counts["message"] < counts["localcopy"]

@@ -1,0 +1,87 @@
+import pytest
+
+from repro.core import ObjectStore
+from repro.core import storage as st
+
+
+class TestObjectStore:
+    def test_put_get_head_delete(self):
+        s = ObjectStore()
+        s.put("a/b", b"data")
+        assert s.get("a/b") == b"data"
+        assert s.head("a/b") == 4
+        assert s.exists("a/b")
+        assert s.list("a/") == ["a/b"]
+        assert s.delete("a/b") == 1
+        with pytest.raises(KeyError):
+            s.get("a/b")
+
+    def test_immutable_semantics(self):
+        s = ObjectStore()
+        s.put("k", b"v1")
+        s.put("k", b"v2")  # whole-object overwrite
+        assert s.get("k") == b"v2"
+
+
+class TestFileFacade:
+    def test_write_read_text(self):
+        with st.open("dir/file.txt", "w") as f:
+            f.write("hello ")
+            f.write("world")
+        with st.open("dir/file.txt") as f:
+            assert f.read() == "hello world"
+
+    def test_binary_and_seek(self):
+        with st.open("b.bin", "wb") as f:
+            f.write(b"0123456789")
+        with st.open("b.bin", "rb") as f:
+            f.seek(5)
+            assert f.read(3) == b"567"
+            assert f.tell() == 8
+
+    def test_append_rewrites(self):
+        with st.open("log", "w") as f:
+            f.write("a\n")
+        with st.open("log", "a") as f:
+            f.write("b\n")
+        with st.open("log") as f:
+            assert list(f) == ["a\n", "b\n"]
+
+    def test_missing_file(self):
+        with pytest.raises(FileNotFoundError):
+            st.open("nope")
+
+    def test_exclusive_create(self):
+        with st.open("x", "x") as f:
+            f.write("1")
+        with pytest.raises(FileExistsError):
+            st.open("x", "x")
+
+    def test_path_module(self):
+        with st.open("a/b/c.txt", "w") as f:
+            f.write("z")
+        assert st.path.exists("a/b/c.txt")
+        assert st.path.isfile("a/b/c.txt")
+        assert st.path.isdir("a/b")
+        assert st.path.getsize("a/b/c.txt") == 1
+        assert st.path.join("a", "b/", "c") == "a/b/c"
+        assert st.path.basename("a/b/c.txt") == "c.txt"
+        assert st.path.dirname("a/b/c.txt") == "a/b"
+        assert st.listdir("a") == ["b"]
+        st.remove("a/b/c.txt")
+        assert not st.path.exists("a/b/c.txt")
+
+
+class TestKVObjectStore:
+    def test_backed_by_kv(self):
+        from repro.core import KVObjectStore
+        from repro.core.kvstore import KVStore
+        kv = KVStore()
+        s = KVObjectStore(kv)
+        s.put("k1", b"v1")
+        s.put("dir/k2", b"v2")
+        assert s.get("k1") == b"v1"
+        assert s.head("dir/k2") == 2
+        assert s.list("dir/") == ["dir/k2"]
+        assert s.delete("k1") == 1
+        assert not s.exists("k1")
