@@ -38,14 +38,18 @@ def run(quick: bool = False) -> List[Row]:
     for size in sizes:
         reps = 3 if size > 1_000_000 else 20
         payload = b"x" * size
-        paper_session(scale=1.0, invocation=False)
+        sess = paper_session(scale=1.0, invocation=False)
         remote = _rtt(payload, reps)
+        # Pipelining health: commands executed per modeled round trip.
+        # 1.0 = every command paid a full RTT; higher = batching worked.
+        cmds = sess.store.metrics.total_commands()
+        cpr = cmds / max(sess.store.latency.charges, 1)
         local_session()
         local = _rtt(payload, reps)
         p_remote, p_local = PAPER[size]
         rows.append(row(
             f"latency/pipe/{size//1024}KB", remote,
             f"remote={remote*1000:.3f}ms local={local*1000:.3f}ms "
-            f"ratio={remote/max(local,1e-9):.0f}x "
+            f"ratio={remote/max(local,1e-9):.0f}x cmds/rtt={cpr:.2f} "
             f"[paper remote={p_remote} local={p_local}]"))
     return rows

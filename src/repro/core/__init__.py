@@ -7,7 +7,8 @@ ObjectStore). Applications swap ``import multiprocessing`` for
 
 from . import mp  # noqa: F401  (the drop-in module)
 from .executor import FunctionExecutor, RemoteError, FunctionTimeoutError  # noqa: F401
-from .kvstore import KVStore, ShardedKVStore, LatencyModel, PAPER_REMOTE_LATENCY  # noqa: F401
+from .kvstore import (KVStore, ShardedKVStore, LatencyModel,  # noqa: F401
+                      PAPER_REMOTE_LATENCY, Pipeline, PipelineError)
 from .kvserver import KVServer, KVClient  # noqa: F401
 from .session import Session, get_session, set_session, reset_session, configure  # noqa: F401
 from .storage import ObjectStore, KVObjectStore, StorageLatency, PAPER_S3_LATENCY  # noqa: F401

@@ -2,63 +2,218 @@
 
 The paper's workers are AWS Lambda containers that reach Redis over TCP in
 the same VPC subnet. This module provides the equivalent remote mode: a
-length-prefixed framed protocol (command name + pickled args) served by a
-thread-per-connection server over a shared ``KVStore`` — whose global lock
-preserves Redis's single-threaded atomicity — plus a client exposing the
-same method surface, so every IPC primitive runs unchanged against a
-genuinely remote store (see tests/test_kvserver.py).
+framed protocol served by a thread-per-connection server over a shared
+``KVStore`` — whose global lock preserves Redis's single-threaded
+atomicity — plus a client exposing the same method surface, so every IPC
+primitive runs unchanged against a genuinely remote store.
 
-Frame format: 4-byte big-endian length, then pickle((cmd, args, kwargs)).
-Response: 4-byte length, then pickle((ok: bool, value_or_exception)).
+Wire format (version 2, multi-part / zero-copy)::
+
+    frame    := u32 word, rest
+    word MSB set   -> multi-part: nparts = word & 0x7FFFFFFF, then
+                      nparts x u32 part lengths, then the parts themselves.
+                      part[0] = pickle-5 payload (out-of-band descriptors),
+                      part[1:] = raw buffers (numpy arrays, large bytes)
+                      referenced by the payload — never copied into it.
+    word MSB clear -> legacy (v1): word = length of a single in-band
+                      pickled payload. The server answers each request in
+                      the dialect it arrived in, so old clients interop.
+
+    request  := (cmd: str, args: tuple, kwargs: dict)
+    response := (ok: bool, value_or_exception)
+
+Frames are written with scatter-gather ``sendmsg`` (header + payload +
+buffers in one syscall, no concatenation copy) and read with ``recv_into``
+into preallocated buffers (no quadratic ``+=`` reassembly).
+
+Round-trip accounting on this transport:
+
+* one command               = 1 RTT (unchanged);
+* ``KVClient.pipeline()``   = 1 RTT for N commands — transactional mode
+  ships one ``execute_batch`` frame the server runs under a single store
+  lock acquisition; non-transactional mode gather-writes the N frames in
+  buffer-bounded chunks with responses drained between chunks (commands
+  interleave with other clients);
+* an exception mid-batch never desyncs framing: every queued command
+  yields exactly one result and the first error is raised only after all
+  responses are drained.
 """
 
 from __future__ import annotations
 
+import pickle
 import socket
 import socketserver
 import struct
 import threading
-from typing import Any, Optional, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 from . import serialization
-from .kvstore import KVStore
+from .kvstore import KVStore, Pipeline
 
 __all__ = ["KVServer", "KVClient"]
 
 _HDR = struct.Struct("!I")
+_MULTI = 0x80000000
+_MAX_PARTS = 1 << 20        # sanity bound on frame part count
+_IOV_CHUNK = 64             # buffers per sendmsg call (stay under IOV_MAX)
+_SOCK_BUF = 1 << 20         # SO_SNDBUF/SO_RCVBUF: size for 1MB+ payloads
+#: max request bytes written per non-transactional pipeline chunk before
+#: draining responses; must stay below the combined in-flight socket
+#: buffering so a chunk's tail can never wedge behind unread responses.
+_PIPELINE_CHUNK_BYTES = 512 * 1024
+_PIPELINE_CHUNK_BYTES_LEGACY = 48 * 1024   # legacy sockets keep OS defaults
 
 
-def _send_frame(sock: socket.socket, payload: bytes) -> None:
-    sock.sendall(_HDR.pack(len(payload)) + payload)
+def _tune(sock: socket.socket) -> None:
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    try:
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, _SOCK_BUF)
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, _SOCK_BUF)
+    except OSError:
+        pass  # platform cap; defaults still work
+
+#: Dialect spoken by ``legacy_protocol=True`` clients — the seed's exact
+#: wire behavior (single in-band frame, default pickle protocol), kept so
+#: benchmarks can measure before/after on one server.
+_LEGACY_PICKLE_PROTOCOL = pickle.DEFAULT_PROTOCOL
 
 
-def _recv_exactly(sock: socket.socket, n: int) -> Optional[bytes]:
-    buf = b""
-    while len(buf) < n:
-        chunk = sock.recv(n - len(buf))
-        if not chunk:
+# ---------------------------------------------------------------------------
+# Framing
+# ---------------------------------------------------------------------------
+
+
+def _sendv(sock: socket.socket, buffers: Sequence[Any]) -> None:
+    """Gather-write every buffer, handling partial sends, without ever
+    concatenating the payload (the zero-copy half of the protocol)."""
+    bufs: List[memoryview] = []
+    for b in buffers:
+        m = memoryview(b)
+        if m.nbytes:
+            bufs.append(m.cast("B") if m.format != "B" or m.ndim != 1 else m)
+    i = 0  # index advance, not pop(0): many-buffer flushes stay linear
+    while i < len(bufs):
+        sent = sock.sendmsg(bufs[i:i + _IOV_CHUNK])
+        while sent:
+            b = bufs[i]
+            if sent >= b.nbytes:
+                sent -= b.nbytes
+                i += 1
+            else:
+                bufs[i] = b[sent:]
+                sent = 0
+
+
+def _frame_parts(parts: Sequence[Any]) -> List[Any]:
+    """Header + parts, ready for one `_sendv` gather write."""
+    hdr = bytearray(_HDR.pack(_MULTI | len(parts)))
+    for p in parts:
+        n = memoryview(p).nbytes
+        if n >= _MULTI:
+            # the MSB of a length word is the dialect flag; fail loudly
+            # instead of desyncing the peer's framing
+            raise ValueError(f"frame part of {n} bytes exceeds the 2 GiB "
+                             "wire limit — split the payload")
+        hdr += _HDR.pack(n)
+    return [hdr, *parts]
+
+
+def _send_frames(sock: socket.socket, parts: Sequence[Any]) -> None:
+    _sendv(sock, _frame_parts(parts))
+
+
+def _encode_frames(obj: Any) -> List[Any]:
+    payload, buffers = serialization.dumps_oob(obj)
+    return _frame_parts([payload, *buffers])
+
+
+def _recv_into_new(sock: socket.socket, n: int) -> Optional[bytearray]:
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
+    while got < n:
+        # MSG_WAITALL usually fills the request in one syscall
+        r = sock.recv_into(view[got:], n - got, socket.MSG_WAITALL)
+        if not r:
             return None
-        buf += chunk
+        got += r
     return buf
 
 
-def _recv_frame(sock: socket.socket) -> Optional[bytes]:
-    hdr = _recv_exactly(sock, _HDR.size)
+def _recv_frames(sock: socket.socket
+                 ) -> Optional[Tuple[List[Any], bool]]:
+    """Read one frame. Returns ``(parts, is_legacy)`` or None on EOF.
+
+    A multi-part frame's whole body lands in ONE allocation; parts are
+    memoryview slices of it — per-part buffers would pay an mmap + page
+    faults each for large payloads."""
+    hdr = _recv_into_new(sock, _HDR.size)
     if hdr is None:
         return None
-    (length,) = _HDR.unpack(hdr)
-    return _recv_exactly(sock, length)
+    (word,) = _HDR.unpack(hdr)
+    if not word & _MULTI:
+        payload = _recv_into_new(sock, word)
+        return (None if payload is None else ([payload], True))
+    nparts = word & ~_MULTI
+    if not 1 <= nparts <= _MAX_PARTS:
+        raise ConnectionError(f"bad frame: {nparts} parts")
+    lens_raw = _recv_into_new(sock, _HDR.size * nparts)
+    if lens_raw is None:
+        return None
+    lens = [ln for (ln,) in _HDR.iter_unpack(bytes(lens_raw))]
+    body = _recv_into_new(sock, sum(lens))
+    if body is None:
+        return None
+    view = memoryview(body)
+    parts: List[Any] = []
+    offset = 0
+    for ln in lens:
+        parts.append(view[offset:offset + ln])
+        offset += ln
+    return parts, False
+
+
+def _decode(parts: List[bytearray], legacy: bool) -> Any:
+    if legacy:
+        return serialization.loads(bytes(parts[0]))
+    return serialization.loads_oob(parts[0], parts[1:])
+
+
+# legacy (v1) single-frame send, used by the legacy dialect paths
+# (reads go through _recv_frames, which speaks both dialects)
+def _send_frame(sock: socket.socket, payload: bytes) -> None:
+    if len(payload) >= _MULTI:
+        raise ValueError(f"legacy frame of {len(payload)} bytes exceeds the "
+                         "2 GiB wire limit — split the payload")
+    sock.sendall(_HDR.pack(len(payload)) + payload)
+
+
+# ---------------------------------------------------------------------------
+# Server
+# ---------------------------------------------------------------------------
 
 
 class _Handler(socketserver.BaseRequestHandler):
     def handle(self) -> None:
         store: KVStore = self.server.store  # type: ignore[attr-defined]
+        tuned = False
         while True:
-            frame = _recv_frame(self.request)
-            if frame is None:
-                return
             try:
-                cmd, args, kwargs = serialization.loads(frame)
+                got = _recv_frames(self.request)
+            except (OSError, ConnectionError):
+                return
+            if got is None:
+                return
+            parts, legacy = got
+            if not tuned and not legacy:
+                # v2 connections get NODELAY + deep buffers. Legacy (v1)
+                # connections keep the seed's untuned socket so the
+                # before/after benchmark measures the seed transport.
+                _tune(self.request)
+                tuned = True
+            try:
+                cmd, args, kwargs = _decode(parts, legacy)
                 if cmd.startswith("_") or not hasattr(store, cmd):
                     raise AttributeError(f"unknown command {cmd!r}")
                 value = getattr(store, cmd)(*args, **kwargs)
@@ -66,7 +221,12 @@ class _Handler(socketserver.BaseRequestHandler):
             except Exception as exc:  # propagate to client
                 resp = (False, exc)
             try:
-                _send_frame(self.request, serialization.dumps(resp))
+                if legacy:
+                    _send_frame(self.request, serialization.dumps(
+                        resp, protocol=_LEGACY_PICKLE_PROTOCOL))
+                else:
+                    payload, buffers = serialization.dumps_oob(resp)
+                    _send_frames(self.request, [payload, *buffers])
             except OSError:
                 return
 
@@ -110,6 +270,11 @@ class KVServer:
         self.stop()
 
 
+# ---------------------------------------------------------------------------
+# Client
+# ---------------------------------------------------------------------------
+
+
 class KVClient:
     """Remote KVStore with the same method interface.
 
@@ -117,10 +282,16 @@ class KVClient:
     commands (``blpop``) occupy their connection server-side, exactly like
     one Redis connection per Lambda container — a shared socket would
     deadlock a thread's LPUSH behind another thread's pending BLPOP.
+
+    ``pipeline()`` batches commands into one flush (see module docstring);
+    ``legacy_protocol=True`` speaks the seed's v1 wire dialect (one
+    in-band pickled frame per command) for A/B benchmarking.
     """
 
-    def __init__(self, address: Tuple[str, int]):
+    def __init__(self, address: Tuple[str, int],
+                 legacy_protocol: bool = False):
         self.address = address
+        self.legacy_protocol = legacy_protocol
         self._tls = threading.local()
         self._all_socks = []
         self._all_lock = threading.Lock()
@@ -130,26 +301,115 @@ class KVClient:
         sock = getattr(self._tls, "sock", None)
         if sock is None:
             sock = socket.create_connection(self.address)
-            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            if self.legacy_protocol:
+                # seed client behavior: NODELAY only, default buffers
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                self._tls.chunk = _PIPELINE_CHUNK_BYTES_LEGACY
+            else:
+                _tune(sock)
+                # The chunked-flush deadlock bound assumes the send buffer
+                # took our sizing; derive the limit from what the kernel
+                # actually granted in case the platform capped it.
+                sndbuf = sock.getsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF)
+                self._tls.chunk = max(
+                    _PIPELINE_CHUNK_BYTES_LEGACY,
+                    min(_PIPELINE_CHUNK_BYTES, sndbuf // 2))
             self._tls.sock = sock
             with self._all_lock:
                 self._all_socks.append(sock)
         return sock
 
+    # -- single command (1 RTT) --------------------------------------------
+
     def _call(self, cmd: str, *args: Any, **kwargs: Any) -> Any:
-        sock = self._sock()
-        _send_frame(sock, serialization.dumps((cmd, args, kwargs)))
-        frame = _recv_frame(sock)
-        if frame is None:
-            raise ConnectionError("kvserver closed the connection")
-        ok, value = serialization.loads(frame)
+        ok, value = self._roundtrip((cmd, args, kwargs))
         if not ok:
             raise value
         return value
 
+    def _roundtrip(self, request: Tuple[str, tuple, dict]) -> Tuple[bool, Any]:
+        sock = self._sock()
+        if self.legacy_protocol:
+            _send_frame(sock, serialization.dumps(
+                request, protocol=_LEGACY_PICKLE_PROTOCOL))
+        else:
+            _sendv(sock, _encode_frames(request))
+        return self._read_response(sock)
+
+    def _read_response(self, sock: socket.socket) -> Tuple[bool, Any]:
+        got = _recv_frames(sock)
+        if got is None:
+            raise ConnectionError("kvserver closed the connection")
+        return _decode(*got)
+
+    # -- pipelining ---------------------------------------------------------
+
+    def pipeline(self, transactional: bool = True) -> "ClientPipeline":
+        """Batch commands into one flush.
+
+        transactional=True (default): the batch ships as a single
+        ``execute_batch`` frame and runs server-side under one store lock
+        acquisition — one RTT, Redis-MULTI semantics (blocking commands
+        are forced non-blocking). transactional=False: frames are
+        gather-written in buffer-bounded chunks with responses drained
+        between chunks (see ``_flush_pipeline``); commands may interleave
+        with other connections and blocking commands block server-side.
+        """
+        return ClientPipeline(self, transactional)
+
+    def _request_frames(self, cmd: Tuple[str, tuple, dict]) -> List[Any]:
+        if self.legacy_protocol:
+            payload = serialization.dumps(cmd, protocol=_LEGACY_PICKLE_PROTOCOL)
+            return [_HDR.pack(len(payload)) + payload]
+        return _encode_frames(cmd)
+
+    def _flush_pipeline(self, cmds: List[Tuple[str, tuple, dict]],
+                        transactional: bool) -> List[Tuple[bool, Any]]:
+        if transactional:
+            ok, value = self._roundtrip(("execute_batch", (cmds,), {}))
+            if not ok:
+                raise value
+            return value
+        # Multi-frame mode: gather-write frames in chunks and drain the
+        # pending responses between chunks. Writing ALL requests before
+        # reading ANY response would deadlock once requests + responses
+        # outgrow the socket buffers in both directions (server blocked
+        # writing a response we aren't reading, us blocked writing requests
+        # it isn't reading). A chunk is at most _PIPELINE_CHUNK_BYTES (or a
+        # single oversized command, which has no undrained responses in
+        # flight), so the unread remainder always fits in kernel buffers.
+        # Every queued command still yields exactly one drained response,
+        # so an error mid-batch cannot desync the framing.
+        sock = self._sock()
+        limit = self._tls.chunk
+        results: List[Tuple[bool, Any]] = []
+        sent = 0
+        chunk: List[Any] = []
+        chunk_cmds = 0
+        chunk_bytes = 0
+        for c in cmds:
+            frames = self._request_frames(c)
+            nbytes = sum(memoryview(f).nbytes for f in frames)
+            if chunk and chunk_bytes + nbytes > limit:
+                _sendv(sock, chunk)
+                sent += chunk_cmds
+                chunk, chunk_cmds, chunk_bytes = [], 0, 0
+                while len(results) < sent:
+                    results.append(self._read_response(sock))
+            chunk.extend(frames)
+            chunk_cmds += 1
+            chunk_bytes += nbytes
+        if chunk:
+            _sendv(sock, chunk)
+            sent += chunk_cmds
+        while len(results) < sent:
+            results.append(self._read_response(sock))
+        return results
+
     def __getattr__(self, cmd: str):
         if cmd.startswith("_"):
             raise AttributeError(cmd)
+
         def call(*args: Any, **kwargs: Any) -> Any:
             return self._call(cmd, *args, **kwargs)
         call.__name__ = cmd
@@ -163,3 +423,15 @@ class KVClient:
                 sock.close()
             except OSError:
                 pass
+
+
+class ClientPipeline(Pipeline):
+    """Wire-level pipeline: same queueing/drain semantics as the in-process
+    :class:`repro.core.kvstore.Pipeline`, flushed over TCP."""
+
+    def __init__(self, client: KVClient, transactional: bool):
+        super().__init__(client)
+        self._transactional = transactional
+
+    def _flush(self) -> List[Tuple[bool, Any]]:
+        return self._store._flush_pipeline(self._cmds, self._transactional)

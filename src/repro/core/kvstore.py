@@ -43,6 +43,9 @@ __all__ = [
     "LatencyModel",
     "PAPER_REMOTE_LATENCY",
     "WrongTypeError",
+    "Pipeline",
+    "PipelineError",
+    "PipelineResult",
 ]
 
 
@@ -57,10 +60,12 @@ class WrongTypeError(TypeError):
 
 def _sizeof(value: Any) -> int:
     """Approximate wire size of a value (bytes dominate; rest is framing)."""
-    if isinstance(value, (bytes, bytearray, memoryview)):
+    if isinstance(value, memoryview):
+        return value.nbytes  # len() would count elements, not bytes
+    if isinstance(value, (bytes, bytearray)):
         return len(value)
     if isinstance(value, str):
-        return len(value)
+        return len(value.encode("utf-8", "surrogatepass"))
     return 64  # ints/floats/None: framing-order constant
 
 
@@ -77,6 +82,7 @@ class LatencyModel:
     bandwidth_bps: float = float("inf")
     scale: float = 1.0
     virtual_time: float = field(default=0.0, repr=False)
+    charges: int = field(default=0, repr=False)  # round trips billed
     _vlock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     def cost(self, nbytes: int) -> float:
@@ -88,6 +94,7 @@ class LatencyModel:
             return 0.0
         with self._vlock:
             self.virtual_time += c
+            self.charges += 1
         if self.scale > 0:
             time.sleep(c * self.scale)
         return c
@@ -314,6 +321,30 @@ class KVStore:
     def decr(self, key: str) -> int:
         return self.incrby(key, -1)
 
+    def mset(self, mapping: Dict[str, Any]) -> int:
+        """Set many string keys in one command (one RTT for the batch)."""
+        nbytes = sum(_sizeof(v) for v in mapping.values())
+        with self._lock:
+            for k, v in mapping.items():
+                self._data[k] = _Entry("string", v)
+            self._cond.notify_all()
+        self._charge("MSET", nbytes)
+        return len(mapping)
+
+    def mget(self, keys: Iterable[str]) -> List[Any]:
+        """Get many string keys in one command. Like Redis MGET, missing
+        or wrong-typed keys yield None instead of aborting the batch."""
+        with self._lock:
+            out: List[Any] = []
+            for k in keys:
+                try:
+                    e = self._get_entry(k, "string")
+                except WrongTypeError:
+                    e = None
+                out.append(None if e is None else e.value)
+        self._charge("MGET", 0, sum(_sizeof(v) for v in out if v is not None))
+        return out
+
     # -- lists ---------------------------------------------------------------
 
     def lpush(self, key: str, *values: Any) -> int:
@@ -399,6 +430,70 @@ class KVStore:
         if isinstance(keys, str):
             keys = [keys]
         return self._bpop(keys, timeout, False, "BRPOP")
+
+    def blpop_rpush(self, src: str, dst: str, value: Any,
+                    timeout: Optional[float] = None) -> Any:
+        """Atomically BLPOP ``src`` then RPUSH ``value`` onto ``dst``.
+
+        One command = one round trip. This is the bounded-queue primitive:
+        ``put`` pops a capacity token and pushes the item; ``get`` pops the
+        item and pushes a token back — each a single KV command where the
+        naive construction needs two (paper's per-command RTT tax).
+        Returns the popped element, or None on timeout.
+        """
+        deadline = None if timeout is None else time.monotonic() + timeout
+        t0 = time.monotonic()
+        popped = None
+        got = False
+        with self._lock:
+            while True:
+                # Validate dst BEFORE popping: erroring after the pop would
+                # silently drop the popped element (Redis LMOVE errors
+                # without consuming the source).
+                e_dst = self._get_entry(dst)
+                if e_dst is not None and e_dst.kind != "list":
+                    raise WrongTypeError(
+                        f"key {dst!r} holds {e_dst.kind}, operation requires list")
+                ok, v = self._pop(src, True)
+                if ok:
+                    popped, got = v, True
+                    e = self._get_entry(dst, "list", create=True)
+                    e.value.append(value)
+                    self._cond.notify_all()
+                    break
+                if deadline is None:
+                    self._cond.wait()
+                else:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0 or not self._cond.wait(remaining):
+                        break
+        self.metrics.blocked_time_s += time.monotonic() - t0
+        self._charge("BLPOPRPUSH",
+                     _sizeof(value) if got else 0,
+                     _sizeof(popped) if got else 0)
+        return popped
+
+    def bllen(self, key: str, timeout: Optional[float] = None) -> int:
+        """Blocking LLEN: wait until the list is non-empty (or timeout) and
+        return its length, without consuming. Backs ``Connection.poll`` —
+        a wakeup-driven wait instead of an llen busy-poll."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        t0 = time.monotonic()
+        with self._lock:
+            while True:
+                e = self._get_entry(key, "list")
+                n = 0 if e is None else len(e.value)
+                if n:
+                    break
+                if deadline is None:
+                    self._cond.wait()
+                else:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0 or not self._cond.wait(remaining):
+                        break
+        self.metrics.blocked_time_s += time.monotonic() - t0
+        self._charge("BLLEN")
+        return n
 
     def rpoplpush(self, src: str, dst: str) -> Any:
         with self._lock:
@@ -638,10 +733,158 @@ class KVStore:
             self.latency.charge(moved)
         return out
 
+    def execute_batch(self, commands: List[Tuple[str, tuple, dict]]
+                      ) -> List[Tuple[bool, Any]]:
+        """Run ``[(cmd, args, kwargs), ...]`` under ONE lock acquisition and
+        ONE latency charge (Redis MULTI/EXEC). Per-command errors are
+        captured as ``(False, exc)`` without aborting the batch, so callers
+        always get exactly ``len(commands)`` results — the framing-safety
+        contract the pipelined wire protocol relies on.
+
+        Like Redis MULTI, blocking commands run non-blocking inside a
+        batch (their timeout is forced to 0): blocking under the global
+        lock would stall every other client.
+        """
+        commands = [_debatch(c) for c in commands]
+
+        def run(s: "KVStore") -> List[Tuple[bool, Any]]:
+            out: List[Tuple[bool, Any]] = []
+            for cmd, args, kwargs in commands:
+                try:
+                    if cmd.startswith("_") or not hasattr(s, cmd):
+                        raise AttributeError(f"unknown command {cmd!r}")
+                    out.append((True, getattr(s, cmd)(*args, **kwargs)))
+                except Exception as exc:
+                    out.append((False, exc))
+            return out
+
+        return self.transaction(run)
+
+    def pipeline(self) -> "Pipeline":
+        """Queue commands locally, execute them in one batch on exit."""
+        return Pipeline(self)
+
     # used by ShardedKVStore waiters
     def _wait_hint(self, timeout: float) -> None:
         with self._lock:
             self._cond.wait(timeout)
+
+
+#: blocking command -> index of its positional ``timeout`` argument;
+#: ``execute_batch`` clamps these to 0 (Redis-MULTI non-blocking rule).
+_BLOCKING_TIMEOUT_ARG = {"blpop": 1, "brpop": 1, "bllen": 1, "blpop_rpush": 3}
+
+
+def _debatch(command: Tuple[str, tuple, dict]) -> Tuple[str, tuple, dict]:
+    cmd, args, kwargs = command
+    idx = _BLOCKING_TIMEOUT_ARG.get(cmd)
+    if idx is not None:
+        args = tuple(args)
+        if len(args) > idx:
+            args = args[:idx] + (0.0,) + args[idx + 1:]
+        else:
+            kwargs = dict(kwargs or {})
+            kwargs["timeout"] = 0.0
+    return cmd, tuple(args), dict(kwargs or {})
+
+
+class PipelineError(RuntimeError):
+    """First failure of a pipeline batch; ``results`` has every outcome."""
+
+    def __init__(self, index: int, error: Exception,
+                 results: List[Tuple[bool, Any]]):
+        super().__init__(f"pipeline command #{index} failed: {error!r}")
+        self.index = index
+        self.error = error
+        self.results = results
+
+
+class PipelineResult:
+    """Placeholder returned by queued pipeline commands; resolved on
+    ``execute()``/context exit."""
+
+    __slots__ = ("_ok", "_value", "_resolved")
+
+    def __init__(self):
+        self._resolved = False
+        self._ok = False
+        self._value = None
+
+    def _resolve(self, ok: bool, value: Any) -> None:
+        self._ok, self._value, self._resolved = ok, value, True
+
+    def get(self) -> Any:
+        if not self._resolved:
+            raise RuntimeError("pipeline not executed yet")
+        if not self._ok:
+            raise self._value
+        return self._value
+
+
+class Pipeline:
+    """Client-side command batch: queue N commands, flush them as one
+    ``execute_batch`` (one RTT, one lock acquisition server-side).
+
+    Usage::
+
+        with store.pipeline() as p:
+            p.rpush("jobs", blob1, blob2)
+            n = p.llen("jobs")
+        n.get()  # resolved after the flush
+
+    ``execute()`` always drains every queued command — an exception in
+    the middle of the batch cannot desync the protocol; the first error
+    is raised (as :class:`PipelineError`) only after all results are in.
+    """
+
+    def __init__(self, store: Any):
+        self._store = store
+        self._cmds: List[Tuple[str, tuple, dict]] = []
+        self._futures: List[PipelineResult] = []
+        self._executed = False
+
+    def __getattr__(self, cmd: str):
+        if cmd.startswith("_"):
+            raise AttributeError(cmd)
+
+        def queue(*args: Any, **kwargs: Any) -> PipelineResult:
+            if self._executed:
+                raise RuntimeError("pipeline already executed")
+            fut = PipelineResult()
+            self._cmds.append((cmd, args, kwargs))
+            self._futures.append(fut)
+            return fut
+        queue.__name__ = cmd
+        return queue
+
+    def __len__(self) -> int:
+        return len(self._cmds)
+
+    def _flush(self) -> List[Tuple[bool, Any]]:
+        """Transport hook: run the queued batch, return [(ok, value)]."""
+        return self._store.execute_batch(self._cmds)
+
+    def execute(self, raise_on_error: bool = True) -> List[Any]:
+        if self._executed:
+            raise RuntimeError("pipeline already executed")
+        self._executed = True
+        if not self._cmds:
+            return []
+        outcomes = self._flush()
+        for fut, (ok, value) in zip(self._futures, outcomes):
+            fut._resolve(ok, value)
+        if raise_on_error:
+            for i, (ok, value) in enumerate(outcomes):
+                if not ok:
+                    raise PipelineError(i, value, outcomes)
+        return [value for _, value in outcomes]
+
+    def __enter__(self) -> "Pipeline":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.execute()
 
 
 # ---------------------------------------------------------------------------
@@ -723,17 +966,126 @@ class ShardedKVStore:
         if len(groups) == 1:
             idx, ks = next(iter(groups.items()))
             return getattr(self.shards[idx], op)(ks, timeout)
-        # Multi-shard: poll with short per-shard blocking slices.
+        # Multi-shard: round-robin non-blocking pops with exponential
+        # backoff, capped both at _BPOP_MAX_BACKOFF_S and at the time
+        # remaining — a fixed sleep either burns CPU (too short) or adds
+        # up to its full period of wakeup latency (too long).
         deadline = None if timeout is None else time.monotonic() + timeout
-        slice_s = 0.005
+        delay = _BPOP_MIN_BACKOFF_S
         while True:
             for idx, ks in groups.items():
                 got = getattr(self.shards[idx], op)(ks, 0.0)
                 if got is not None:
                     return got
-            if deadline is not None and time.monotonic() >= deadline:
-                return None
-            time.sleep(slice_s)
+            if deadline is None:
+                time.sleep(delay)
+            else:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return None
+                time.sleep(min(delay, remaining))
+            delay = min(delay * 2, _BPOP_MAX_BACKOFF_S)
+
+    def blpop_rpush(self, src: str, dst: str, value: Any,
+                    timeout: Optional[float] = None) -> Any:
+        """Single command when src/dst co-locate (hash-tagged resource keys
+        always do); falls back to two commands across shards."""
+        s_src, s_dst = self.shard_for(src), self.shard_for(dst)
+        if s_src is s_dst:
+            return s_src.blpop_rpush(src, dst, value, timeout)
+        # Cross-shard fallback is best-effort, not atomic: the dst check
+        # narrows (but cannot close, across two shard locks) the window in
+        # which a popped element could be dropped. IPC primitives never hit
+        # this path — their keys are hash-tagged onto one shard.
+        self._check_list_dst(s_dst, dst)
+        got = s_src.blpop(src, timeout)
+        if got is None:
+            return None
+        s_dst.rpush(dst, value)
+        return got[1]
+
+    def rpoplpush(self, src: str, dst: str) -> Any:
+        s_src, s_dst = self.shard_for(src), self.shard_for(dst)
+        if s_src is s_dst:
+            return s_src.rpoplpush(src, dst)
+        self._check_list_dst(s_dst, dst)
+        v = s_src.rpop(src)
+        if v is None:
+            return None
+        s_dst.lpush(dst, v)
+        return v
+
+    @staticmethod
+    def _check_list_dst(shard: KVStore, dst: str) -> None:
+        kind = shard.type_of(dst)
+        if kind is not None and kind != "list":
+            raise WrongTypeError(
+                f"key {dst!r} holds {kind}, operation requires list")
+
+    def mset(self, mapping: Dict[str, Any]) -> int:
+        """Split the mapping per shard; one MSET per involved shard."""
+        groups: Dict[int, Dict[str, Any]] = {}
+        for k, v in mapping.items():
+            groups.setdefault(self._hash(k) % len(self.shards), {})[k] = v
+        return sum(self.shards[idx].mset(m) for idx, m in groups.items())
+
+    def mget(self, keys: Iterable[str]) -> List[Any]:
+        """Per-shard MGETs, results reassembled in request order."""
+        keys = list(keys)
+        groups: Dict[int, List[Tuple[int, str]]] = {}
+        for i, k in enumerate(keys):
+            groups.setdefault(self._hash(k) % len(self.shards), []).append((i, k))
+        out: List[Any] = [None] * len(keys)
+        for idx, numbered in groups.items():
+            for (i, _), v in zip(numbered,
+                                 self.shards[idx].mget([k for _, k in numbered])):
+                out[i] = v
+        return out
+
+    def execute_batch(self, commands: List[Tuple[str, tuple, dict]]
+                      ) -> List[Tuple[bool, Any]]:
+        """Route single-key commands to their shard (by first argument) and
+        run one sub-batch per involved shard; commands whose first argument
+        is not a key string (mset, mget, multi-key delete, blpop key lists)
+        run through this router's own methods instead of being guessed onto
+        a shard. Results come back in submission order; atomicity holds per
+        shard only (Redis Cluster semantics)."""
+        commands = [_debatch(c) for c in commands]
+        out: List[Optional[Tuple[bool, Any]]] = [None] * len(commands)
+        groups: Dict[int, List[Tuple[int, Tuple[str, tuple, dict]]]] = {}
+        for i, command in enumerate(commands):
+            cmd, args, kwargs = command
+            # Commands touching several keys can span shards: hand them to
+            # this router's own methods instead of pinning them onto
+            # args[0]'s shard (which would write dst keys into the wrong
+            # shard's namespace).
+            if cmd in ("blpop_rpush", "rpoplpush"):
+                src_k = args[0] if args else kwargs.get("src")
+                dst_k = args[1] if len(args) > 1 else kwargs.get("dst")
+                spans_shards = (
+                    not (isinstance(src_k, str) and isinstance(dst_k, str))
+                    or self.shard_for(src_k) is not self.shard_for(dst_k))
+            else:
+                spans_shards = cmd == "delete" and len(args) > 1
+            if args and isinstance(args[0], str) and not spans_shards:
+                groups.setdefault(
+                    self._hash(args[0]) % len(self.shards), []).append(
+                        (i, command))
+                continue
+            try:  # multi-key / keyless command: the router knows how
+                if cmd.startswith("_") or not hasattr(self, cmd):
+                    raise AttributeError(f"unknown command {cmd!r}")
+                out[i] = (True, getattr(self, cmd)(*args, **kwargs))
+            except Exception as exc:
+                out[i] = (False, exc)
+        for idx, numbered in groups.items():
+            results = self.shards[idx].execute_batch([c for _, c in numbered])
+            for (i, _), res in zip(numbered, results):
+                out[i] = res
+        return out  # type: ignore[return-value]
+
+    def pipeline(self) -> Pipeline:
+        return Pipeline(self)
 
     def transaction(self, fn, key_hint: Optional[str] = None):
         if key_hint is None:
@@ -747,3 +1099,7 @@ class ShardedKVStore:
         def call(key, *args, **kwargs):
             return getattr(self.shard_for(key), cmd)(key, *args, **kwargs)
         return call
+
+
+_BPOP_MIN_BACKOFF_S = 0.0005
+_BPOP_MAX_BACKOFF_S = 0.02

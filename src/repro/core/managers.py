@@ -340,8 +340,36 @@ class SyncManager:
         return self
 
     def shutdown(self) -> None:
+        # Batch the refcount teardown: one DECR batch per backing store,
+        # then one DEL for every resource that hit zero — 2 round trips
+        # for N resources instead of 2N (a Manager owning dozens of
+        # proxies used to pay a full RTT per DECR).
+        by_store: Dict[int, Tuple[Any, List[RemoteResource]]] = {}
         for r in self._resources:
-            r.close()
+            if r._closed or type(r)._on_destroy is not RemoteResource._on_destroy \
+                    or not hasattr(r._store, "execute_batch"):
+                r.close()  # custom teardown or foreign store: safe path
+                continue
+            with r._local_lock:
+                if r._closed:
+                    continue
+                r._closed = True
+            by_store.setdefault(id(r._store), (r._store, []))[1].append(r)
+        for store, group in by_store.values():
+            try:
+                outcomes = store.execute_batch(
+                    [("decr", (r._refs_key,), {}) for r in group])
+                dead_keys: List[str] = []
+                for r, (ok, left) in zip(group, outcomes):
+                    if ok and left <= 0:
+                        dead_keys.extend(r._kv_keys())
+                if dead_keys:
+                    store.delete(*dead_keys)
+            except Exception:
+                # store gone / server stopped: the TTL backstop cleans up,
+                # same contract as RemoteResource._decref — shutdown (and
+                # thus ``with Manager()``) must never raise on teardown.
+                pass
         self._resources.clear()
 
     def __enter__(self) -> "SyncManager":

@@ -33,6 +33,7 @@ from .reference import fresh_uid
 __all__ = ["Pool", "AsyncResult", "MapResult"]
 
 _POISON = b"__poison__"
+_SUBMIT_RPUSH_ARITY = 64  # max chunks per RPUSH inside a submit pipeline
 
 
 def default_parallelism() -> int:
@@ -269,8 +270,24 @@ class Pool:
                            enumerate(items[start:start + chunksize])]
             chunks.append(serialization.dumps(
                 (job_id, c_idx, func_key, chunk_items)))
-        # One LPUSH submits the whole job (the paper's key optimization).
-        self._store.rpush(self._job_key, *chunks)
+        # One flush submits the whole job (the paper's key optimization).
+        # Large jobs split into capped-arity RPUSHes inside one pipeline
+        # flush: over TCP the multi-frame mode bounds how much of the job
+        # a single wire frame materializes (responses drain between
+        # buffer-bounded chunks); on in-process stores the batch still
+        # runs under a single lock acquisition.
+        pipe_factory = getattr(self._store, "pipeline", None)
+        if pipe_factory is not None and len(chunks) > _SUBMIT_RPUSH_ARITY:
+            try:
+                pipe = pipe_factory(transactional=False)
+            except TypeError:  # in-process stores: batch mode only
+                pipe = pipe_factory()
+            with pipe:
+                for i in range(0, len(chunks), _SUBMIT_RPUSH_ARITY):
+                    pipe.rpush(self._job_key,
+                               *chunks[i:i + _SUBMIT_RPUSH_ARITY])
+        else:
+            self._store.rpush(self._job_key, *chunks)
 
     # -- public API -------------------------------------------------------------
 
@@ -337,10 +354,19 @@ class Pool:
 
     def terminate(self) -> None:
         self._closed = True
-        self._store.set(self._kill_key, 1, ex=3600)
-        self._store.delete(self._job_key)
         with self._jobs_lock:
             n = self._live_workers
+        pipe_factory = getattr(self._store, "pipeline", None)
+        if pipe_factory is not None:
+            # kill flag + queue flush + poison pills: one round trip.
+            with pipe_factory() as pipe:
+                pipe.set(self._kill_key, 1, ex=3600)
+                pipe.delete(self._job_key)
+                if n:
+                    pipe.rpush(self._job_key, *([_POISON] * n))
+            return
+        self._store.set(self._kill_key, 1, ex=3600)
+        self._store.delete(self._job_key)
         if n:
             self._store.rpush(self._job_key, *([_POISON] * n))
 

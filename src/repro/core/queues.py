@@ -3,15 +3,34 @@
 Pipe  -> two KV LISTs, one per direction. ``send()`` is an RPUSH to the
          peer's list, ``recv()`` a BLPOP on one's own list, so the list is
          a FIFO and blocking reads come for free — the paper's exact
-         construction.
+         construction. ``poll(timeout)`` is a blocking BLLEN (wakeup on
+         push), not an llen busy-poll.
 Queue -> one LIST shared by any number of producers/consumers; bounded
-         queues add a token LIST (capacity tokens) so ``put`` blocks by
-         BLPOP-ing a slot token, keeping *all* blocking inside the store.
+         queues add a token LIST (capacity tokens), keeping *all*
+         blocking inside the store.
 JoinableQueue -> adds an outstanding-work counter (INCR/DECR) and a
          completion notification list for ``join()``.
 
+Per-operation KV command (= remote round trip) counts on the hot path:
+
+===========================  =====  =============================
+operation                    cmds   wire commands
+===========================  =====  =============================
+Pipe.send / unbounded put      1    RPUSH items
+Pipe.recv / unbounded get      1    BLPOP items
+bounded Queue.put              1    BLPOPRPUSH slots->items blob
+bounded Queue.get              1    BLPOPRPUSH items->slots token
+Connection.poll(timeout)       1    BLLEN (blocking server-side)
+===========================  =====  =============================
+
+The bounded operations used to take 2 commands each (BLPOP token + RPUSH
+payload); ``blpop_rpush`` fuses them so a put+get round trip costs 2 RTTs
+instead of 4 — the difference the paper measures between "comparable to a
+large VM" and per-operation latency death (§6).
+
 All payloads cross the store as serialized bytes (KV latency/metrics see
-true wire sizes).
+true wire sizes); over the TCP transport, large payloads travel as
+zero-copy out-of-band frames (see ``kvserver``).
 """
 
 from __future__ import annotations
@@ -84,15 +103,12 @@ class Connection(RemoteResource):
         return got[1]
 
     def poll(self, timeout: float = 0.0) -> bool:
-        if self._store.llen(self._read_key) > 0:
-            return True
-        if timeout and timeout > 0:
-            deadline = time.monotonic() + timeout
-            while time.monotonic() < deadline:
-                if self._store.llen(self._read_key) > 0:
-                    return True
-                time.sleep(min(0.002, timeout))
-        return self._store.llen(self._read_key) > 0
+        if not timeout or timeout <= 0:
+            return self._store.llen(self._read_key) > 0
+        # Blocking wait in the store: one command, wakeup on push. BLLEN is
+        # part of the store interface (KVStore, ShardedKVStore, and any
+        # KVServer reached through KVClient all serve it).
+        return self._store.bllen(self._read_key, timeout) > 0
 
 
 def Pipe(duplex: bool = True) -> Tuple[Connection, Connection]:
@@ -133,15 +149,25 @@ class Queue(RemoteResource):
     def put(self, obj: Any, block: bool = True, timeout: Optional[float] = None) -> None:
         blob = serialization.dumps(obj)
         if self._maxsize > 0:
-            tok = self._store.blpop(self._slots_key, timeout if block else 0.0)
+            # One fused command: pop a capacity token, push the payload.
+            tok = self._store.blpop_rpush(self._slots_key, self._items_key,
+                                          blob, timeout if block else 0.0)
             if tok is None:
                 raise Full
+            return
         self._store.rpush(self._items_key, blob)
 
     def put_nowait(self, obj: Any) -> None:
         self.put(obj, block=False)
 
     def get(self, block: bool = True, timeout: Optional[float] = None) -> Any:
+        if self._maxsize > 0:
+            # One fused command: pop the payload, push a token back.
+            blob = self._store.blpop_rpush(self._items_key, self._slots_key,
+                                           b"s", timeout if block else 0.0)
+            if blob is None:
+                raise Empty
+            return serialization.loads(blob)
         if block:
             got = self._store.blpop(self._items_key, timeout)
             if got is None:
@@ -151,8 +177,6 @@ class Queue(RemoteResource):
             blob = self._store.lpop(self._items_key)
             if blob is None:
                 raise Empty
-        if self._maxsize > 0:
-            self._store.rpush(self._slots_key, b"s")
         return serialization.loads(blob)
 
     def get_nowait(self) -> Any:

@@ -89,8 +89,18 @@ class RawArray(RemoteResource):
             start, stop, step = i.indices(self._length)
             if step == 1:
                 return self._store.lrange(self._data_key, start, stop - 1)
-            return [self._store.lindex(self._data_key, j)
-                    for j in range(start, stop, step)]
+            idxs = range(start, stop, step)
+            batch = getattr(self._store, "execute_batch", None)
+            if batch is not None and len(idxs) > 1:
+                # strided read: one batched round trip, not one per index
+                out = []
+                for ok, v in batch([("lindex", (self._data_key, j), {})
+                                    for j in idxs]):
+                    if not ok:
+                        raise v
+                    out.append(v)
+                return out
+            return [self._store.lindex(self._data_key, j) for j in idxs]
         return self._store.lindex(self._data_key, self._index(i))
 
     def __setitem__(self, i, value):

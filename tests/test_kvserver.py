@@ -48,6 +48,36 @@ class TestKVServer:
             c.rpush("k", b"x")   # WRONGTYPE crosses the wire
         c.close()
 
+    def test_large_payload_oob_roundtrip(self, server):
+        c = KVClient(server.address)
+        blob = b"z" * (1 << 20)
+        c.rpush("big", blob)
+        out = c.lpop("big")
+        assert type(out) is bytes and out == blob
+        c.close()
+
+    def test_numpy_payload_roundtrip(self, server):
+        np = pytest.importorskip("numpy")
+        c = KVClient(server.address)
+        arr = np.arange(65_536, dtype=np.float32)
+        c.set("arr", arr)
+        np.testing.assert_array_equal(c.get("arr"), arr)
+        c.close()
+
+    def test_legacy_protocol_interop(self, server):
+        """v1 (seed) clients and v2 clients work against the same server."""
+        legacy = KVClient(server.address, legacy_protocol=True)
+        new = KVClient(server.address)
+        legacy.set("k", b"v")
+        assert new.get("k") == b"v"
+        new.rpush("l", b"big" * 50_000)
+        assert legacy.lrange("l", 0, -1) == [b"big" * 50_000]
+        with pytest.raises(TypeError):
+            legacy.rpush("k", b"x")
+        assert legacy.incr("n") == 1  # connection still in sync
+        legacy.close()
+        new.close()
+
     def test_mp_primitives_over_tcp(self, server):
         set_session(Session(store=KVClient(server.address)))
         q = mp.Queue()
@@ -63,6 +93,124 @@ class TestKVServer:
         assert q.get(timeout=5) == "done"
         pr.join(5)
         assert v.value == 5
+
+
+class TestPipeline:
+    """Pipelined wire protocol: batching, error semantics, framing safety."""
+
+    def test_transactional_pipeline(self, server):
+        c = KVClient(server.address)
+        with c.pipeline() as p:
+            a = p.rpush("l", b"1", b"2")
+            b = p.llen("l")
+            n = p.incr("n")
+        assert a.get() == 2 and b.get() == 2 and n.get() == 1
+        c.close()
+
+    def test_nontransactional_pipeline(self, server):
+        c = KVClient(server.address)
+        with c.pipeline(transactional=False) as p:
+            a = p.rpush("l", b"1")
+            b = p.llen("l")
+        assert a.get() == 1 and b.get() == 1
+        c.close()
+
+    def test_transactional_batch_single_lock_single_frame(self, server):
+        c = KVClient(server.address)
+        before_eval = server.store.metrics.commands.get("EVAL", 0)
+        with c.pipeline() as p:
+            for _ in range(10):
+                p.incr("n")
+        # the whole batch ran as ONE server-side transaction
+        assert server.store.metrics.commands.get("EVAL", 0) - before_eval == 1
+        c.close()
+
+    @pytest.mark.parametrize("transactional", [True, False])
+    def test_error_mid_batch_does_not_desync(self, server, transactional):
+        from repro.core.kvstore import PipelineError, WrongTypeError
+        c = KVClient(server.address)
+        c.set("str", b"v")
+        p = c.pipeline(transactional=transactional)
+        first = p.incr("n")
+        bad = p.rpush("str", b"x")   # WRONGTYPE mid-batch
+        last = p.incr("n")
+        with pytest.raises(PipelineError) as ei:
+            p.execute()
+        assert ei.value.index == 1
+        # remaining responses were drained: later commands executed...
+        assert first.get() == 1 and last.get() == 2
+        with pytest.raises(WrongTypeError):
+            bad.get()
+        # ...and the connection framing is intact for follow-up traffic
+        assert c.incr("n") == 3
+        assert c.get("str") == b"v"
+        c.close()
+
+    def test_pipeline_large_payloads(self, server):
+        c = KVClient(server.address)
+        blob = b"p" * 300_000
+        with c.pipeline() as p:
+            for _ in range(4):
+                p.rpush("blobs", blob)
+        got = c.lrange("blobs", 0, -1)
+        assert [bytes(b) for b in got] == [blob] * 4
+        c.close()
+
+    def test_empty_pipeline(self, server):
+        c = KVClient(server.address)
+        assert c.pipeline().execute() == []
+        c.close()
+
+    def test_nontransactional_bidirectional_bulk_no_deadlock(self, server):
+        """Big writes AND big reads in one multi-frame batch: the chunked
+        flush drains responses between chunks, so request+response volume
+        beyond the socket buffers cannot wedge the connection."""
+        c = KVClient(server.address)
+        blob = b"D" * (2 << 20)
+        done = []
+
+        def run():
+            p = c.pipeline(transactional=False)
+            reads = []
+            for _ in range(6):
+                p.rpush("bulk", blob)
+                reads.append(p.lrange("bulk", 0, -1))
+            p.execute()
+            done.append([len(r.get()) for r in reads])
+        t = threading.Thread(target=run, daemon=True)
+        t.start()
+        t.join(30)
+        assert done == [[1, 2, 3, 4, 5, 6]], "pipeline deadlocked or wrong"
+        c.close()
+
+    def test_manager_shutdown_survives_dead_server(self):
+        """`with Manager()` teardown must not raise once the store is gone
+        (TTL backstop owns cleanup) — same contract as per-resource close."""
+        from repro.core.managers import Manager
+        srv = KVServer().start()
+        client = KVClient(srv.address)
+        set_session(Session(store=client))
+        m = Manager(store=client)
+        d = m.dict({"a": 1})
+        lst = m.list([1, 2])
+        assert d["a"] == 1 and len(lst) == 2
+        srv.stop()
+        client.close()  # force reconnect attempts, which will be refused
+        m.shutdown()  # must swallow the connection failure
+        client.close()
+
+    def test_bounded_queue_put_get_two_commands(self, server):
+        """Acceptance: a bounded put+get costs 2 KV commands, down from 4."""
+        set_session(Session(store=KVClient(server.address)))
+        q = mp.Queue(maxsize=4)
+        baseline = server.store.metrics.total_commands()
+        q.put("payload")
+        after_put = server.store.metrics.total_commands()
+        assert q.get(timeout=5) == "payload"
+        after_get = server.store.metrics.total_commands()
+        assert after_put - baseline == 1
+        assert after_get - after_put == 1
+        assert server.store.metrics.commands.get("BLPOPRPUSH", 0) >= 2
 
 
 @pytest.mark.slow

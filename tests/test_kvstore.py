@@ -3,8 +3,8 @@ import time
 
 import pytest
 
-from repro.core.kvstore import (KVStore, LatencyModel, ShardedKVStore,
-                                WrongTypeError)
+from repro.core.kvstore import (KVStore, LatencyModel, PipelineError,
+                                ShardedKVStore, WrongTypeError)
 
 
 @pytest.fixture
@@ -160,6 +160,129 @@ class TestSemantics:
         assert kv.get("n") == 800
 
 
+class TestBatchCommands:
+    def test_mset_mget(self, kv):
+        assert kv.mset({"a": 1, "b": b"two"}) == 2
+        assert kv.mget(["a", "b", "missing"]) == [1, b"two", None]
+
+    def test_mget_wrong_type_yields_none(self, kv):
+        kv.rpush("alist", b"x")
+        kv.set("s", 1)
+        assert kv.mget(["alist", "s"]) == [None, 1]
+
+    def test_blpop_rpush_immediate(self, kv):
+        kv.rpush("slots", b"s")
+        assert kv.blpop_rpush("slots", "items", b"blob", 1) == b"s"
+        assert kv.lrange("items", 0, -1) == [b"blob"]
+
+    def test_blpop_rpush_blocks_until_push(self, kv):
+        out = []
+        t = threading.Thread(
+            target=lambda: out.append(kv.blpop_rpush("src", "dst", b"v", 5)))
+        t.start()
+        time.sleep(0.05)
+        assert not out
+        kv.rpush("src", b"e")
+        t.join(2)
+        assert out == [b"e"]
+        assert kv.lrange("dst", 0, -1) == [b"v"]
+
+    def test_blpop_rpush_timeout_pushes_nothing(self, kv):
+        assert kv.blpop_rpush("nope", "dst", b"v", 0.05) is None
+        assert kv.llen("dst") == 0
+
+    def test_blpop_rpush_bad_dst_does_not_consume_src(self, kv):
+        kv.set("dst", 1)  # string, not list
+        kv.rpush("src", b"x")
+        with pytest.raises(WrongTypeError):
+            kv.blpop_rpush("src", "dst", b"v", 0.1)
+        assert kv.lrange("src", 0, -1) == [b"x"]  # element not lost
+
+    def test_blpop_rpush_is_one_command(self, kv):
+        kv.rpush("slots", b"s")
+        before = kv.metrics.total_commands()
+        kv.blpop_rpush("slots", "items", b"x", 1)
+        assert kv.metrics.total_commands() - before == 1
+
+    def test_bllen_nonblocking_and_timeout(self, kv):
+        kv.rpush("l", b"1", b"2")
+        assert kv.bllen("l", 0.1) == 2
+        t0 = time.monotonic()
+        assert kv.bllen("missing", 0.05) == 0
+        assert time.monotonic() - t0 >= 0.04
+
+    def test_bllen_wakes_on_push(self, kv):
+        out = []
+        t = threading.Thread(target=lambda: out.append(kv.bllen("later", 5)))
+        t.start()
+        time.sleep(0.05)
+        kv.rpush("later", b"a", b"b")
+        t.join(2)
+        assert out == [2]
+
+    def test_execute_batch_values_and_errors(self, kv):
+        kv.set("str", b"v")
+        res = kv.execute_batch([
+            ("incr", ("n",), {}),
+            ("rpush", ("str", b"x"), {}),       # WRONGTYPE mid-batch
+            ("set", ("k",), {"value": 5}),      # still executed
+            ("definitely_not_a_command", (), {}),
+        ])
+        assert res[0] == (True, 1)
+        assert res[1][0] is False and isinstance(res[1][1], WrongTypeError)
+        assert res[2] == (True, True)
+        assert res[3][0] is False and isinstance(res[3][1], AttributeError)
+        assert kv.get("k") == 5
+
+    def test_execute_batch_forces_nonblocking(self, kv):
+        t0 = time.monotonic()
+        res = kv.execute_batch([("blpop", ("never", 60), {})])
+        assert time.monotonic() - t0 < 1.0
+        assert res == [(True, None)]
+
+    def test_execute_batch_rejects_private(self, kv):
+        res = kv.execute_batch([("_charge", ("X",), {})])
+        assert res[0][0] is False and isinstance(res[0][1], AttributeError)
+
+    def test_execute_batch_charges_one_rtt(self):
+        kv = KVStore(LatencyModel(rtt_s=0.001, scale=0.0))
+        kv.execute_batch([("incr", ("n",), {}) for _ in range(10)])
+        assert kv.latency.charges == 1
+        assert kv.latency.virtual_time == pytest.approx(0.001, rel=0.01)
+
+    def test_pipeline_futures(self, kv):
+        with kv.pipeline() as p:
+            a = p.rpush("l", b"1", b"2")
+            b = p.llen("l")
+        assert a.get() == 2 and b.get() == 2
+
+    def test_pipeline_error_drains_batch(self, kv):
+        kv.set("s", b"v")
+        p = kv.pipeline()
+        first = p.incr("n")
+        bad = p.rpush("s", b"x")
+        last = p.incr("n")
+        with pytest.raises(PipelineError) as ei:
+            p.execute()
+        assert ei.value.index == 1
+        assert first.get() == 1 and last.get() == 2  # drained past failure
+        with pytest.raises(WrongTypeError):
+            bad.get()
+
+
+class TestSizeof:
+    def test_memoryview_counts_bytes_not_elements(self):
+        kv = KVStore()
+        view = memoryview(bytearray(64)).cast("d")  # 8 elements, 64 bytes
+        kv.set("k", view)
+        assert kv.metrics.bytes_in == 64
+
+    def test_str_counts_encoded_bytes(self):
+        kv = KVStore()
+        kv.set("k", "héllo")   # 5 chars, 6 utf-8 bytes
+        assert kv.metrics.bytes_in == 6
+
+
 class TestLatencyModel:
     def test_virtual_time_accrues(self):
         kv = KVStore(LatencyModel(rtt_s=0.001, bandwidth_bps=1e6, scale=0.0))
@@ -198,3 +321,115 @@ class TestSharded:
         sh.rpush("{y}:q", b"v")
         t.join(2)
         assert out == [("{y}:q", b"v")]
+
+    def test_multishard_bpop_timeout_capped(self):
+        # {x} and {y} land on different shards: the poll loop's backoff
+        # must be capped at the remaining timeout, not overshoot it.
+        sh = ShardedKVStore([KVStore(name=f"s{i}") for i in range(4)])
+        assert sh.shard_for("{x}:q") is not sh.shard_for("{y}:q")
+        t0 = time.monotonic()
+        assert sh.blpop(["{x}:q", "{y}:q"], 0.15) is None
+        elapsed = time.monotonic() - t0
+        assert 0.13 <= elapsed < 0.5, elapsed
+
+    def test_multishard_bpop_fairness(self):
+        # Items on both shards: repeated pops drain both queues rather
+        # than starving one shard.
+        sh = ShardedKVStore([KVStore(name=f"s{i}") for i in range(4)])
+        sh.rpush("{x}:q", b"x1", b"x2")
+        sh.rpush("{y}:q", b"y1", b"y2")
+        got = [sh.blpop(["{x}:q", "{y}:q"], 1) for _ in range(4)]
+        assert sorted(v for _, v in got) == [b"x1", b"x2", b"y1", b"y2"]
+        assert sh.blpop(["{x}:q", "{y}:q"], 0.05) is None
+
+    def test_multishard_bpop_late_push_wakes(self):
+        sh = ShardedKVStore([KVStore(name=f"s{i}") for i in range(4)])
+        out = []
+        t = threading.Thread(
+            target=lambda: out.append(sh.blpop(["{x}:q", "{y}:q"], 5)))
+        t.start()
+        time.sleep(0.2)  # long enough that backoff reached its cap
+        sh.rpush("{x}:q", b"late")
+        t.join(2)
+        assert out == [("{x}:q", b"late")]
+
+    def test_sharded_blpop_rpush_same_shard(self):
+        sh = ShardedKVStore([KVStore(name=f"s{i}") for i in range(4)])
+        sh.rpush("{u}:slots", b"s")
+        assert sh.blpop_rpush("{u}:slots", "{u}:items", b"B", 1) == b"s"
+        assert sh.lrange("{u}:items", 0, -1) == [b"B"]
+        # fused op on one shard: a single command in that shard's metrics
+        shard = sh.shard_for("{u}:slots")
+        assert shard.metrics.commands.get("BLPOPRPUSH") == 1
+
+    def test_sharded_blpop_rpush_cross_shard_fallback(self):
+        sh = ShardedKVStore([KVStore(name=f"s{i}") for i in range(4)])
+        src, dst = "{x}:src", "{y}:dst"
+        assert sh.shard_for(src) is not sh.shard_for(dst)
+        sh.rpush(src, b"1")
+        assert sh.blpop_rpush(src, dst, b"2", 1) == b"1"
+        assert sh.lrange(dst, 0, -1) == [b"2"]
+
+    def test_sharded_blpop_rpush_cross_shard_bad_dst_no_loss(self):
+        sh = ShardedKVStore([KVStore(name=f"s{i}") for i in range(4)])
+        src, dst = "{x}:src", "{y}:dst"
+        sh.set(dst, 1)  # string, not list
+        sh.rpush(src, b"elem")
+        with pytest.raises(WrongTypeError):
+            sh.blpop_rpush(src, dst, b"v", 0.1)
+        assert sh.lrange(src, 0, -1) == [b"elem"]  # element not consumed
+
+    def test_sharded_rpoplpush_cross_shard(self):
+        sh = ShardedKVStore([KVStore(name=f"s{i}") for i in range(4)])
+        src, dst = "{x}:src", "{y}:dst"
+        sh.rpush(src, b"1", b"2")
+        assert sh.rpoplpush(src, dst) == b"2"
+        assert sh.lrange(dst, 0, -1) == [b"2"]  # visible under dst's shard
+
+    def test_sharded_batch_two_key_commands_route_correctly(self):
+        sh = ShardedKVStore([KVStore(name=f"s{i}") for i in range(4)])
+        src, dst = "{x}:src", "{y}:dst"
+        sh.rpush(src, b"1")
+        with sh.pipeline() as p:
+            moved = p.blpop_rpush(src, dst, b"v", 0)
+        assert moved.get() == b"1"
+        # the push landed where direct reads look for it
+        assert sh.lrange(dst, 0, -1) == [b"v"]
+
+    def test_sharded_execute_batch_preserves_order(self):
+        sh = ShardedKVStore([KVStore(name=f"s{i}") for i in range(4)])
+        res = sh.execute_batch(
+            [("set", (f"key-{i}", i), {}) for i in range(20)]
+            + [("get", (f"key-{i}",), {}) for i in range(20)])
+        assert all(ok for ok, _ in res)
+        assert [v for _, v in res[20:]] == list(range(20))
+
+    def test_sharded_pipeline(self):
+        sh = ShardedKVStore([KVStore(name=f"s{i}") for i in range(2)])
+        with sh.pipeline() as p:
+            a = p.incr("a")
+            b = p.incr("b")
+        assert a.get() == 1 and b.get() == 1
+
+    def test_sharded_mset_mget_route_per_key(self):
+        sh = ShardedKVStore([KVStore(name=f"s{i}") for i in range(4)])
+        mapping = {f"key-{i}": i for i in range(20)}
+        assert sh.mset(mapping) == 20
+        assert sh.mget([f"key-{i}" for i in range(20)]) == list(range(20))
+        # readable through single-key routing too (same shard per key)
+        assert all(sh.get(f"key-{i}") == i for i in range(20))
+
+    def test_sharded_batch_routes_multikey_commands(self):
+        sh = ShardedKVStore([KVStore(name=f"s{i}") for i in range(4)])
+        with sh.pipeline() as p:
+            p.mset({f"m-{i}": i for i in range(8)})
+            got = p.mget([f"m-{i}" for i in range(8)])
+            popped = p.blpop(["{x}:q", "{y}:q"], 30)  # forced non-blocking
+        assert got.get() == list(range(8))
+        assert popped.get() is None
+        # multi-key delete spans shards instead of landing on args[0]'s
+        sh.mset({f"d-{i}": i for i in range(8)})
+        with sh.pipeline() as p:
+            deleted = p.delete(*[f"d-{i}" for i in range(8)])
+        assert deleted.get() == 8
+        assert sh.mget([f"d-{i}" for i in range(8)]) == [None] * 8

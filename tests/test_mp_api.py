@@ -182,6 +182,31 @@ class TestQueuesAndPipes:
         b.send(1)
         assert a.poll(1.0)
 
+    def test_pipe_poll_timeout_blocks_not_spins(self):
+        from repro.core import get_session
+        a, b = mp.Pipe()
+        store = get_session().store
+        before = store.metrics.total_commands()
+        t0 = time.monotonic()
+        assert not a.poll(0.1)
+        assert time.monotonic() - t0 >= 0.09
+        # one blocking BLLEN, not an llen-every-2ms busy loop
+        assert store.metrics.total_commands() - before == 1
+
+    def test_bounded_queue_put_get_two_commands(self):
+        """Acceptance: bounded put+get = 2 KV commands (was 4: the token
+        BLPOP and payload RPUSH are fused into one BLPOPRPUSH each way)."""
+        from repro.core import get_session
+        q = mp.Queue(maxsize=2)
+        store = get_session().store
+        base = store.metrics.total_commands()
+        q.put("item")
+        mid = store.metrics.total_commands()
+        assert mid - base == 1
+        assert q.get() == "item"
+        assert store.metrics.total_commands() - mid == 1
+        assert store.metrics.commands.get("BLPOPRPUSH") == 2
+
 
 class TestSync:
     def test_lock_mutual_exclusion(self):

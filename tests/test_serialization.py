@@ -87,3 +87,67 @@ class TestSerialization:
 
     def test_payload_size(self):
         assert ser.payload_size({"a": 1}) > 0
+
+
+class TestWireEfficiency:
+    """Size/zero-copy regressions for the remote hot path."""
+
+    def test_default_protocol_is_highest(self):
+        import pickle
+        import pickletools
+        op, arg, _ = next(pickletools.genops(ser.dumps({"a": 1})))
+        assert op.name == "PROTO" and arg == pickle.HIGHEST_PROTOCOL
+
+    def test_large_bytes_size_regression(self):
+        blob = b"x" * (1 << 20)
+        assert len(ser.dumps(blob)) <= len(blob) + 64
+
+    def test_large_array_size_regression(self):
+        arr = np.arange(1 << 17, dtype=np.float64)  # 1 MiB
+        assert len(ser.dumps(arr)) <= arr.nbytes + 512
+
+    def test_oob_roundtrip_bytes(self):
+        blob = b"z" * 100_000
+        payload, bufs = ser.dumps_oob(blob)
+        assert len(payload) < 256  # descriptor only, data out-of-band
+        assert len(bufs) == 1 and bufs[0].nbytes == len(blob)
+        out = ser.loads_oob(payload, bufs)
+        assert out == blob and type(out) is bytes
+
+    def test_oob_roundtrip_bytearray(self):
+        blob = bytearray(b"y" * 50_000)
+        payload, bufs = ser.dumps_oob(blob)
+        out = ser.loads_oob(payload, [bytearray(bytes(b)) for b in bufs])
+        assert out == blob and type(out) is bytearray
+
+    def test_oob_numpy_zero_copy(self):
+        arr = np.arange(100_000, dtype=np.float32)
+        payload, bufs = ser.dumps_oob(arr)
+        assert len(payload) < 1024
+        assert sum(b.nbytes for b in bufs) == arr.nbytes
+        np.testing.assert_array_equal(ser.loads_oob(payload, bufs), arr)
+
+    def test_oob_fortran_order_array(self):
+        arr = np.asfortranarray(np.arange(5000, dtype=np.int64).reshape(50, 100))
+        payload, bufs = ser.dumps_oob(arr)
+        np.testing.assert_array_equal(ser.loads_oob(payload, bufs), arr)
+
+    def test_oob_command_shape(self):
+        # the transport's request tuple: large args go oob, small in-band
+        blob = b"B" * 100_000
+        cmd = ("rpush", ("key", blob, b"small"), {})
+        payload, bufs = ser.dumps_oob(cmd)
+        assert len(bufs) == 1 and len(payload) < 512
+        assert ser.loads_oob(payload, bufs) == cmd
+
+    def test_oob_small_payload_stays_inband(self):
+        payload, bufs = ser.dumps_oob({"k": b"tiny"})
+        assert bufs == []
+        assert ser.loads_oob(payload) == {"k": b"tiny"}
+
+    def test_oob_receive_buffer_types(self):
+        # transport hands over bytearray receive buffers directly
+        blob = b"q" * 65_536
+        payload, bufs = ser.dumps_oob(blob)
+        recv = [bytearray(bytes(b)) for b in bufs]
+        assert ser.loads_oob(bytearray(payload), recv) == blob
