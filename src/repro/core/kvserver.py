@@ -36,7 +36,12 @@ Round-trip accounting on this transport:
   interleave with other clients);
 * an exception mid-batch never desyncs framing: every queued command
   yields exactly one result and the first error is raised only after all
-  responses are drained.
+  responses are drained;
+* byte-range commands (``getrange``/``setrange``/``msetrange`` — the
+  block-backed shared-array primitives) need no client-side support
+  code: they flow through the generic dispatch, and segment-sized
+  (>= 4 KiB) values ride the out-of-band zero-copy path in both
+  directions.
 """
 
 from __future__ import annotations

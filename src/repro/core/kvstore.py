@@ -5,7 +5,9 @@ instance and leans on three Redis properties:
 
   1. typed values (LIST, HASH, STRING, SET) whose operations map 1:1 onto
      multiprocessing abstractions (Pipe/Queue -> LIST + LPUSH/BLPOP,
-     Semaphore -> token LIST, Manager.dict -> HASH, Array -> LIST, ...);
+     Semaphore -> token LIST, Manager.dict -> HASH, Array -> packed
+     STRING segments addressed with byte-range commands
+     (GETRANGE/SETRANGE/MSETRANGE), or the paper-faithful LIST, ...);
   2. single-threaded command execution => every command is atomic and
      totally ordered ("Redis maintains the order of puts and gets
      consistent", §3.2);
@@ -344,6 +346,106 @@ class KVStore:
                 out.append(None if e is None else e.value)
         self._charge("MGET", 0, sum(_sizeof(v) for v in out if v is not None))
         return out
+
+    # -- byte ranges ---------------------------------------------------------
+    #
+    # String values holding raw bytes support sub-value addressing, the
+    # primitive behind block-backed shared arrays (sharedctypes layout
+    # "block"): a slice touches O(segments) commands, not O(elements).
+
+    @staticmethod
+    def _range_bytes(e: Optional[_Entry], key: str) -> bytes:
+        if e is None:
+            return b""
+        if not isinstance(e.value, (bytes, bytearray, memoryview)):
+            raise WrongTypeError(
+                f"key {key!r} holds a non-bytes string value, byte-range "
+                "operations require bytes")
+        return bytes(e.value)
+
+    def getrange(self, key: str, start: int, end: int) -> bytes:
+        """Redis GETRANGE: bytes [start, end] (inclusive), negative offsets
+        count from the end, missing key yields b""."""
+        with self._lock:
+            cur = self._range_bytes(self._get_entry(key, "string"), key)
+            n = len(cur)
+            s = max(0, start + n if start < 0 else start)
+            t = (end + n if end < 0 else end) + 1
+            out = cur[s:max(s, t)] if t > 0 else b""
+        self._charge("GETRANGE", 0, len(out))
+        return out
+
+    def _setrange_locked(self, key: str, offset: int, value: Any) -> int:
+        """Must hold the lock. Shared by SETRANGE and MSETRANGE."""
+        if offset < 0:
+            raise ValueError("offset is out of range")
+        value = bytes(value)
+        e = self._get_entry(key, "string", create=False)
+        cur = self._range_bytes(e, key)
+        if not value:
+            # Redis: an empty value neither creates the key nor pads it
+            return len(cur)
+        if len(cur) < offset:
+            cur += b"\x00" * (offset - len(cur))
+        new = cur[:offset] + value + cur[offset + len(value):]
+        if e is None:
+            self._data[key] = _Entry("string", new)
+        else:
+            e.value = new
+        return len(new)
+
+    def setrange(self, key: str, offset: int, value: Any) -> int:
+        """Redis SETRANGE: overwrite bytes at ``offset`` (zero-padding any
+        gap), creating the key if missing. Returns the new length."""
+        with self._lock:
+            n = self._setrange_locked(key, offset, value)
+            self._cond.notify_all()
+        self._charge("SETRANGE", _sizeof(value))
+        return n
+
+    def msetrange(self, entries: List[Tuple[str, int, Any]]) -> int:
+        """Many SETRANGEs across keys as ONE atomic command (the Lua-script
+        equivalent; one round trip, one lock acquisition). ``entries`` is
+        ``[(key, offset, bytes), ...]``; returns the number of writes
+        applied. This is the write-combining flush primitive of the
+        block-backed shared arrays. Runs targeting the same key mutate one
+        scratch bytearray in place — a strided flush with hundreds of runs
+        per segment must not re-copy the whole value per run."""
+        nbytes = sum(_sizeof(v) for _, _, v in entries)
+        groups: Dict[str, List[Tuple[int, Any]]] = {}
+        for key, offset, value in entries:
+            if offset < 0:
+                raise ValueError("offset is out of range")
+            groups.setdefault(key, []).append((offset, value))
+        with self._lock:
+            for key, runs in groups.items():
+                e = self._get_entry(key, "string", create=False)
+                cur = bytearray(self._range_bytes(e, key))
+                wrote = False
+                for offset, value in runs:
+                    value = bytes(value)
+                    if not value:
+                        continue  # Redis: empty value neither creates nor pads
+                    if len(cur) < offset:
+                        cur.extend(b"\x00" * (offset - len(cur)))
+                    cur[offset:offset + len(value)] = value
+                    wrote = True
+                if not wrote:
+                    continue
+                new = bytes(cur)
+                if e is None:
+                    self._data[key] = _Entry("string", new)
+                else:
+                    e.value = new
+            self._cond.notify_all()
+        self._charge("MSETRANGE", nbytes)
+        return len(entries)
+
+    def strlen(self, key: str) -> int:
+        with self._lock:
+            cur = self._range_bytes(self._get_entry(key, "string"), key)
+        self._charge("STRLEN")
+        return len(cur)
 
     # -- lists ---------------------------------------------------------------
 
@@ -1041,6 +1143,16 @@ class ShardedKVStore:
                                  self.shards[idx].mget([k for _, k in numbered])):
                 out[i] = v
         return out
+
+    def msetrange(self, entries: List[Tuple[str, int, Any]]) -> int:
+        """Split the byte-range writes per shard; one MSETRANGE per involved
+        shard (hash-tagged shared-array segment keys always co-locate, so
+        the common case stays a single command)."""
+        groups: Dict[int, List[Tuple[str, int, Any]]] = {}
+        for entry in entries:
+            groups.setdefault(
+                self._hash(entry[0]) % len(self.shards), []).append(entry)
+        return sum(self.shards[idx].msetrange(g) for idx, g in groups.items())
 
     def execute_batch(self, commands: List[Tuple[str, tuple, dict]]
                       ) -> List[Tuple[bool, Any]]:

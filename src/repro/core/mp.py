@@ -14,7 +14,7 @@ import os
 from typing import Optional
 
 from .managers import Manager, SyncManager
-from .pool import Pool
+from .pool import Pool, ProcessError, TimeoutError
 from .process import Process, active_children, current_process, parent_process
 from .queues import Empty, Full, JoinableQueue, Pipe, Queue, SimpleQueue
 from .sharedctypes import Array, RawArray, RawValue, Value
@@ -28,10 +28,8 @@ __all__ = [
     "Barrier", "Value", "Array", "RawValue", "RawArray", "Manager",
     "current_process", "parent_process", "active_children", "cpu_count",
     "get_context", "get_start_method", "set_start_method", "Empty", "Full",
-    "BrokenBarrierError", "TimeoutError",
+    "BrokenBarrierError", "ProcessError", "TimeoutError",
 ]
-
-TimeoutError = TimeoutError  # multiprocessing re-exports it; so do we
 
 
 def cpu_count() -> int:

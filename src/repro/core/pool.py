@@ -30,7 +30,18 @@ from . import session as _session
 from .executor import FunctionExecutor
 from .reference import fresh_uid
 
-__all__ = ["Pool", "AsyncResult", "MapResult"]
+__all__ = ["Pool", "AsyncResult", "MapResult", "ProcessError", "TimeoutError"]
+
+
+class ProcessError(Exception):
+    """Base of repro.core.mp exceptions (multiprocessing.ProcessError)."""
+
+
+class TimeoutError(ProcessError):  # noqa: A001 - mirrors multiprocessing
+    """Deliberately distinct from the builtin TimeoutError, exactly like
+    ``multiprocessing.TimeoutError``: callers port ``except
+    multiprocessing.TimeoutError`` unchanged, and a builtin-catching
+    handler does not accidentally swallow pool timeouts."""
 
 _POISON = b"__poison__"
 _SUBMIT_RPUSH_ARITY = 64  # max chunks per RPUSH inside a submit pipeline
@@ -147,7 +158,7 @@ class AsyncResult:
 
     def get(self, timeout: Optional[float] = None):
         if not self._event.wait(timeout):
-            raise TimeoutError("pool result not ready")
+            raise TimeoutError(f"pool result not ready after {timeout}s")
         if self._first_error is not None:
             raise self._first_error
         return self._result_value()

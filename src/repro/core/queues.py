@@ -40,6 +40,7 @@ import time
 from typing import Any, Optional, Tuple
 
 from . import serialization
+from .pool import TimeoutError  # the multiprocessing-compatible one
 from .reference import RemoteResource
 
 __all__ = ["Pipe", "Connection", "Queue", "SimpleQueue", "JoinableQueue",

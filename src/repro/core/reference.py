@@ -75,8 +75,15 @@ class RemoteResource:
     # -- ttl backstop --------------------------------------------------------
 
     def _touch_ttl(self) -> None:
-        if self._ttl_s and self._ttl_s > 0:
-            for k in self._kv_keys():
+        if not (self._ttl_s and self._ttl_s > 0):
+            return
+        keys = self._kv_keys()
+        batch = getattr(self._store, "execute_batch", None)
+        if batch is not None and len(keys) > 1:
+            # one round trip: a block-backed array can have many segment keys
+            batch([("expire", (k, self._ttl_s), {}) for k in keys])
+        else:
+            for k in keys:
                 self._store.expire(k, self._ttl_s)
 
     # -- refcounting ---------------------------------------------------------

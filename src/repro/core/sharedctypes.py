@@ -1,23 +1,54 @@
-"""Shared memory abstractions over KV lists (paper §3.2 "Shared state").
+"""Shared memory abstractions over KV values (paper §3.2 "Shared state").
 
-Array/Value hold only basic C-typed scalars and are backed by the LIST
-type — "each element of the list will be at most sizeof(long double)" —
-so **every index access is one KV command**. This is deliberately faithful:
-it is exactly the cost model that makes the paper's in-place shared-array
-sort prohibitively slow remotely (Table 3), which our
-``benchmarks/bench_sort.py`` reproduces. Slice reads/writes map to
-LRANGE / per-index LSET inside one transaction.
+``Array``/``Value`` hold only basic C-typed scalars. Two storage layouts
+are available per array via ``layout=``; they trade paper fidelity
+against remote round trips:
+
+* ``layout="block"`` (default) — elements are struct-packed
+  (little-endian) into fixed-size binary segments of ``SEGMENT_BYTES``
+  stored as KV string values, addressed with byte-range commands.
+  Cost model:
+
+  - single element read / write  -> 1 GETRANGE / 1 SETRANGE
+  - slice read (any stride)      -> 1 MGET of the covered segments
+  - slice write (any stride)     -> 1 MSETRANGE of coalesced byte runs
+  - under the array's lock       -> ~0 commands after first touch: while
+    ``with arr.get_lock():`` is held, reads are served from a local
+    segment cache (misses fetched one MGET at a time) and writes are
+    write-combined locally, then flushed as ONE MSETRANGE of the dirty
+    byte runs at release (only bytes this scope stored — no segment
+    write-back false sharing). Acquire invalidates the cache. This is
+    release consistency
+    — exactly the semantics holding the lock already promises — and it
+    is what makes the paper's "did not finish remotely" in-place shared
+    array sort (Table 3) complete: O(segments) commands instead of
+    O(elements²).
+
+* ``layout="list"`` — the paper-faithful layout: the array is a KV LIST,
+  one element per index ("each element of the list will be at most
+  sizeof(long double)"), so **every index access is one KV command**.
+  Slice reads/writes map to LRANGE / per-index LSET inside one
+  transaction. This is deliberately the cost model that makes the
+  paper's in-place sort prohibitively slow remotely; it is kept for A/B
+  measurement (``benchmarks/bench_sort.py`` runs both layouts).
 """
 
 from __future__ import annotations
 
 import struct
-from typing import Any, Iterable, List, Optional, Sequence, Union
+import threading
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Union
 
 from .reference import RemoteResource
 from .synchronize import RLock
 
-__all__ = ["Value", "Array", "RawValue", "RawArray", "typecode_to_type"]
+__all__ = ["Value", "Array", "RawValue", "RawArray", "typecode_to_type",
+           "SEGMENT_BYTES"]
+
+#: Bytes per block-layout segment. 4 KiB rides the serialization layer's
+#: out-of-band threshold (segments cross the wire zero-copy) while keeping
+#: single-segment fetches well under one bandwidth-dominated round trip.
+SEGMENT_BYTES = 4096
 
 # typecode -> (python cast, struct fmt) ; mirrors ctypes/array typecodes
 _TYPECODES = {
@@ -30,6 +61,14 @@ typecode_to_type = {k: v for k, v in _TYPECODES.items()}
 
 
 def _cast(typecode: str, v: Any) -> Any:
+    if typecode == "c":
+        # ctypes c_char semantics: a length-1 bytes/bytearray, or an int
+        # in [0, 256). bytes(65) would silently yield 65 NUL bytes.
+        if isinstance(v, int) and 0 <= v < 256:
+            return bytes([v])
+        if isinstance(v, (bytes, bytearray)) and len(v) == 1:
+            return bytes(v)
+        raise TypeError("one character bytes, bytearray or integer expected")
     py = _TYPECODES[typecode]
     v = py(v)
     if typecode in ("f",):  # round-trip float32 precision like ctypes
@@ -37,42 +76,349 @@ def _cast(typecode: str, v: Any) -> Any:
     return v
 
 
+def _zero(typecode: str) -> Any:
+    return b"\x00" if typecode == "c" else _cast(typecode, 0)
+
+
+#: typecode -> struct format. Standard-size "<l"/"<L" are 4 bytes, but
+#: ctypes c_long/c_ulong are 8 on LP64 — pack them as 8 bytes so every
+#: value a native multiprocessing.Array("l") accepts fits, on every
+#: worker architecture.
+_STRUCT_FMT = {"l": "q", "L": "Q"}
+
+
+class _Codec:
+    """struct-based element <-> bytes packing for one typecode.
+
+    Fixed little-endian layout so an array created on one architecture
+    reads identically from any worker.
+    """
+
+    __slots__ = ("typecode", "itemsize", "_fmt", "_one")
+
+    def __init__(self, typecode: str):
+        self.typecode = typecode
+        self._fmt = _STRUCT_FMT.get(typecode, typecode)
+        self._one = struct.Struct("<" + self._fmt)
+        self.itemsize = self._one.size
+
+    def pack_one(self, v: Any) -> bytes:
+        return self._one.pack(v)
+
+    def unpack_one(self, buf: Any, offset: int = 0) -> Any:
+        return self._one.unpack_from(buf, offset)[0]
+
+    def pack_many(self, vals: Sequence[Any]) -> bytes:
+        return struct.pack(f"<{len(vals)}{self._fmt}", *vals)
+
+    def unpack_many(self, buf: Any, count: int, offset: int = 0) -> List[Any]:
+        return list(struct.unpack_from(f"<{count}{self._fmt}", buf, offset))
+
+
+# ---------------------------------------------------------------------------
+# Backings: how an array's elements map onto KV commands
+# ---------------------------------------------------------------------------
+
+
+class _ListBacking:
+    """Paper-faithful: one LIST element per index, one command per access."""
+
+    layout = "list"
+
+    def __init__(self, store: Any, keyfn: Callable[[str], str],
+                 typecode: str, length: int):
+        self._store = store
+        self._typecode = typecode
+        self._length = length
+        self._data_key = keyfn("data")
+
+    def initialize(self, vals: Sequence[Any]) -> None:
+        self._store.rpush(self._data_key, *vals)
+
+    def kv_keys(self) -> List[str]:
+        return [self._data_key]
+
+    def read_one(self, i: int) -> Any:
+        return self._store.lindex(self._data_key, i)
+
+    def read_slice(self, start: int, stop: int, step: int) -> List[Any]:
+        idxs = range(start, stop, step)
+        if not len(idxs):
+            return []
+        if step == 1:
+            return self._store.lrange(self._data_key, start, stop - 1)
+        batch = getattr(self._store, "execute_batch", None)
+        if batch is not None and len(idxs) > 1:
+            # strided read: one batched round trip, not one per index
+            out = []
+            for ok, v in batch([("lindex", (self._data_key, j), {})
+                                for j in idxs]):
+                if not ok:
+                    raise v
+                out.append(v)
+            return out
+        return [self._store.lindex(self._data_key, j) for j in idxs]
+
+    def write_one(self, i: int, v: Any) -> None:
+        self._store.lset(self._data_key, i, v)
+
+    def write_slice(self, idxs: Sequence[int], vals: Sequence[Any]) -> None:
+        data_key = self._data_key
+        idxs, vals = list(idxs), list(vals)
+
+        def txn(s):  # one atomic command batch (closes over plain data)
+            for j, v in zip(idxs, vals):
+                s.lset(data_key, j, v)
+        if hasattr(self._store, "shards"):
+            self._store.transaction(txn, key_hint=data_key)
+        else:
+            self._store.transaction(txn)
+
+    # lock-scope hooks: the faithful layout has no client cache
+    def cache_begin(self) -> None:
+        pass
+
+    def cache_end(self) -> None:
+        pass
+
+
+class _BlockBacking:
+    """Struct-packed fixed-size segments + lock-scoped client cache."""
+
+    layout = "block"
+
+    def __init__(self, store: Any, keyfn: Callable[[str], str],
+                 typecode: str, length: int):
+        self._store = store
+        self._keyfn = keyfn
+        self._codec = _Codec(typecode)
+        self._length = length
+        self._eps = max(1, SEGMENT_BYTES // self._codec.itemsize)
+        self._nsegs = -(-length // self._eps) if length else 0
+        # lock-scoped cache: seg index -> local mutable copy of its bytes.
+        # Scoped to the lock-HOLDING thread (recorded at cache_begin): a
+        # sibling thread touching this proxy without the lock must bypass
+        # the cache and go straight to the store — consulting another
+        # thread's scope would race its invalidation/flush.
+        # Dirtiness is tracked per element byte offset, not per segment:
+        # the flush writes only bytes this scope actually stored, so it
+        # cannot clobber a concurrent lock-free writer's elements that
+        # merely share a segment (no write-back false sharing).
+        self._cache: Dict[int, bytearray] = {}
+        self._dirty: Dict[int, Set[int]] = {}  # seg -> dirty byte offsets
+        self._owner_tid: Optional[int] = None
+
+    def _cache_on(self) -> bool:
+        return self._owner_tid == threading.get_ident()
+
+    def _seg_key(self, k: int) -> str:
+        return self._keyfn(f"seg:{k}")
+
+    def _seg_nbytes(self, k: int) -> int:
+        n_elems = min(self._eps, self._length - k * self._eps)
+        return n_elems * self._codec.itemsize
+
+    def kv_keys(self) -> List[str]:
+        return [self._seg_key(k) for k in range(self._nsegs)]
+
+    def initialize(self, vals: Sequence[Any]) -> None:
+        blob = self._codec.pack_many(vals)
+        seg_b = self._eps * self._codec.itemsize
+        self._store.mset({self._seg_key(k): blob[k * seg_b:(k + 1) * seg_b]
+                          for k in range(self._nsegs)})
+
+    # -- segment materialization --------------------------------------------
+
+    def _normalize(self, k: int, raw: Any) -> bytes:
+        """Missing / short segment bytes read as zeros (a key that was only
+        partially SETRANGEd, or expired under the TTL backstop)."""
+        want = self._seg_nbytes(k)
+        raw = bytes(raw or b"")
+        return raw if len(raw) >= want else raw + b"\x00" * (want - len(raw))
+
+    def _segments(self, segs: Sequence[int]) -> Dict[int, Any]:
+        """Buffers for every segment in ``segs``: cache hits are free, all
+        misses arrive in ONE MGET. In the lock-holder's scope, fetched
+        segments stay cached (as mutable local copies) until release."""
+        cache_on = self._cache_on()
+        out: Dict[int, Any] = {}
+        missing: List[int] = []
+        for k in segs:
+            buf = self._cache.get(k) if cache_on else None
+            if buf is None:
+                missing.append(k)
+            else:
+                out[k] = buf
+        if missing:
+            fetched = self._store.mget([self._seg_key(k) for k in missing])
+            for k, raw in zip(missing, fetched):
+                buf: Any = self._normalize(k, raw)
+                if cache_on:
+                    buf = bytearray(buf)
+                    self._cache[k] = buf
+                out[k] = buf
+        return out
+
+    # -- element access ------------------------------------------------------
+
+    def read_one(self, i: int) -> Any:
+        isz = self._codec.itemsize
+        k, off = divmod(i, self._eps)
+        if self._cache_on():
+            return self._codec.unpack_one(self._segments([k])[k], off * isz)
+        lo = off * isz
+        raw = self._store.getrange(self._seg_key(k), lo, lo + isz - 1)
+        if len(raw) < isz:
+            raw = bytes(raw) + b"\x00" * (isz - len(raw))
+        return self._codec.unpack_one(raw)
+
+    def read_slice(self, start: int, stop: int, step: int) -> List[Any]:
+        idxs = range(start, stop, step)
+        if not len(idxs):
+            return []
+        isz = self._codec.itemsize
+        segs = sorted({j // self._eps for j in idxs})
+        bufs = self._segments(segs)
+        if step == 1 and segs == list(range(segs[0], segs[-1] + 1)):
+            # contiguous: join covered segments, unpack the run in one go
+            blob = b"".join(bytes(bufs[k]) for k in segs)
+            return self._codec.unpack_many(
+                blob, len(idxs), (start - segs[0] * self._eps) * isz)
+        return [self._codec.unpack_one(bufs[j // self._eps],
+                                       (j % self._eps) * isz)
+                for j in idxs]
+
+    def write_one(self, i: int, v: Any) -> None:
+        isz = self._codec.itemsize
+        k, off = divmod(i, self._eps)
+        packed = self._codec.pack_one(v)
+        if self._cache_on():
+            buf = self._segments([k])[k]
+            buf[off * isz:(off + 1) * isz] = packed
+            self._dirty.setdefault(k, set()).add(off * isz)
+            return
+        self._store.setrange(self._seg_key(k), off * isz, packed)
+
+    def write_slice(self, idxs: Sequence[int], vals: Sequence[Any]) -> None:
+        isz = self._codec.itemsize
+        if self._cache_on():
+            bufs = self._segments(sorted({j // self._eps for j in idxs}))
+            for j, v in zip(idxs, vals):
+                k, off = divmod(j, self._eps)
+                bufs[k][off * isz:(off + 1) * isz] = self._codec.pack_one(v)
+                self._dirty.setdefault(k, set()).add(off * isz)
+            return
+        # Uncached: ONE MSETRANGE of byte runs, coalescing adjacent
+        # elements (a contiguous slice write becomes one run per segment).
+        entries: List[tuple] = []
+        cur_key: Optional[str] = None
+        cur_start = 0
+        cur = bytearray()
+        for j, v in zip(idxs, vals):
+            k, off = divmod(j, self._eps)
+            key, boff = self._seg_key(k), off * isz
+            packed = self._codec.pack_one(v)
+            if key == cur_key and boff == cur_start + len(cur):
+                cur += packed
+            else:
+                if cur_key is not None:
+                    entries.append((cur_key, cur_start, bytes(cur)))
+                cur_key, cur_start, cur = key, boff, bytearray(packed)
+        entries.append((cur_key, cur_start, bytes(cur)))
+        self._store.msetrange(entries)
+
+    # -- lock-scope hooks ----------------------------------------------------
+
+    def cache_begin(self) -> None:
+        """Outermost lock acquire: drop anything stale, open the scope for
+        the acquiring thread."""
+        self._cache.clear()
+        self._dirty.clear()
+        self._owner_tid = threading.get_ident()
+
+    def cache_end(self) -> None:
+        """Outermost lock release (still holding it): flush every dirty
+        byte run as ONE MSETRANGE, then close the scope. Only bytes this
+        scope stored are written back (dirty offsets coalesced into runs),
+        never whole segments."""
+        try:
+            if self._dirty:
+                isz = self._codec.itemsize
+                entries = []
+                for k in sorted(self._dirty):
+                    buf = self._cache[k]
+                    run_start = run_end = None
+                    for boff in sorted(self._dirty[k]):
+                        if run_end is not None and boff == run_end:
+                            run_end += isz
+                            continue
+                        if run_start is not None:
+                            entries.append((self._seg_key(k), run_start,
+                                            bytes(buf[run_start:run_end])))
+                        run_start, run_end = boff, boff + isz
+                    entries.append((self._seg_key(k), run_start,
+                                    bytes(buf[run_start:run_end])))
+                self._store.msetrange(entries)
+        finally:
+            self._owner_tid = None
+            self._cache.clear()
+            self._dirty.clear()
+
+
+_LAYOUTS = {"block": _BlockBacking, "list": _ListBacking}
+
+
+# ---------------------------------------------------------------------------
+# Public proxies
+# ---------------------------------------------------------------------------
+
+
 class RawArray(RemoteResource):
-    """Lock-free shared array of basic C values, one LIST element each."""
+    """Lock-free shared array of basic C values (no cache: every access
+    pays its KV commands; see the module docstring for the cost model)."""
 
     _RESOURCE_KIND = "array"
 
     def __init__(self, typecode: str, size_or_init: Union[int, Sequence[Any]],
-                 _adopt: bool = False, **kw):
+                 layout: str = "block", _adopt: bool = False, **kw):
         if typecode not in _TYPECODES:
             raise ValueError(f"bad typecode {typecode!r}")
+        if layout not in _LAYOUTS:
+            raise ValueError(f"bad layout {layout!r} (want 'block' or 'list')")
         super().__init__(_adopt=_adopt, **kw)
         if isinstance(size_or_init, int):
-            init: List[Any] = [_cast(typecode, 0) if typecode != "c" else b"\x00"
-                               for _ in range(size_or_init)]
+            init: List[Any] = [_zero(typecode)] * size_or_init
         else:
             init = [_cast(typecode, v) for v in size_or_init]
-        self._rebuild(typecode, len(init))
+        self._rebuild(typecode, len(init), layout)
         if not _adopt and init:
-            self._store.rpush(self._data_key, *init)
+            self._backing.initialize(init)
+            self._touch_ttl()  # segment keys exist only after initialize()
 
-    def _rebuild(self, typecode: str, length: int) -> None:
+    def _rebuild(self, typecode: str, length: int,
+                 layout: str = "block") -> None:
         self._typecode = typecode
         self._length = length
+        self._layout = layout
+        self._backing = _LAYOUTS[layout](self._store, self._key,
+                                         typecode, length)
 
     def _reduce_state(self):
-        return (self._typecode, self._length)
+        return (self._typecode, self._length, self._layout)
 
     @property
     def typecode(self) -> str:
         return self._typecode
 
     @property
-    def _data_key(self) -> str:
-        return self._key("data")
+    def layout(self) -> str:
+        return self._layout
 
     def _kv_keys(self):
-        return [self._refs_key, self._data_key]
+        # RemoteResource.__init__ touches TTLs before _rebuild has built
+        # the backing; at that point only the refcount key exists.
+        backing = getattr(self, "_backing", None)
+        return [self._refs_key] + (backing.kv_keys() if backing else [])
 
     def __len__(self) -> int:
         return self._length
@@ -87,41 +433,20 @@ class RawArray(RemoteResource):
     def __getitem__(self, i):
         if isinstance(i, slice):
             start, stop, step = i.indices(self._length)
-            if step == 1:
-                return self._store.lrange(self._data_key, start, stop - 1)
-            idxs = range(start, stop, step)
-            batch = getattr(self._store, "execute_batch", None)
-            if batch is not None and len(idxs) > 1:
-                # strided read: one batched round trip, not one per index
-                out = []
-                for ok, v in batch([("lindex", (self._data_key, j), {})
-                                    for j in idxs]):
-                    if not ok:
-                        raise v
-                    out.append(v)
-                return out
-            return [self._store.lindex(self._data_key, j) for j in idxs]
-        return self._store.lindex(self._data_key, self._index(i))
+            return self._backing.read_slice(start, stop, step)
+        return self._backing.read_one(self._index(i))
 
     def __setitem__(self, i, value):
         if isinstance(i, slice):
             start, stop, step = i.indices(self._length)
-            idxs = list(range(start, stop, step))
+            idxs = range(start, stop, step)
             vals = [_cast(self._typecode, v) for v in value]
             if len(idxs) != len(vals):
                 raise ValueError("slice assignment length mismatch")
-            data_key = self._data_key
-
-            def txn(s):  # one atomic command batch (closes over plain data)
-                for j, v in zip(idxs, vals):
-                    s.lset(data_key, j, v)
-            if hasattr(self._store, "shards"):
-                self._store.transaction(txn, key_hint=data_key)
-            else:
-                self._store.transaction(txn)
+            if idxs:
+                self._backing.write_slice(idxs, vals)
             return
-        self._store.lset(self._data_key, self._index(i),
-                         _cast(self._typecode, value))
+        self._backing.write_one(self._index(i), _cast(self._typecode, value))
 
     def __iter__(self):
         return iter(self[:])
@@ -131,19 +456,31 @@ class RawArray(RemoteResource):
 
 
 class Array(RawArray):
-    """RawArray + an RLock (multiprocessing's default lock=True)."""
+    """RawArray + an RLock (multiprocessing's default lock=True). Under
+    ``layout="block"`` the lock scopes the client cache (module docstring)."""
 
     def __init__(self, typecode: str, size_or_init, lock: bool = True,
-                 _adopt: bool = False, **kw):
-        super().__init__(typecode, size_or_init, _adopt=_adopt, **kw)
-        self._lock_obj: Optional[RLock] = RLock() if lock else None
+                 layout: str = "block", _adopt: bool = False, **kw):
+        super().__init__(typecode, size_or_init, layout=layout,
+                         _adopt=_adopt, **kw)
+        self._lock_obj: Optional[RLock] = (
+            RLock(store=kw.get("store")) if lock else None)
+        self._attach_cache()
 
     def _reduce_state(self):
-        return (self._typecode, self._length, self._lock_obj)
+        return (self._typecode, self._length, self._layout, self._lock_obj)
 
-    def _rebuild(self, typecode: str, length: int, lock_obj=None) -> None:
-        super()._rebuild(typecode, length)
+    def _rebuild(self, typecode: str, length: int, layout: str = "block",
+                 lock_obj=None) -> None:
+        super()._rebuild(typecode, length, layout)
         self._lock_obj = lock_obj
+        self._attach_cache()
+
+    def _attach_cache(self) -> None:
+        """Scope this proxy's segment cache to this proxy's lock."""
+        if self._lock_obj is not None and self._backing.layout == "block":
+            self._lock_obj._register_scope_hooks(
+                self._backing.cache_begin, self._backing.cache_end)
 
     def get_lock(self) -> RLock:
         if self._lock_obj is None:
@@ -172,8 +509,9 @@ class RawValue(RawArray):
 
     _RESOURCE_KIND = "value"
 
-    def __init__(self, typecode: str, value: Any = 0, _adopt: bool = False, **kw):
-        super().__init__(typecode, [value], _adopt=_adopt, **kw)
+    def __init__(self, typecode: str, value: Any = 0, layout: str = "block",
+                 _adopt: bool = False, **kw):
+        super().__init__(typecode, [value], layout=layout, _adopt=_adopt, **kw)
 
     @property
     def value(self):
@@ -186,16 +524,22 @@ class RawValue(RawArray):
 
 class Value(RawValue):
     def __init__(self, typecode: str, value: Any = 0, lock: bool = True,
-                 _adopt: bool = False, **kw):
-        super().__init__(typecode, value, _adopt=_adopt, **kw)
-        self._lock_obj: Optional[RLock] = RLock() if lock else None
+                 layout: str = "block", _adopt: bool = False, **kw):
+        super().__init__(typecode, value, layout=layout, _adopt=_adopt, **kw)
+        self._lock_obj: Optional[RLock] = (
+            RLock(store=kw.get("store")) if lock else None)
+        self._attach_cache()
 
     def _reduce_state(self):
-        return (self._typecode, self._length, self._lock_obj)
+        return (self._typecode, self._length, self._layout, self._lock_obj)
 
-    def _rebuild(self, typecode: str, length: int, lock_obj=None) -> None:
-        RawArray._rebuild(self, typecode, length)
+    def _rebuild(self, typecode: str, length: int, layout: str = "block",
+                 lock_obj=None) -> None:
+        RawArray._rebuild(self, typecode, length, layout)
         self._lock_obj = lock_obj
+        self._attach_cache()
+
+    _attach_cache = Array._attach_cache
 
     def get_lock(self) -> RLock:
         if self._lock_obj is None:

@@ -108,6 +108,18 @@ class Lock(Semaphore):
 
 
 class RLock(Lock):
+    """Lock + owner + recursion count, with *lock-scope hooks*.
+
+    Local (never serialized) callbacks fire at the edges of the outermost
+    acquire/release: ``on_acquire`` right after ownership is taken,
+    ``on_release`` right before the token is returned — i.e. still inside
+    mutual exclusion. Block-backed shared arrays register their cache
+    here: acquire invalidates stale local segments, release flushes
+    write-combined dirty segments in one command. That is release
+    consistency, and it is exactly the contract ``with arr.get_lock():``
+    already promises callers.
+    """
+
     _RESOURCE_KIND = "rlock"
 
     @property
@@ -121,15 +133,24 @@ class RLock(Lock):
     def _kv_keys(self):
         return super()._kv_keys() + [self._owner_key, self._count_key]
 
+    def _register_scope_hooks(self, on_acquire, on_release) -> None:
+        """Attach local outermost-scope callbacks (see class docstring).
+        Hooks live only on this proxy object: a pickled copy in another
+        process re-registers its own against its own cache."""
+        self.__dict__.setdefault("_scope_hooks", []).append(
+            (on_acquire, on_release))
+
     def acquire(self, block: bool = True, timeout: Optional[float] = None) -> bool:
         me = _caller_identity()
         if self._store.get(self._owner_key) == me:
             self._store.incr(self._count_key)
-            return True
+            return True  # reentrant: scope already open, hooks stay quiet
         if not super().acquire(block, timeout):
             return False
         self._store.set(self._owner_key, me)
         self._store.set(self._count_key, 1)
+        for on_acquire, _ in getattr(self, "_scope_hooks", ()):
+            on_acquire()
         return True
 
     def release(self) -> None:
@@ -138,8 +159,18 @@ class RLock(Lock):
             raise RuntimeError("cannot release un-acquired RLock")
         left = self._store.decr(self._count_key)
         if left <= 0:
-            self._store.delete(self._owner_key, self._count_key)
-            super().release()
+            # Flush hooks run while we still hold the lock: write-combined
+            # state must be visible before the next holder can acquire.
+            # The lock is returned even if a flush fails (finally): the
+            # exception propagates to the caller — whose writes ARE lost,
+            # like any failed store write — but other processes must not
+            # deadlock on a permanently-held lock.
+            try:
+                for _, on_release in getattr(self, "_scope_hooks", ()):
+                    on_release()
+            finally:
+                self._store.delete(self._owner_key, self._count_key)
+                super().release()
 
 
 class Condition(RemoteResource):

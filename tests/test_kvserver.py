@@ -237,3 +237,44 @@ class TestSubprocessBackend:
         pr.start()
         assert q.get(timeout=90) == ("pid-proof", 123)
         pr.join(30)
+
+
+class TestByteRangeOverTCP:
+    def test_byte_range_commands_roundtrip(self, server):
+        c = KVClient(server.address)
+        assert c.setrange("s", 0, b"Hello World") == 11
+        assert c.getrange("s", 6, -1) == b"World"
+        assert c.msetrange([("s", 6, b"Redis"), ("t", 1, b"x")]) == 2
+        assert c.get("s") == b"Hello Redis"
+        assert c.get("t") == b"\x00x"
+        assert c.strlen("s") == 11
+        c.close()
+
+    def test_segment_sized_ranges_cross_oob_path(self, server):
+        # 4 KiB values ride the out-of-band buffer path both directions
+        c = KVClient(server.address)
+        blob = bytes(range(256)) * 16
+        assert c.setrange("seg", 0, blob) == 4096
+        assert c.getrange("seg", 0, -1) == blob
+        assert c.getrange("seg", 4000, 4095) == blob[4000:4096]
+        c.close()
+
+    def test_block_array_with_cache_over_tcp(self, server):
+        set_session(Session(store=KVClient(server.address)))
+        try:
+            arr = mp.Array("d", [0.0] * 700)  # spans 2 segments
+            commands_before = server.store.metrics.total_commands()
+            with arr.get_lock():
+                for i in range(700):
+                    arr[i] = float(i)
+                total = sum(arr[i] for i in range(700))
+            in_scope = server.store.metrics.total_commands() - commands_before
+            assert total == sum(range(700))
+            assert arr[100:105] == [100.0, 101.0, 102.0, 103.0, 104.0]
+            assert arr[::-70] == [float(i) for i in range(699, -1, -70)]
+            # 1400 element accesses cost a handful of commands (lock
+            # choreography + segment fetches + one flush), not 1400.
+            assert in_scope <= 15, in_scope
+        finally:
+            from repro.core import reset_session
+            reset_session()

@@ -433,3 +433,91 @@ class TestSharded:
             deleted = p.delete(*[f"d-{i}" for i in range(8)])
         assert deleted.get() == 8
         assert sh.mget([f"d-{i}" for i in range(8)]) == [None] * 8
+
+
+class TestByteRange:
+    def test_getrange_semantics(self, kv):
+        kv.set("s", b"Hello World")
+        assert kv.getrange("s", 0, 4) == b"Hello"
+        assert kv.getrange("s", 6, -1) == b"World"
+        assert kv.getrange("s", -5, -1) == b"World"
+        assert kv.getrange("s", 0, -1) == b"Hello World"
+        assert kv.getrange("s", 20, 25) == b""
+        assert kv.getrange("missing", 0, -1) == b""
+        assert kv.strlen("s") == 11
+        assert kv.strlen("missing") == 0
+
+    def test_setrange_overwrite_and_extend(self, kv):
+        kv.set("s", b"Hello World")
+        assert kv.setrange("s", 6, b"Redis") == 11
+        assert kv.get("s") == b"Hello Redis"
+        # extend past the end zero-pads the gap
+        assert kv.setrange("s", 13, b"!") == 14
+        assert kv.get("s") == b"Hello Redis\x00\x00!"
+        # creates a missing key, zero-padded up to offset
+        assert kv.setrange("fresh", 3, b"xy") == 5
+        assert kv.get("fresh") == b"\x00\x00\x00xy"
+
+    def test_setrange_empty_value_is_a_noop(self, kv):
+        # Redis: an empty value neither creates the key nor pads it
+        assert kv.setrange("missing", 5, b"") == 0
+        assert not kv.exists("missing")
+        kv.set("s", b"abc")
+        assert kv.setrange("s", 10, b"") == 3
+        assert kv.get("s") == b"abc"
+        assert kv.msetrange([("gone", 4, b""), ("s", 0, b"X")]) == 2
+        assert not kv.exists("gone")
+        assert kv.get("s") == b"Xbc"
+
+    def test_setrange_negative_offset_rejected(self, kv):
+        with pytest.raises(ValueError):
+            kv.setrange("s", -1, b"x")
+
+    def test_byte_range_wrong_type(self, kv):
+        kv.rpush("l", b"a")
+        with pytest.raises(WrongTypeError):
+            kv.getrange("l", 0, -1)
+        kv.set("n", 42)  # non-bytes string value
+        with pytest.raises(WrongTypeError):
+            kv.setrange("n", 0, b"x")
+
+    def test_msetrange_is_one_command(self, kv):
+        kv.mset({"a": b"aaaa", "b": b"bbbb"})
+        before = kv.metrics.total_commands()
+        assert kv.msetrange([("a", 0, b"XX"), ("b", 2, b"YY"),
+                             ("c", 1, b"Z")]) == 3
+        assert kv.metrics.total_commands() - before == 1
+        assert kv.metrics.commands.get("MSETRANGE") == 1
+        assert kv.get("a") == b"XXaa"
+        assert kv.get("b") == b"bbYY"
+        assert kv.get("c") == b"\x00Z"
+
+    def test_byte_range_in_execute_batch(self, kv):
+        res = kv.execute_batch([
+            ("setrange", ("k", 0, b"abcdef"), {}),
+            ("getrange", ("k", 1, 3), {}),
+            ("msetrange", ([("k", 0, b"Z")],), {}),
+            ("getrange", ("k", 0, -1), {}),
+        ])
+        assert all(ok for ok, _ in res)
+        assert res[1][1] == b"bcd"
+        assert res[3][1] == b"Zbcdef"
+
+    def test_sharded_msetrange_routes_per_shard(self):
+        sh = ShardedKVStore([KVStore(name=f"s{i}") for i in range(4)])
+        entries = [(f"key-{i}", 2, b"XY") for i in range(12)]
+        assert sh.msetrange(entries) == 12
+        for i in range(12):
+            assert sh.get(f"key-{i}") == b"\x00\x00XY"
+        # hash-tagged keys co-locate: the whole batch is ONE command on
+        # one shard (the shared-array segment-flush fast path)
+        tagged = [(f"{{res}}:seg:{i}", 0, b"ab") for i in range(8)]
+        before = sh.metrics.commands.get("MSETRANGE", 0)
+        sh.msetrange(tagged)
+        assert sh.metrics.commands.get("MSETRANGE", 0) - before == 1
+
+    def test_sharded_getrange_setrange_single_key_routing(self):
+        sh = ShardedKVStore([KVStore(name=f"s{i}") for i in range(3)])
+        sh.setrange("k", 0, b"hello")
+        assert sh.getrange("k", 1, 3) == b"ell"
+        assert sh.strlen("k") == 5

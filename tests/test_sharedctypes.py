@@ -1,0 +1,296 @@
+"""ISSUE 2 coverage: block-backed shared arrays + lock-scoped caching.
+
+- negative-step and strided slice reads/writes under both layouts
+- Value/Array round-tripping through a worker under both layouts
+- ctypes-faithful typecode "c" casting
+- the block layout's command-count cost model (slices are O(segments),
+  lock scopes absorb element traffic, release flushes once)
+- multiprocessing-compatible TimeoutError
+"""
+
+import pytest
+
+from repro.core import get_session, mp, reset_session
+from repro.core.sharedctypes import SEGMENT_BYTES, _cast
+
+
+pytestmark = pytest.mark.usefixtures("fresh_session")
+
+LAYOUTS = ["block", "list"]
+
+
+class TestSlices:
+    @pytest.mark.parametrize("layout", LAYOUTS)
+    def test_negative_step_reads(self, layout):
+        ref = list(range(20))
+        arr = mp.Array("i", ref, layout=layout)
+        for sl in (slice(None, None, -1), slice(15, 3, -2), slice(18, None, -3),
+                   slice(5, 5, -1), slice(3, 10, -1)):
+            assert arr[sl] == ref[sl], sl
+
+    @pytest.mark.parametrize("layout", LAYOUTS)
+    def test_strided_reads(self, layout):
+        ref = [float(i) for i in range(31)]
+        arr = mp.Array("d", ref, layout=layout)
+        for sl in (slice(None, None, 2), slice(1, 25, 3), slice(0, 0),
+                   slice(30, None), slice(-7, None, 2)):
+            assert arr[sl] == ref[sl], sl
+
+    @pytest.mark.parametrize("layout", LAYOUTS)
+    def test_negative_step_and_strided_writes(self, layout):
+        ref = list(range(20))
+        arr = mp.Array("q", ref, layout=layout)
+        arr[::-2] = list(range(10))
+        ref[::-2] = list(range(10))
+        assert arr[:] == ref
+        arr[3:15:3] = [100, 200, 300, 400]
+        ref[3:15:3] = [100, 200, 300, 400]
+        assert arr[:] == ref
+        arr[17:2:-5] = [-1, -2, -3]
+        ref[17:2:-5] = [-1, -2, -3]
+        assert arr[:] == ref
+
+    @pytest.mark.parametrize("layout", LAYOUTS)
+    def test_slice_assignment_length_mismatch(self, layout):
+        arr = mp.Array("i", 5, layout=layout)
+        with pytest.raises(ValueError):
+            arr[1:4] = [1, 2]
+
+    @pytest.mark.parametrize("layout", LAYOUTS)
+    def test_long_typecode_holds_64bit_values(self, layout):
+        # ctypes c_long is 8 bytes on LP64; the packed layout must not
+        # narrow it to the 4-byte standard struct size
+        arr = mp.Array("l", [2 ** 40, -(2 ** 40)], layout=layout)
+        assert arr[:] == [2 ** 40, -(2 ** 40)]
+        arr[0] = 2 ** 62
+        assert arr[0] == 2 ** 62
+        ua = mp.Array("L", [2 ** 63], layout=layout)
+        assert ua[0] == 2 ** 63
+
+    def test_multi_segment_array(self):
+        # force > 1 segment: 4096/8 = 512 doubles per segment
+        n = SEGMENT_BYTES // 8 * 2 + 17
+        ref = [float(i) for i in range(n)]
+        arr = mp.Array("d", ref)
+        assert len(arr) == n
+        assert arr[:] == ref
+        assert arr[510:515] == ref[510:515]  # straddles the seg boundary
+        arr[510:515] = [9.0] * 5
+        ref[510:515] = [9.0] * 5
+        assert arr[:] == ref
+        assert arr[::511] == ref[::511]
+
+
+class TestWorkerRoundTrip:
+    @pytest.mark.parametrize("layout", LAYOUTS)
+    def test_array_through_worker(self, layout):
+        arr = mp.Array("d", [0.0] * 6, layout=layout)
+
+        def fill(arr, lo, hi):
+            with arr.get_lock():
+                for i in range(lo, hi):
+                    arr[i] = float(i * i)
+        ps = [mp.Process(target=fill, args=(arr, 0, 3)),
+              mp.Process(target=fill, args=(arr, 3, 6))]
+        [p.start() for p in ps]
+        [p.join(10) for p in ps]
+        assert arr[:] == [float(i * i) for i in range(6)]
+
+    @pytest.mark.parametrize("layout", LAYOUTS)
+    def test_value_through_worker(self, layout):
+        val = mp.Value("i", 0, layout=layout)
+
+        def bump(val):
+            for _ in range(10):
+                with val.get_lock():
+                    val.value += 1
+        ps = [mp.Process(target=bump, args=(val,)) for _ in range(3)]
+        [p.start() for p in ps]
+        [p.join(10) for p in ps]
+        assert val.value == 30
+
+    @pytest.mark.parametrize("layout", LAYOUTS)
+    def test_rawarray_through_worker(self, layout):
+        arr = mp.RawArray("i", [0] * 4, layout=layout)
+
+        def fill(arr):
+            arr[:] = [1, 2, 3, 4]
+        p = mp.Process(target=fill, args=(arr,))
+        p.start()
+        p.join(10)
+        assert arr[:] == [1, 2, 3, 4]
+
+
+class TestCharTypecode:
+    @pytest.mark.parametrize("layout", LAYOUTS)
+    def test_int_and_bytes_accepted(self, layout):
+        arr = mp.Array("c", 3, layout=layout)
+        arr[0] = 65           # ctypes: c_char(65) == b"A"
+        arr[1] = b"Z"
+        arr[2] = bytearray(b"!")
+        assert arr[:] == [b"A", b"Z", b"!"]
+
+    def test_bad_values_rejected(self):
+        arr = mp.Array("c", 2)
+        for bad in (b"xy", b"", "A", 1.5, 256, -1):
+            with pytest.raises(TypeError):
+                arr[0] = bad
+
+    def test_cast_directly(self):
+        assert _cast("c", 65) == b"A"
+        assert _cast("c", b"B") == b"B"
+        with pytest.raises(TypeError):
+            _cast("c", b"many")
+
+
+class TestBlockCostModel:
+    def test_slice_read_is_one_command(self):
+        arr = mp.Array("d", [1.0] * 100)
+        store = get_session().store
+        before = store.metrics.total_commands()
+        assert arr[10:90] == [1.0] * 80
+        assert store.metrics.total_commands() - before == 1  # one MGET
+
+    def test_slice_write_is_one_command(self):
+        arr = mp.Array("d", [0.0] * 100)
+        store = get_session().store
+        before = store.metrics.total_commands()
+        arr[10:90] = [2.0] * 80
+        assert store.metrics.total_commands() - before == 1  # one MSETRANGE
+        assert arr[10:90] == [2.0] * 80
+
+    def test_lock_scope_absorbs_element_traffic(self):
+        arr = mp.Array("d", [0.0] * 256)  # single segment
+        store = get_session().store
+        with arr.get_lock():
+            before = store.metrics.total_commands()
+            for i in range(256):
+                arr[i] = float(i)
+            _ = [arr[i] for i in range(256)]
+            in_scope = store.metrics.total_commands() - before
+        # 512 element accesses, ONE segment fetch
+        assert in_scope == 1, in_scope
+        assert arr[:] == [float(i) for i in range(256)]
+
+    def test_release_flushes_dirty_segments_once(self):
+        arr = mp.Array("d", [0.0] * 1200)  # 3 segments
+        store = get_session().store
+        with arr.get_lock():
+            arr[:] = [float(i) for i in range(1200)]
+            flushes_before = store.metrics.commands.get("MSETRANGE", 0)
+        assert store.metrics.commands.get("MSETRANGE", 0) - flushes_before == 1
+        assert arr[0] == 0.0 and arr[1199] == 1199.0
+
+    def test_acquire_invalidates_stale_cache(self):
+        arr = mp.Array("i", [0] * 8)
+        import pickle
+        other = pickle.loads(pickle.dumps(arr))  # second proxy, own cache
+        with arr.get_lock():
+            assert arr[3] == 0  # populates arr's cache
+        with other.get_lock():
+            other[3] = 42       # flushed at release
+        with arr.get_lock():
+            assert arr[3] == 42  # reacquire must not serve the stale 0
+
+    def test_dirty_writes_invisible_until_release(self):
+        arr = mp.Array("i", [0] * 4)
+        import pickle
+        other = pickle.loads(pickle.dumps(arr))
+        arr.get_lock().acquire()
+        arr[0] = 7
+        # "other" reads the store directly (it does not hold the lock):
+        # the write is still write-combined client-side
+        assert other._backing.read_one(0) == 0
+        arr.get_lock().release()
+        assert other[0] == 7  # flush published it
+
+    def test_sibling_thread_without_lock_bypasses_cache(self):
+        # A second thread of the SAME process using the same proxy without
+        # holding the lock must hit the store directly: its writes land
+        # (not diverted into the holder's scope) and nothing crashes.
+        import threading
+        arr = mp.Array("i", [0] * 8)
+        store = get_session().store
+        entered = threading.Event()
+        done = threading.Event()
+
+        def holder():
+            with arr.get_lock():
+                arr[0] = 1
+                entered.set()
+                done.wait(5)
+
+        t = threading.Thread(target=holder)
+        t.start()
+        assert entered.wait(5)
+        arr[7] = 42  # lock-free sibling write goes straight to the store
+        raw = store.getrange(arr._backing._seg_key(0), 28, 31)
+        assert int.from_bytes(raw, "little") == 42
+        done.set()
+        t.join(5)
+        assert arr[7] == 42 and arr[0] == 1
+
+    def test_value_under_lock(self):
+        val = mp.Value("q", 5)
+        store = get_session().store
+        with val.get_lock():
+            before = store.metrics.total_commands()
+            for _ in range(50):
+                val.value += 1
+            in_scope = store.metrics.total_commands() - before
+        assert in_scope == 1  # one fetch; 100 accesses served locally
+        assert val.value == 55
+
+    def test_failed_flush_still_releases_lock(self):
+        arr = mp.Array("i", [0] * 4)
+        store = get_session().store
+        orig = store.msetrange
+        with pytest.raises(RuntimeError):
+            with arr.get_lock():
+                arr[0] = 1
+                store.msetrange = lambda entries: (_ for _ in ()).throw(
+                    RuntimeError("store down"))
+        store.msetrange = orig
+        # the flush failed (write lost, error surfaced) but the lock must
+        # not stay permanently held
+        assert arr.get_lock().acquire(block=False)
+        arr.get_lock().release()
+
+    def test_lock_false_has_no_cache(self):
+        arr = mp.Array("i", [1, 2, 3], lock=False)
+        with pytest.raises(AttributeError):
+            arr.get_lock()
+        assert arr[:] == [1, 2, 3]
+
+    def test_refcount_cleanup_removes_segments(self):
+        store = get_session().store
+        arr = mp.Array("d", [1.0] * 1200, ttl_s=0)
+        seg_keys = arr._backing.kv_keys()
+        assert all(store.exists(k) for k in seg_keys)
+        arr.close()
+        if arr._lock_obj is not None:
+            arr._lock_obj.close()
+        assert not any(store.exists(k) for k in seg_keys)
+
+
+class TestTimeoutError:
+    def test_distinct_from_builtin(self):
+        assert mp.TimeoutError is not TimeoutError
+        assert not issubclass(mp.TimeoutError, TimeoutError)
+        assert issubclass(mp.TimeoutError, mp.ProcessError)
+
+    def test_pool_get_raises_mp_timeout(self):
+        import time
+        with mp.Pool(1) as pool:
+            res = pool.apply_async(time.sleep, (1,))
+            with pytest.raises(mp.TimeoutError):
+                res.get(timeout=0.05)
+
+    def test_connection_and_join_raise_mp_timeout(self):
+        a, b = mp.Pipe()
+        with pytest.raises(mp.TimeoutError):
+            a.recv_bytes(timeout=0.02)
+        q = mp.JoinableQueue()
+        q.put("x")
+        with pytest.raises(mp.TimeoutError):
+            q.join(timeout=0.02)

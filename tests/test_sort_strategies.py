@@ -1,30 +1,53 @@
 """Paper Table 3 correctness: all three sort strategies produce sorted
-output, and their KV command profiles have the paper's ordering
-(inplace >> localcopy > message)."""
+output under both Array layouts; the paper-faithful ``layout="list"``
+keeps Table 3's command-count ordering (inplace >> localcopy > message);
+and the PR's block layout + lock-scoped cache flips the in-place verdict
+with >= 50x fewer KV commands at the same size."""
 
 import numpy as np
+import pytest
 
 from benchmarks.bench_sort import _run_strategy
-from repro.core import get_session
+from repro.core import get_session, reset_session
 
 
-def test_all_strategies_sort_correctly():
+@pytest.mark.parametrize("layout", ["block", "list"])
+def test_all_strategies_sort_correctly(layout):
     rng = np.random.default_rng(0)
     data = rng.random(200).tolist()
     expected = sorted(data)
     for strategy in ("inplace", "localcopy", "message"):
-        assert _run_strategy(strategy, list(data), 4) == expected, strategy
+        assert _run_strategy(strategy, list(data), 4,
+                             layout=layout) == expected, (strategy, layout)
 
 
 def test_command_count_ordering_matches_paper():
+    # The faithful one-element-per-index layout reproduces Table 3.
     rng = np.random.default_rng(1)
     data = rng.random(120).tolist()
     counts = {}
     for strategy in ("inplace", "localcopy", "message"):
         store = get_session().store
         before = store.metrics.total_commands()
-        _run_strategy(strategy, list(data), 4)
+        _run_strategy(strategy, list(data), 4, layout="list")
         counts[strategy] = store.metrics.total_commands() - before
     # Table 3's lesson in command-space
     assert counts["inplace"] > 10 * counts["localcopy"]
     assert counts["message"] < counts["localcopy"]
+
+
+def test_block_layout_makes_inplace_win():
+    # ISSUE 2 acceptance: the paper's losing workload, >= 50x fewer KV
+    # commands under layout="block" than layout="list" at the same size.
+    rng = np.random.default_rng(2)
+    data = rng.random(240).tolist()
+    expected = sorted(data)
+    counts = {}
+    for layout in ("block", "list"):
+        reset_session()
+        store = get_session().store
+        before = store.metrics.total_commands()
+        assert _run_strategy("inplace", list(data), 4,
+                             layout=layout) == expected
+        counts[layout] = store.metrics.total_commands() - before
+    assert counts["list"] >= 50 * counts["block"], counts
