@@ -1,6 +1,7 @@
-"""Paper Fig. 6: sustained Pipe throughput, plus wire-protocol A/B.
+"""Paper Fig. 6: sustained Pipe throughput, plus wire-protocol A/B and
+the cluster scaling matrix.
 
-Two families of rows:
+Three families of rows:
 
 * ``throughput/pipe`` — the paper-calibrated latency-model reproduction
   (1000 x 1MB => ~90 MB/s): the bandwidth term dominates, so the measured
@@ -13,13 +14,26 @@ Two families of rows:
   into single-RTT ``execute_batch`` flushes; >=1 MB payloads as
   out-of-band scatter-gather frames). These are the before/after numbers
   recorded in ROADMAP.md ("Performance").
+
+* ``throughput/cluster/*`` — the clients x shards scaling matrix (PR 3):
+  N client threads flushing scatter/gather pipelines against (a) ONE
+  in-process ``KVServer`` (client and server threads share a GIL — the
+  seed's ~2.3 GB/s loopback ceiling) and (b) a ``KVCluster`` of M shard
+  *processes* reached through ``ClusterClient``. Run directly for the
+  full matrix and the CI speedup gate::
+
+      python -m benchmarks.bench_throughput --clients 4 --shards 4
+      python -m benchmarks.bench_throughput --quick --clients 2 \
+          --shards 2 --assert-speedup 1.0
 """
 
 from __future__ import annotations
 
+import threading
 from typing import Callable, List, Tuple
 
 from repro.core import KVClient, KVServer, mp
+from repro.core.kvcluster import KVCluster
 
 from .common import Row, Timer, paper_session, row
 
@@ -136,9 +150,134 @@ def _payload_mbs(server: KVServer, quick: bool) -> Row:
                f"over {2 * n}x1MiB")
 
 
+# ---------------------------------------------------------------------------
+# Cluster scaling matrix (PR 3): clients x shards aggregate ops/s
+# ---------------------------------------------------------------------------
+
+
+_MATRIX_BLOB = b"x" * 8192  # payload case: 8 KiB queue blobs (OOB-sized)
+
+
+def _fanout_ops(store, n_clients: int, rounds: int, batch: int,
+                payload: bool) -> Tuple[float, float]:
+    """Aggregate ops/s of ``n_clients`` threads flushing transactional
+    pipelines of ``batch`` commands over untagged keys (so batches
+    scatter across every shard). ``payload=False`` is the command-rate
+    case (INCRs — wire/syscall bound); ``payload=True`` the data-plane
+    case (8 KiB RPUSH+LPOP — serialization and store bytes dominate, the
+    work a sharded serving plane actually offloads). Returns (ops/s, s)."""
+    errors: List[BaseException] = []
+    store.flushall()  # each measurement pass starts from clean counts
+
+    def worker(ci: int) -> None:
+        try:
+            for _ in range(rounds):
+                if payload:
+                    with store.pipeline() as p:
+                        for j in range(batch):
+                            p.rpush(f"bench:c{ci}:k{j}", _MATRIX_BLOB)
+                    with store.pipeline() as p:
+                        for j in range(batch):
+                            p.lpop(f"bench:c{ci}:k{j}")
+                else:
+                    with store.pipeline() as p:
+                        for j in range(batch):
+                            p.incr(f"bench:c{ci}:k{j}")
+        except BaseException as exc:  # pragma: no cover - surfaced below
+            errors.append(exc)
+
+    per_round = batch * (2 if payload else 1)
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_clients)]
+    with Timer() as t:
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+    if errors:
+        raise errors[0]
+    # correctness gate: every command landed exactly once
+    if payload:
+        assert store.llen("bench:c0:k0") == 0
+    else:
+        assert store.get("bench:c0:k0") == rounds
+    return n_clients * rounds * per_round / t.s, t.s
+
+
+def _cluster_matrix(quick: bool, clients_list: List[int],
+                    shards_list: List[int]) -> List[Row]:
+    """Two rows (command-rate + payload) per (clients, shards) pair:
+    KVCluster aggregate ops/s vs the single in-process KVServer baseline
+    (client and server threads sharing one GIL) at the same client
+    count. Best-of-_PASSES to smooth scheduler noise."""
+    rows: List[Row] = []
+    cases = [("cmds", False, 20 if quick else 40, 50 if quick else 100),
+             ("8KB", True, 10 if quick else 12, 30 if quick else 50)]
+    for n_clients in clients_list:
+        base: dict = {}
+        with KVServer() as server:  # baseline: 1 process, shared GIL
+            client = KVClient(server.address)
+            for tag, payload, rounds, batch in cases:
+                base[tag], _ = _best_rate(lambda: _fanout_ops(
+                    client, n_clients, rounds, batch, payload))
+            client.close()
+        for n_shards in shards_list:
+            with KVCluster(shards=n_shards) as cluster:
+                cc = cluster.client()
+                for tag, payload, rounds, batch in cases:
+                    ops, secs = _best_rate(lambda: _fanout_ops(
+                        cc, n_clients, rounds, batch, payload))
+                    width = max(cc.metrics.fanout, default=1)
+                    per_round = batch * (2 if payload else 1)
+                    rows.append(row(
+                        f"throughput/cluster/{tag}/c{n_clients}xs{n_shards}",
+                        secs / (n_clients * rounds * per_round),
+                        f"{ops:,.0f} ops/s vs single-server "
+                        f"{base[tag]:,.0f} ops/s = {ops / base[tag]:.2f}x "
+                        f"({n_clients} clients, {n_shards} shard procs, "
+                        f"scatter width {width})"))
+                cc.close()
+    return rows
+
+
 def run(quick: bool = False) -> List[Row]:
     rows = [_pipe_row(quick)]
     with KVServer() as server:  # no latency model: real loopback transport
         rows.append(_bounded_queue_ops(server, quick))
         rows.append(_payload_mbs(server, quick))
+    rows.extend(_cluster_matrix(quick, clients_list=[2],
+                                shards_list=[2]))
     return rows
+
+
+def main(argv: List[str] | None = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="clients x shards KV throughput scaling matrix")
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--assert-speedup", type=float, default=None,
+                    help="fail unless cluster ops/s >= this multiple of "
+                         "the single-process server's (CI gate)")
+    args = ap.parse_args(argv)
+    rows = _cluster_matrix(args.quick, clients_list=[args.clients],
+                           shards_list=[args.shards])
+    speedup = None
+    for name, us, derived in rows:
+        print(f"{name:44s} {us:10.2f} us/op  {derived}")
+        if "/8KB/" in name and "= " in derived:
+            # the gate reads the data-plane (payload) case: that is the
+            # work a sharded serving plane offloads from the client GIL
+            speedup = float(derived.split("= ")[1].split("x")[0])
+    if args.assert_speedup is not None:
+        assert speedup is not None and speedup >= args.assert_speedup, (
+            f"cluster payload speedup {speedup} < required "
+            f"{args.assert_speedup}")
+        print(f"speedup gate OK: {speedup:.2f}x >= {args.assert_speedup}x")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

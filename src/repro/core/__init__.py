@@ -10,5 +10,6 @@ from .executor import FunctionExecutor, RemoteError, FunctionTimeoutError  # noq
 from .kvstore import (KVStore, ShardedKVStore, LatencyModel,  # noqa: F401
                       PAPER_REMOTE_LATENCY, Pipeline, PipelineError)
 from .kvserver import KVServer, KVClient  # noqa: F401
+from .kvcluster import KVCluster, ClusterClient  # noqa: F401
 from .session import Session, get_session, set_session, reset_session, configure  # noqa: F401
 from .storage import ObjectStore, KVObjectStore, StorageLatency, PAPER_S3_LATENCY  # noqa: F401

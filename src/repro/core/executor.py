@@ -318,7 +318,21 @@ class FunctionExecutor:
 
     def _collect_queue(self) -> None:
         while True:
-            got = self._store.blpop(self._result_list, timeout=0.5)
+            try:
+                got = self._store.blpop(self._result_list, timeout=0.5)
+            except (ConnectionError, OSError) as exc:
+                # store connection closed under us (session teardown /
+                # server gone): no result can arrive on this list anymore.
+                # Reject whatever is still pending so waiters unblock with
+                # the cause instead of hanging on futures forever.
+                with self._lock:
+                    pending = list(self._pending.keys())
+                for task_id in pending:
+                    self._settle(task_id, "error",
+                                 (f"{type(exc).__name__}: {exc}",
+                                  "kv store connection lost while waiting "
+                                  "for results"), {})
+                return
             if got is None:
                 if self._shutdown and not self._pending:
                     return

@@ -1,0 +1,438 @@
+"""Multi-process sharded KV serving plane (beyond-paper scaling tier).
+
+The remote mode of the seed serves every client from ONE Python process:
+client threads and server threads share a GIL, and a single store
+serializes all connections. "Serverless End Game" (arXiv:2006.01251)
+argues disaggregation only becomes transparent when the shared-state
+tier scales *independently* of compute; Faabric (arXiv:2302.11358) makes
+the same observation for fine-grained distributed state. This module is
+that tier:
+
+``KVCluster``
+    Launches N ``KVServer`` shard **processes** — each with its own
+    interpreter, GIL, and striped ``KVStore`` — and supervises them
+    (spawn handshake, stderr capture, liveness poll, explicit restart,
+    teardown). The parent also serves a tiny *control* ``KVServer``
+    whose store holds the cluster descriptor (shard count, addresses,
+    hash seed) under the well-known key :data:`DESCRIPTOR_KEY`, so
+    clients bootstrap from one address with a single GET.
+
+``ClusterClient``
+    The ``KVClient`` surface over the whole cluster. Keys hash-route
+    with the exact consistent-hash + hash-tag rules of
+    ``ShardedKVStore`` (the shared ``_ShardRouter`` mixin), so
+    hash-tagged resource keys — every IPC primitive's keys, including
+    block-array segment keys — stay co-located on one shard.
+    ``pipeline()`` batches split into one ``execute_batch`` frame per
+    involved shard and flush as a **scatter/gather**: all frames are
+    written before any response is read, so N shards still cost ~one
+    wall-clock round trip. Cross-shard blocking pops fall back to the
+    ``ShardedKVStore`` exponential-backoff sweep.
+
+``connect(address)``
+    One-address bootstrap: returns a ``ClusterClient`` when the address
+    answers the descriptor GET (it is a cluster control endpoint), else
+    the plain ``KVClient`` it already opened. ``worker_main`` uses this,
+    so subprocess workers join a cluster transparently.
+
+Everything above ``KVClient`` (queues, sharedctypes, pool, managers)
+runs unchanged against a ``ClusterClient`` — that is the transparency
+claim, proven by ``tests/test_transparency.py``.
+
+Child processes are spawned as ``python -m repro.core.kvcluster
+--serve-shard``; each binds its server, reports ``KVSHARD <host>
+<port>`` on stdout, and serves until its stdin reaches EOF — the parent
+holds the write end, so shards can never outlive their supervisor, even
+if it is SIGKILLed.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import threading
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+from .kvserver import KVClient, KVServer, _sendv
+from .kvstore import KVStore, Metrics, _ShardRouter, _debatch
+
+__all__ = ["KVCluster", "ClusterClient", "connect", "DESCRIPTOR_KEY"]
+
+#: Well-known control-store key holding the cluster descriptor.
+DESCRIPTOR_KEY = "__cluster__"
+
+#: Seconds to wait for a shard child to report its bound address.
+_SPAWN_TIMEOUT_S = 30.0
+
+
+# ---------------------------------------------------------------------------
+# Shard child supervision
+# ---------------------------------------------------------------------------
+
+
+class _ShardProc:
+    """One supervised shard process: handshake, stderr tail, liveness."""
+
+    def __init__(self, index: int, host: str, port: int):
+        self.index = index
+        self.proc: Optional[subprocess.Popen] = None
+        self.address: Optional[Tuple[str, int]] = None
+        self._stderr_tail: deque = deque(maxlen=200)
+        self._spawn(host, port)
+
+    def _spawn(self, host: str, port: int) -> None:
+        env = os.environ.copy()
+        # children must import repro even when the parent runs from an
+        # uninstalled checkout
+        src_root = os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))))
+        env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+        self.proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.core.kvcluster", "--serve-shard",
+             "--host", host, "--port", str(port),
+             "--name", f"shard{self.index}"],
+            stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+            stderr=subprocess.PIPE, env=env, text=True)
+        threading.Thread(target=self._drain_stderr, daemon=True,
+                         name=f"kvshard{self.index}-stderr").start()
+        line: List[str] = []
+
+        def read_handshake() -> None:
+            line.append(self.proc.stdout.readline())
+
+        t = threading.Thread(target=read_handshake, daemon=True,
+                             name=f"kvshard{self.index}-handshake")
+        t.start()
+        t.join(_SPAWN_TIMEOUT_S)
+        words = line[0].split() if line and line[0] else []
+        if len(words) != 3 or words[0] != "KVSHARD":
+            self.terminate()
+            raise RuntimeError(
+                f"kv shard {self.index} failed to start "
+                f"(got {line[0]!r} on stdout)\n{self.stderr_tail()}"
+                if line else
+                f"kv shard {self.index} did not report an address within "
+                f"{_SPAWN_TIMEOUT_S}s\n{self.stderr_tail()}")
+        self.address = (words[1], int(words[2]))
+
+    def _drain_stderr(self) -> None:
+        # keep the pipe drained (a crashing child must not wedge writing
+        # its traceback) and keep the tail for diagnostics
+        proc = self.proc
+        try:
+            for ln in proc.stderr:
+                self._stderr_tail.append(ln)
+        except ValueError:
+            pass  # pipe closed during teardown
+
+    def stderr_tail(self) -> str:
+        return "".join(self._stderr_tail)
+
+    def alive(self) -> bool:
+        return self.proc is not None and self.proc.poll() is None
+
+    def terminate(self, grace_s: float = 5.0) -> None:
+        proc = self.proc
+        if proc is None:
+            return
+        try:
+            if proc.stdin:
+                proc.stdin.close()  # EOF = orderly shutdown request
+        except OSError:
+            pass
+        try:
+            proc.wait(timeout=grace_s)
+        except subprocess.TimeoutExpired:
+            proc.terminate()
+            try:
+                proc.wait(timeout=grace_s)
+            except subprocess.TimeoutExpired:
+                proc.kill()
+                proc.wait()
+
+
+class KVCluster:
+    """N ``KVServer`` shard processes + a control endpoint, supervised.
+
+    Use as a context manager (or ``start()``/``stop()``)::
+
+        with KVCluster(shards=4) as cluster:
+            client = cluster.client()          # a ClusterClient
+            ...                                # or ClusterClient(cluster.address)
+
+    ``address`` is the control endpoint; clients bootstrap from it alone
+    (see module docstring for the handshake). Shard stores are empty on
+    (re)start — a restarted shard loses its partition's data, exactly
+    like a crashed cache node, so ``restart_shard`` is explicit rather
+    than automatic.
+    """
+
+    def __init__(self, shards: int = 2, host: str = "127.0.0.1",
+                 control_port: int = 0, hash_seed: int = 0):
+        if shards < 1:
+            raise ValueError("need at least one shard")
+        self.n_shards = int(shards)
+        self.host = host
+        self.hash_seed = hash_seed
+        self._control_port = control_port
+        self._procs: List[_ShardProc] = []
+        self._control: Optional[KVServer] = None
+        self._started = False
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> "KVCluster":
+        if self._started:
+            return self
+        try:
+            for i in range(self.n_shards):
+                # append as we go: if a later spawn fails, _teardown must
+                # reach the shards already running
+                self._procs.append(_ShardProc(i, self.host, 0))
+            store = KVStore(name="cluster-control")
+            store.set(DESCRIPTOR_KEY, self.describe())
+            self._control = KVServer(store, host=self.host,
+                                     port=self._control_port).start()
+        except BaseException:
+            self._teardown()
+            raise
+        self._started = True
+        return self
+
+    def stop(self) -> None:
+        self._started = False
+        self._teardown()
+
+    def _teardown(self) -> None:
+        if self._control is not None:
+            self._control.stop()
+            self._control = None
+        for p in self._procs:
+            p.terminate()
+        self._procs = []
+
+    def __enter__(self) -> "KVCluster":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- topology ------------------------------------------------------------
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        """Control endpoint: the ONE address clients bootstrap from."""
+        if self._control is None:
+            raise RuntimeError("cluster is not started")
+        return self._control.address
+
+    @property
+    def shard_addresses(self) -> List[Tuple[str, int]]:
+        return [p.address for p in self._procs]
+
+    def describe(self) -> Dict[str, Any]:
+        """The cluster descriptor served under :data:`DESCRIPTOR_KEY`."""
+        return {
+            "version": 1,
+            "shards": [list(p.address) for p in self._procs],
+            "n_shards": len(self._procs),
+            "hash": "fnv1a-hashtag",
+            "hash_seed": self.hash_seed,
+        }
+
+    def client(self, **kwargs: Any) -> "ClusterClient":
+        if not self._started:
+            raise RuntimeError("cluster is not started")
+        return ClusterClient(shard_addresses=self.shard_addresses,
+                             hash_seed=self.hash_seed, **kwargs)
+
+    # -- supervision ---------------------------------------------------------
+
+    def poll(self) -> List[bool]:
+        """Per-shard liveness, in shard order."""
+        return [p.alive() for p in self._procs]
+
+    def ensure_alive(self) -> None:
+        """Raise RuntimeError naming any dead shard, with its stderr tail."""
+        dead = [p for p in self._procs if not p.alive()]
+        if dead:
+            detail = "; ".join(
+                f"shard {p.index} exited with code {p.proc.returncode}"
+                for p in dead)
+            tails = "\n".join(t for t in (p.stderr_tail() for p in dead) if t)
+            raise RuntimeError(f"kv cluster degraded: {detail}"
+                               + (f"\n{tails}" if tails else ""))
+
+    def restart_shard(self, index: int) -> Tuple[str, int]:
+        """Respawn shard ``index`` at its previous address (so routing and
+        already-bootstrapped clients stay valid). The shard's partition
+        restarts EMPTY — callers own the data-loss consequences, which is
+        why restart is explicit. Returns the shard's address."""
+        old = self._procs[index]
+        addr = old.address
+        old.terminate()
+        self._procs[index] = _ShardProc(index, addr[0], addr[1])
+        if self._control is not None:
+            self._control.store.set(DESCRIPTOR_KEY, self.describe())
+        return self._procs[index].address
+
+
+# ---------------------------------------------------------------------------
+# Cluster client
+# ---------------------------------------------------------------------------
+
+
+class ClusterClient(_ShardRouter):
+    """The ``KVClient`` method surface, hash-routed over cluster shards.
+
+    Bootstraps from a single control ``address`` (one descriptor GET) or
+    from explicit ``shard_addresses``. Single-key commands are one
+    command on one shard; multi-key commands split per shard; pipeline
+    batches flush as concurrent per-shard ``execute_batch`` frames
+    (scatter/gather — see ``execute_batch``). The ``shards`` attribute
+    holds one ``KVClient`` per shard, which is also what the IPC layer's
+    ``hasattr(store, "shards")`` probes key on to pass transaction key
+    hints.
+    """
+
+    def __init__(self, address: Optional[Tuple[str, int]] = None,
+                 shard_addresses: Optional[Sequence[Tuple[str, int]]] = None,
+                 legacy_protocol: bool = False, hash_seed: int = 0):
+        if shard_addresses is None:
+            if address is None:
+                raise ValueError("need a control address or shard addresses")
+            boot = KVClient(tuple(address))
+            try:
+                desc = boot.get(DESCRIPTOR_KEY)
+            finally:
+                boot.close()
+            if not isinstance(desc, dict) or "shards" not in desc:
+                raise ConnectionError(
+                    f"{address[0]}:{address[1]} is not a cluster control "
+                    "endpoint (no descriptor; use KVClient for a plain "
+                    "KVServer)")
+            shard_addresses = [tuple(a) for a in desc["shards"]]
+            hash_seed = desc.get("hash_seed", hash_seed)
+        if not shard_addresses:
+            raise ValueError("need at least one shard address")
+        self.hash_seed = hash_seed
+        self.shards = [KVClient(tuple(a), legacy_protocol=legacy_protocol)
+                       for a in shard_addresses]
+        # client-side counters only (server-side metrics live per shard and
+        # are readable via info()): fanout records scatter widths, which no
+        # single shard can observe
+        self.metrics = Metrics()
+        self.name = f"cluster[{len(self.shards)}]"
+
+    def execute_batch(self, commands: List[Tuple[str, tuple, dict]]
+                      ) -> List[Tuple[bool, Any]]:
+        """Scatter/gather batch: route commands per shard
+        (``_route_batch``, which preserves submission order around
+        multi-key commands), WRITE every shard's ``execute_batch`` frame
+        before READING any response, then drain the per-shard responses.
+        The flushes overlap on the wire and in the shard processes, so N
+        involved shards cost ~one wall-clock round trip instead of N.
+
+        Framing safety under errors matches the single-connection
+        pipeline contract: every successfully scattered frame's response
+        is drained even when another shard fails, so no connection is
+        left holding a pending response to desync the next caller; a
+        connection that fails mid-send or mid-read is closed (it may
+        carry a partial frame), and its threads reconnect on next use."""
+        return self._route_batch([_debatch(c) for c in commands],
+                                 self._scatter_groups)
+
+    def _scatter_groups(self, groups, out) -> None:
+        self.metrics.record_fanout(len(groups))
+        first_err: Optional[BaseException] = None
+        pending = []
+        for idx in sorted(groups):
+            client = self.shards[idx]
+            try:
+                sock = client._sock()
+                _sendv(sock, client._request_frames(
+                    ("execute_batch", ([c for _, c in groups[idx]],), {})))
+            except Exception as exc:
+                if first_err is None:
+                    first_err = exc
+                # a partial frame would desync this thread's connection;
+                # other threads' sockets to the shard are untouched
+                client.close_connection()
+                continue
+            pending.append((client, sock, groups[idx]))
+        for client, sock, numbered in pending:
+            try:
+                ok, value = client._read_response(sock)
+            except Exception as exc:
+                if first_err is None:
+                    first_err = exc
+                client.close_connection()  # mid-frame state is unrecoverable
+                continue
+            if not ok:
+                if first_err is None:
+                    first_err = value
+                continue
+            for (i, _), res in zip(numbered, value):
+                out[i] = res
+        if first_err is not None:
+            raise first_err
+
+    def close(self) -> None:
+        for c in self.shards:
+            c.close()
+
+
+def connect(address: Tuple[str, int],
+            legacy_protocol: bool = False) -> Union[KVClient, "ClusterClient"]:
+    """Bootstrap from one address: a cluster control endpoint answers the
+    descriptor GET and yields a ``ClusterClient``; a plain ``KVServer``
+    answers None and the already-open ``KVClient`` is returned as-is."""
+    client = KVClient(tuple(address), legacy_protocol=legacy_protocol)
+    try:
+        desc = client.get(DESCRIPTOR_KEY)
+    except Exception:
+        client.close()
+        raise
+    if isinstance(desc, dict) and "shards" in desc:
+        client.close()
+        return ClusterClient(
+            shard_addresses=[tuple(a) for a in desc["shards"]],
+            legacy_protocol=legacy_protocol,
+            hash_seed=desc.get("hash_seed", 0))
+    return client
+
+
+# ---------------------------------------------------------------------------
+# Shard child entry point
+# ---------------------------------------------------------------------------
+
+
+def _serve_shard(host: str, port: int, name: str) -> int:
+    server = KVServer(KVStore(name=name), host=host, port=port)
+    server.start()
+    sys.stdout.write(f"KVSHARD {server.address[0]} {server.address[1]}\n")
+    sys.stdout.flush()
+    try:
+        sys.stdin.read()  # parent holds our stdin; EOF means shut down
+    except (KeyboardInterrupt, OSError):
+        pass
+    server.stop()
+    return 0
+
+
+def _main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="KV cluster shard process (spawned by KVCluster)")
+    ap.add_argument("--serve-shard", action="store_true", required=True)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--name", default="shard")
+    args = ap.parse_args(argv)
+    return _serve_shard(args.host, args.port, args.name)
+
+
+if __name__ == "__main__":
+    sys.exit(_main())

@@ -30,10 +30,16 @@ Round-trip accounting on this transport:
 
 * one command               = 1 RTT (unchanged);
 * ``KVClient.pipeline()``   = 1 RTT for N commands — transactional mode
-  ships one ``execute_batch`` frame the server runs under a single store
-  lock acquisition; non-transactional mode gather-writes the N frames in
-  buffer-bounded chunks with responses drained between chunks (commands
-  interleave with other clients);
+  ships one ``execute_batch`` frame the server runs under a single
+  take-all-stripes acquisition; non-transactional mode gather-writes the
+  N frames in buffer-bounded chunks with responses drained between
+  chunks (commands interleave with other clients);
+* a ``ClusterClient`` pipeline (see ``repro.core.kvcluster``) splits the
+  batch into one ``execute_batch`` frame per involved shard, writes
+  every frame before reading any response (scatter), then drains the
+  per-shard responses (gather) — N shards, still ~1 wall-clock RTT; the
+  in-process ``LatencyModel`` mirrors this by billing a scatter as the
+  max per-shard cost, not the sum;
 * an exception mid-batch never desyncs framing: every queued command
   yields exactly one result and the first error is raised only after all
   responses are drained;
@@ -42,6 +48,26 @@ Round-trip accounting on this transport:
   code: they flow through the generic dispatch, and segment-sized
   (>= 4 KiB) values ride the out-of-band zero-copy path in both
   directions.
+
+Cluster bootstrap handshake (implemented in ``repro.core.kvcluster``):
+a ``KVCluster`` supervisor process serves a *control* ``KVServer`` whose
+store holds the cluster descriptor — shard count, per-shard addresses,
+and the consistent-hash seed — under the well-known key
+``__cluster__``. A client bootstraps from the single control address
+with a plain ``GET __cluster__`` (one RTT over this very protocol),
+then opens one ``KVClient`` per shard and hash-routes keys with the
+same hash-tag rules as ``ShardedKVStore``. A plain ``KVServer`` answers
+that GET with None, which is how ``kvcluster.connect`` auto-detects
+whether one address names a cluster or a single server.
+
+Receive-side memory: each connection leases its receive buffers from a
+small per-connection :class:`_BufferPool` instead of allocating a fresh
+``bytearray`` per frame segment (header, part-length vector, body). A
+leased body is recycled right after decode whenever the decoded object
+cannot alias it (legacy frames are copied by unpickling; multi-part
+frames with no out-of-band parts likewise); bodies carrying out-of-band
+buffers are never pooled, because the decoded values reference them
+zero-copy.
 """
 
 from __future__ import annotations
@@ -133,56 +159,192 @@ def _encode_frames(obj: Any) -> List[Any]:
     return _frame_parts([payload, *buffers])
 
 
-def _recv_into_new(sock: socket.socket, n: int) -> Optional[bytearray]:
-    buf = bytearray(n)
-    view = memoryview(buf)
-    got = 0
-    while got < n:
-        # MSG_WAITALL usually fills the request in one syscall
-        r = sock.recv_into(view[got:], n - got, socket.MSG_WAITALL)
-        if not r:
-            return None
-        got += r
-    return buf
+class _BufferPool:
+    """Per-connection free-list of receive buffers.
+
+    Without it, every frame costs three fresh ``bytearray`` allocations
+    (header word, part-length vector, body); on the small-command hot
+    path the allocator round trips dominate the byte copying. Buffers are
+    leased for one receive + decode and recycled — but only when the
+    decoded object cannot alias them (see ``_recv_frames``). Never shared
+    across threads: each server handler and each client thread owns one,
+    so acquire/release need no lock.
+    """
+
+    __slots__ = ("_free",)
+
+    #: keep at most this many free buffers / bytes per connection
+    _MAX_BUFS = 8
+    _MAX_BUF_BYTES = 1 << 18
+
+    def __init__(self) -> None:
+        self._free: List[bytearray] = []
+
+    def acquire(self, n: int) -> bytearray:
+        """A buffer with capacity >= n (possibly larger — callers slice a
+        memoryview to the exact length)."""
+        best = -1
+        for i, b in enumerate(self._free):
+            if len(b) >= n and (best < 0 or len(b) < len(self._free[best])):
+                best = i
+        if best >= 0 and len(self._free[best]) <= max(4 * n, 1024):
+            # best fit, unless it over-allocates grossly (a segment-sized
+            # buffer must not get pinned serving 4-byte headers)
+            return self._free.pop(best)
+        return bytearray(n)
+
+    def release(self, buf: bytearray) -> None:
+        if len(self._free) < self._MAX_BUFS and len(buf) <= self._MAX_BUF_BYTES:
+            self._free.append(buf)
 
 
-def _recv_frames(sock: socket.socket
-                 ) -> Optional[Tuple[List[Any], bool]]:
-    """Read one frame. Returns ``(parts, is_legacy)`` or None on EOF.
+class _ConnReader:
+    """Per-connection buffered frame reader.
 
-    A multi-part frame's whole body lands in ONE allocation; parts are
+    The exact-read receive path cost three ``recv`` syscalls per frame
+    (header word, part-length vector, body); on a hot loopback path the
+    syscalls dominate the byte copying, and a scatter/gather client pays
+    them per *shard*. This reader drains the socket in chunk-sized
+    ``recv_into`` calls instead: a small frame usually costs ONE syscall,
+    and back-to-back pipelined/gathered responses already sitting in the
+    socket buffer parse out of a single chunk with ZERO further syscalls.
+
+    The chunk is leased from the connection's :class:`_BufferPool`.
+    Memoryviews served from the chunk are valid only until the next
+    ``read`` on this reader — callers decode each frame before reading
+    the next (both the server loop and the client response drain do), and
+    bodies whose decoded values outlive the frame (out-of-band parts,
+    ``recycle=False``) are never chunk-served or pooled.
+    """
+
+    __slots__ = ("sock", "pool", "_chunk", "_view", "_start", "_end")
+
+    _CHUNK = 64 * 1024
+
+    def __init__(self, sock: socket.socket, pool: Optional[_BufferPool] = None):
+        self.sock = sock
+        self.pool = pool if pool is not None else _BufferPool()
+        self._chunk = self.pool.acquire(self._CHUNK)
+        self._view = memoryview(self._chunk)
+        self._start = 0
+        self._end = 0
+
+    def _fill(self, n: int) -> bool:
+        """Buffer at least ``n`` contiguous bytes (n <= chunk size);
+        False on EOF."""
+        if len(self._chunk) - self._start < n:
+            # move the partial tail to the front to make room
+            tail = bytes(self._view[self._start:self._end])
+            self._view[:len(tail)] = tail
+            self._start, self._end = 0, len(tail)
+        while self._end - self._start < n:
+            r = self.sock.recv_into(self._view[self._end:])
+            if not r:
+                return False
+            self._end += r
+        return True
+
+    def read(self, n: int, recycle: bool = True
+             ) -> Optional[Tuple[Optional[bytearray], memoryview]]:
+        """Exactly ``n`` bytes as ``(lease, view)``, or None on EOF.
+
+        ``recycle=True`` (data is dead after the caller's decode): served
+        from the chunk when it fits (``lease`` None — valid until the
+        next read) or from a pool lease the caller must release.
+        ``recycle=False`` (decoded values may alias the data): always a
+        fresh private buffer, never pooled, ``lease`` None."""
+        if recycle and n <= len(self._chunk):
+            if not self._fill(n):
+                return None
+            view = self._view[self._start:self._start + n]
+            self._start += n
+            if self._start == self._end:
+                self._start = self._end = 0
+            return None, view
+        owner = self.pool.acquire(n) if recycle else bytearray(n)
+        view = memoryview(owner)[:n]
+        got = min(self._end - self._start, n)
+        if got:
+            view[:got] = self._view[self._start:self._start + got]
+            self._start += got
+            if self._start == self._end:
+                self._start = self._end = 0
+        while got < n:
+            r = self.sock.recv_into(view[got:], n - got, socket.MSG_WAITALL)
+            if not r:
+                if recycle:
+                    self.pool.release(owner)
+                return None
+            got += r
+        return (owner if recycle else None), view
+
+
+def _recv_frames(reader: _ConnReader
+                 ) -> Optional[Tuple[List[Any], bool, Optional[bytearray]]]:
+    """Read one frame. Returns ``(parts, is_legacy, lease)`` or None on
+    EOF. ``parts`` are valid until the next read on ``reader`` unless
+    backed by ``lease`` (a pool buffer the caller must release once the
+    parts are decoded) or fresh-allocated (frames with out-of-band parts,
+    nparts > 1, whose decoded values alias the body zero-copy and must
+    never be recycled).
+
+    A multi-part frame's whole body lands in ONE buffer; parts are
     memoryview slices of it — per-part buffers would pay an mmap + page
     faults each for large payloads."""
-    hdr = _recv_into_new(sock, _HDR.size)
-    if hdr is None:
+    got = reader.read(_HDR.size)
+    if got is None:
         return None
-    (word,) = _HDR.unpack(hdr)
+    lease, view = got
+    (word,) = _HDR.unpack(view)
+    if lease is not None:
+        reader.pool.release(lease)
     if not word & _MULTI:
-        payload = _recv_into_new(sock, word)
-        return (None if payload is None else ([payload], True))
+        got = reader.read(word)
+        if got is None:
+            return None
+        lease, view = got
+        return [view], True, lease
     nparts = word & ~_MULTI
     if not 1 <= nparts <= _MAX_PARTS:
         raise ConnectionError(f"bad frame: {nparts} parts")
-    lens_raw = _recv_into_new(sock, _HDR.size * nparts)
-    if lens_raw is None:
+    got = reader.read(_HDR.size * nparts)
+    if got is None:
         return None
-    lens = [ln for (ln,) in _HDR.iter_unpack(bytes(lens_raw))]
-    body = _recv_into_new(sock, sum(lens))
-    if body is None:
+    lease, view = got
+    lens = [ln for (ln,) in _HDR.iter_unpack(bytes(view))]
+    if lease is not None:
+        reader.pool.release(lease)
+    got = reader.read(sum(lens), recycle=nparts == 1)
+    if got is None:
         return None
-    view = memoryview(body)
+    lease, view = got
     parts: List[Any] = []
     offset = 0
     for ln in lens:
         parts.append(view[offset:offset + ln])
         offset += ln
-    return parts, False
+    return parts, False, lease
 
 
-def _decode(parts: List[bytearray], legacy: bool) -> Any:
+def _decode(parts: List[Any], legacy: bool) -> Any:
     if legacy:
         return serialization.loads(bytes(parts[0]))
     return serialization.loads_oob(parts[0], parts[1:])
+
+
+def _recv_decode(reader: _ConnReader) -> Optional[Tuple[Any, bool]]:
+    """Read one frame, decode it, and recycle any lease (decode copied
+    everything a recyclable buffer held — see ``_recv_frames``). Returns
+    ``(obj, is_legacy)`` or None on EOF."""
+    got = _recv_frames(reader)
+    if got is None:
+        return None
+    parts, legacy, lease = got
+    try:
+        return _decode(parts, legacy), legacy
+    finally:
+        if lease is not None:
+            reader.pool.release(lease)
 
 
 # legacy (v1) single-frame send, used by the legacy dialect paths
@@ -203,14 +365,16 @@ class _Handler(socketserver.BaseRequestHandler):
     def handle(self) -> None:
         store: KVStore = self.server.store  # type: ignore[attr-defined]
         tuned = False
+        reader = _ConnReader(self.request)  # connection-private: no lock
+        pool = reader.pool
         while True:
             try:
-                got = _recv_frames(self.request)
+                got = _recv_frames(reader)
             except (OSError, ConnectionError):
                 return
             if got is None:
                 return
-            parts, legacy = got
+            parts, legacy, lease = got
             if not tuned and not legacy:
                 # v2 connections get NODELAY + deep buffers. Legacy (v1)
                 # connections keep the seed's untuned socket so the
@@ -218,7 +382,13 @@ class _Handler(socketserver.BaseRequestHandler):
                 _tune(self.request)
                 tuned = True
             try:
-                cmd, args, kwargs = _decode(parts, legacy)
+                try:
+                    cmd, args, kwargs = _decode(parts, legacy)
+                finally:
+                    # decode copied everything a pooled lease held (bodies
+                    # with aliasing out-of-band parts are never leased)
+                    if lease is not None:
+                        pool.release(lease)
                 if cmd.startswith("_") or not hasattr(store, cmd):
                     raise AttributeError(f"unknown command {cmd!r}")
                 value = getattr(store, cmd)(*args, **kwargs)
@@ -298,30 +468,53 @@ class KVClient:
         self.address = address
         self.legacy_protocol = legacy_protocol
         self._tls = threading.local()
-        self._all_socks = []
-        self._all_lock = threading.Lock()
+        # thread ident -> (thread, socket): lets close() reach every live
+        # connection and lets _sock() prune entries of exited threads
+        self._socks: dict = {}
+        self._socks_lock = threading.Lock()
+        self._gen = 0  # bumped by close(): invalidates thread-local socks
         self.name = f"kvclient@{address[0]}:{address[1]}"
 
     def _sock(self) -> socket.socket:
         sock = getattr(self._tls, "sock", None)
-        if sock is None:
-            sock = socket.create_connection(self.address)
-            if self.legacy_protocol:
-                # seed client behavior: NODELAY only, default buffers
-                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-                self._tls.chunk = _PIPELINE_CHUNK_BYTES_LEGACY
-            else:
-                _tune(sock)
-                # The chunked-flush deadlock bound assumes the send buffer
-                # took our sizing; derive the limit from what the kernel
-                # actually granted in case the platform capped it.
-                sndbuf = sock.getsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF)
-                self._tls.chunk = max(
-                    _PIPELINE_CHUNK_BYTES_LEGACY,
-                    min(_PIPELINE_CHUNK_BYTES, sndbuf // 2))
-            self._tls.sock = sock
-            with self._all_lock:
-                self._all_socks.append(sock)
+        if sock is not None and getattr(self._tls, "gen", -1) == self._gen:
+            return sock
+        sock = socket.create_connection(self.address)
+        if self.legacy_protocol:
+            # seed client behavior: NODELAY only, default buffers
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            self._tls.chunk = _PIPELINE_CHUNK_BYTES_LEGACY
+        else:
+            _tune(sock)
+            # The chunked-flush deadlock bound assumes the send buffer
+            # took our sizing; derive the limit from what the kernel
+            # actually granted in case the platform capped it.
+            sndbuf = sock.getsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF)
+            self._tls.chunk = max(
+                _PIPELINE_CHUNK_BYTES_LEGACY,
+                min(_PIPELINE_CHUNK_BYTES, sndbuf // 2))
+        self._tls.sock = sock
+        self._tls.reader = _ConnReader(sock)  # thread-private: no lock
+        with self._socks_lock:
+            # prune connections whose owning thread exited: the registry
+            # must not grow forever in thread-churny workloads (the old
+            # append-only list leaked one socket per dead thread)
+            dead = [tid for tid, (th, _) in self._socks.items()
+                    if not th.is_alive()]
+            for tid in dead:
+                _, s = self._socks.pop(tid)
+                try:
+                    s.close()
+                except OSError:
+                    pass
+            self._socks[threading.get_ident()] = (
+                threading.current_thread(), sock)
+            # generation read under the registry lock: a close() racing
+            # this creation either sees our registration (and closes the
+            # socket) or completed first — then we register into the
+            # fresh era with its generation, never a stale one that would
+            # orphan this socket on the next call
+            self._tls.gen = self._gen
         return sock
 
     # -- single command (1 RTT) --------------------------------------------
@@ -342,10 +535,12 @@ class KVClient:
         return self._read_response(sock)
 
     def _read_response(self, sock: socket.socket) -> Tuple[bool, Any]:
-        got = _recv_frames(sock)
+        reader = self._tls.reader
+        assert reader.sock is sock, "response reader / socket mismatch"
+        got = _recv_decode(reader)
         if got is None:
             raise ConnectionError("kvserver closed the connection")
-        return _decode(*got)
+        return got[0]
 
     # -- pipelining ---------------------------------------------------------
 
@@ -420,10 +615,36 @@ class KVClient:
         call.__name__ = cmd
         return call
 
+    def close_connection(self) -> None:
+        """Close only the CALLING thread's connection — after a mid-frame
+        send/recv failure it may hold a partial frame, but other threads'
+        sockets are healthy and must stay up (a blocked blpop elsewhere
+        must not die because this thread's scatter failed). The thread
+        reconnects on next use."""
+        sock = getattr(self._tls, "sock", None)
+        if sock is None:
+            return
+        self._tls.sock = None
+        self._tls.reader = None
+        with self._socks_lock:
+            ent = self._socks.get(threading.get_ident())
+            if ent is not None and ent[1] is sock:
+                del self._socks[threading.get_ident()]
+        try:
+            sock.close()
+        except OSError:
+            pass
+
     def close(self) -> None:
-        with self._all_lock:
-            socks, self._all_socks = self._all_socks, []
-        for sock in socks:
+        """Close every registered connection. Idempotent and safe under
+        concurrent callers (the registry is swapped out under the lock, so
+        each socket is closed exactly once); threads that keep using the
+        client afterwards transparently reconnect — their thread-local
+        socket is invalidated by the generation bump."""
+        with self._socks_lock:
+            socks, self._socks = self._socks, {}
+            self._gen += 1
+        for _, sock in socks.values():
             try:
                 sock.close()
             except OSError:

@@ -8,24 +8,40 @@ instance and leans on three Redis properties:
      Semaphore -> token LIST, Manager.dict -> HASH, Array -> packed
      STRING segments addressed with byte-range commands
      (GETRANGE/SETRANGE/MSETRANGE), or the paper-faithful LIST, ...);
-  2. single-threaded command execution => every command is atomic and
-     totally ordered ("Redis maintains the order of puts and gets
-     consistent", §3.2);
+  2. per-command atomicity and total order *per key* ("Redis maintains
+     the order of puts and gets consistent", §3.2);
   3. blocking commands (BLPOP) for cheap cross-process wakeups.
 
-This module reproduces those semantics exactly:
+This module reproduces those semantics with a concurrency model that
+scales past one lock:
 
-  * ``KVStore``       — in-process store; one global lock serializes all
-                        commands (the single-thread model), a condition
-                        variable implements blocking commands, TTLs are
-                        lazily expired.
+  * ``KVStore``       — in-process store with **striped locking**: keys
+                        are partitioned over N stripes (hash-tag aware,
+                        like Redis Cluster slots), each with its own
+                        lock + condition variable and private dict.
+                        Commands touching distinct stripes run in
+                        parallel; commands on one key are atomic and
+                        totally ordered (what Redis actually promises).
+                        Multi-stripe commands acquire stripes in global
+                        index order (deadlock-free); ``transaction`` /
+                        ``execute_batch`` take every stripe, preserving
+                        full MULTI/EXEC transactionality. Blocking
+                        commands wait on *their key's* stripe condition,
+                        so a push no longer storm-wakes every waiter in
+                        the store.
   * ``LatencyModel``  — optional per-command latency/bandwidth injection
                         calibrated against the paper's Table 2 / Fig. 6 so
                         CPU-only benchmark runs reproduce the *remote*
                         cost structure (see benchmarks/bench_latency.py).
+                        ``charge_scatter`` bills a concurrently-flushed
+                        per-shard batch as ONE wall-clock round trip (max
+                        across shards, not the sum).
   * ``ShardedKVStore``— beyond-paper: consistent-hash router over N
                         stores, removing the single-node saturation the
                         paper observes from 256 workers on (§6.3, §7.5).
+                        Routing logic lives in ``_ShardRouter`` and is
+                        shared with the TCP ``ClusterClient``
+                        (see ``repro.core.kvcluster``).
 
 Values are stored as-is (the IPC layer passes serialized ``bytes``, like
 real Redis); byte sizes feed the latency model and the metrics.
@@ -37,7 +53,8 @@ import fnmatch
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterable, List, Optional, Tuple
+from functools import lru_cache
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 __all__ = [
     "KVStore",
@@ -53,6 +70,35 @@ __all__ = [
 
 class WrongTypeError(TypeError):
     """Operation against a key holding the wrong kind of value (Redis WRONGTYPE)."""
+
+
+# ---------------------------------------------------------------------------
+# Key hashing (shared by stripes, shards, and the TCP cluster client)
+# ---------------------------------------------------------------------------
+
+
+def _hash_tag(key: str) -> str:
+    """Redis Cluster hash-tag rule: only the first {...} portion counts."""
+    if "{" in key and "}" in key:
+        s = key.index("{") + 1
+        e = key.index("}", s)
+        if e > s:
+            return key[s:e]
+    return key
+
+
+@lru_cache(maxsize=16384)
+def _key_hash(key: str, seed: int = 0) -> int:
+    """FNV-1a over the key's hash tag. Deterministic across processes, so
+    a client and a remote shard map keys identically; ``seed`` lets two
+    clusters sharing a keyspace place keys differently (it is part of the
+    cluster descriptor — see ``repro.core.kvcluster``). Memoized: the
+    byte-wise Python loop sits on the client's batch-routing hot path and
+    real workloads re-touch a small working set of keys."""
+    h = 2166136261 ^ (seed & 0xFFFFFFFF)
+    for ch in _hash_tag(key).encode():
+        h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
+    return h
 
 
 # ---------------------------------------------------------------------------
@@ -85,13 +131,33 @@ class LatencyModel:
     scale: float = 1.0
     virtual_time: float = field(default=0.0, repr=False)
     charges: int = field(default=0, repr=False)  # round trips billed
-    _vlock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+    _vlock: threading.Lock = field(default_factory=threading.Lock, repr=False,
+                                   compare=False)
 
     def cost(self, nbytes: int) -> float:
         return self.rtt_s + (nbytes / self.bandwidth_bps if nbytes else 0.0)
 
     def charge(self, nbytes: int) -> float:
         c = self.cost(nbytes)
+        if c <= 0:
+            return 0.0
+        with self._vlock:
+            self.virtual_time += c
+            self.charges += 1
+        if self.scale > 0:
+            time.sleep(c * self.scale)
+        return c
+
+    def charge_scatter(self, sizes: Sequence[int]) -> float:
+        """Bill a concurrently-flushed per-shard scatter as ONE wall-clock
+        round trip. The gather completes when the slowest shard answers,
+        so the cost is the **max** across the per-shard batches, not the
+        sum — charging each sub-batch separately would model a serial
+        flush the client does not perform."""
+        costs = [self.cost(n) for n in sizes]
+        if not costs:
+            return 0.0
+        c = max(costs)
         if c <= 0:
             return 0.0
         with self._vlock:
@@ -123,26 +189,53 @@ class _Entry:
 
 @dataclass
 class Metrics:
+    """Command/byte counters. Increment paths are lock-protected: the
+    striped store runs handler threads genuinely concurrently, and an
+    unlocked read-modify-write would lose counts under contention."""
+
     commands: Dict[str, int] = field(default_factory=dict)
     bytes_in: int = 0
     bytes_out: int = 0
     blocked_time_s: float = 0.0
+    #: scatter width (shards per concurrently-flushed batch) -> flush count
+    fanout: Dict[int, int] = field(default_factory=dict)
+    _mlock: threading.Lock = field(default_factory=threading.Lock, repr=False,
+                                   compare=False)
 
     def record(self, cmd: str, nin: int = 0, nout: int = 0) -> None:
-        self.commands[cmd] = self.commands.get(cmd, 0) + 1
-        self.bytes_in += nin
-        self.bytes_out += nout
+        with self._mlock:
+            self.commands[cmd] = self.commands.get(cmd, 0) + 1
+            self.bytes_in += nin
+            self.bytes_out += nout
+
+    def record_blocked(self, seconds: float) -> None:
+        with self._mlock:
+            self.blocked_time_s += seconds
+
+    def record_fanout(self, width: int) -> None:
+        """One scatter/gather flush that fanned out across ``width`` shards."""
+        with self._mlock:
+            self.fanout[width] = self.fanout.get(width, 0) + 1
 
     def total_commands(self) -> int:
-        return sum(self.commands.values())
+        with self._mlock:
+            return sum(self.commands.values())
 
     def snapshot(self) -> Dict[str, Any]:
+        # readers lock too: a handler inserting a command name mid-read
+        # would blow up dict iteration under genuine thread concurrency
+        with self._mlock:
+            commands = dict(self.commands)
+            fanout = dict(self.fanout)
+            bytes_in, bytes_out = self.bytes_in, self.bytes_out
+            blocked = self.blocked_time_s
         return {
-            "commands": dict(self.commands),
-            "total_commands": self.total_commands(),
-            "bytes_in": self.bytes_in,
-            "bytes_out": self.bytes_out,
-            "blocked_time_s": self.blocked_time_s,
+            "commands": commands,
+            "total_commands": sum(commands.values()),
+            "bytes_in": bytes_in,
+            "bytes_out": bytes_out,
+            "blocked_time_s": blocked,
+            "fanout": fanout,
         }
 
 
@@ -151,16 +244,51 @@ class Metrics:
 # ---------------------------------------------------------------------------
 
 
-class KVStore:
-    """In-memory Redis-semantics store. Thread-safe; commands are atomic."""
+class _Stripe:
+    """One lock domain of the striped store: a private dict plus its own
+    condition variable, so blocking waiters only wake for mutations of
+    their own stripe (no store-wide notify_all storms)."""
 
-    def __init__(self, latency: Optional[LatencyModel] = None, name: str = "kv"):
+    __slots__ = ("index", "lock", "cond", "data")
+
+    def __init__(self, index: int):
+        self.index = index
+        self.lock = threading.RLock()
+        self.cond = threading.Condition(self.lock)
+        self.data: Dict[str, _Entry] = {}
+
+
+#: Default stripe count. Enough that 8-16 handler threads touching
+#: distinct resources rarely collide; small enough that take-all paths
+#: (transaction/execute_batch/flushall) stay cheap.
+_N_STRIPES = 16
+
+
+class KVStore:
+    """In-memory Redis-semantics store with striped locking.
+
+    Commands are atomic and totally ordered **per key** (each key lives in
+    exactly one stripe; its stripe lock serializes every command touching
+    it). Multi-key commands acquire all involved stripes in global index
+    order; ``transaction``/``execute_batch`` acquire every stripe, so a
+    batch remains a full MULTI/EXEC. Hash-tagged keys (``{uid}:...``)
+    co-locate on one stripe, which keeps the fused queue primitive
+    ``blpop_rpush`` on the single-stripe fast path.
+    """
+
+    def __init__(self, latency: Optional[LatencyModel] = None, name: str = "kv",
+                 stripes: int = _N_STRIPES):
         self.name = name
-        self._lock = threading.RLock()
-        self._cond = threading.Condition(self._lock)
-        self._data: Dict[str, _Entry] = {}
+        self._stripes = [_Stripe(i) for i in range(max(1, int(stripes)))]
         self.latency = latency
         self.metrics = Metrics()
+        self._last_txn_moved = 0  # bytes moved by the latest transaction
+        # thread ident of a running transaction(fn), if any: blocking
+        # commands called from inside it are forced non-blocking (waiting
+        # on one stripe's condition while holding every other stripe
+        # would deadlock producers — the Redis rule that scripts cannot
+        # block, enforced rather than just documented)
+        self._txn_tid: Optional[int] = None
 
     # -- plumbing ----------------------------------------------------------
 
@@ -175,12 +303,40 @@ class KVStore:
     def _now(self) -> float:
         return time.monotonic()
 
+    def _stripe_index(self, key: str) -> int:
+        # Builtin hash of the tag: stripe placement only matters within
+        # this process (unlike shard routing, which crosses the wire and
+        # uses the deterministic _key_hash).
+        return hash(_hash_tag(key)) % len(self._stripes)
+
+    def _stripe(self, key: str) -> _Stripe:
+        return self._stripes[self._stripe_index(key)]
+
+    def _stripes_for(self, keys: Iterable[str]) -> List[_Stripe]:
+        """Distinct stripes of ``keys``, in global index order — the one
+        acquisition order every multi-stripe path follows (deadlock-free
+        against take-all transactions and each other)."""
+        return [self._stripes[i]
+                for i in sorted({self._stripe_index(k) for k in keys})]
+
+    @staticmethod
+    def _acquire(stripes: Sequence[_Stripe]) -> None:
+        for st in stripes:
+            st.lock.acquire()
+
+    @staticmethod
+    def _release(stripes: Sequence[_Stripe]) -> None:
+        for st in reversed(stripes):
+            st.lock.release()
+
     def _get_entry(self, key: str, kind: Optional[str] = None,
                    create: bool = False) -> Optional[_Entry]:
-        """Must hold the lock. Lazily expires; optionally creates."""
-        e = self._data.get(key)
+        """Must hold the key's stripe lock. Lazily expires; optionally
+        creates."""
+        data = self._stripe(key).data
+        e = data.get(key)
         if e is not None and e.expires_at is not None and self._now() >= e.expires_at:
-            del self._data[key]
+            del data[key]
             e = None
         if e is None:
             if not create:
@@ -189,7 +345,7 @@ class KVStore:
             e = _Entry(kind, [] if kind == "list" else
                        {} if kind == "hash" else
                        set() if kind == "set" else None)
-            self._data[key] = e
+            data[key] = e
         elif kind is not None and e.kind != kind:
             raise WrongTypeError(
                 f"key {key!r} holds {e.kind}, operation requires {kind}")
@@ -198,24 +354,31 @@ class KVStore:
     # -- generic -----------------------------------------------------------
 
     def delete(self, *keys: str) -> int:
-        with self._lock:
+        stripes = self._stripes_for(keys)
+        self._acquire(stripes)
+        try:
             n = 0
             for k in keys:
                 if self._get_entry(k) is not None:
-                    del self._data[k]
+                    del self._stripe(k).data[k]
                     n += 1
-            self._cond.notify_all()
+            for st in stripes:
+                st.cond.notify_all()
+        finally:
+            self._release(stripes)
         self._charge("DEL")
         return n
 
     def exists(self, key: str) -> bool:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             found = self._get_entry(key) is not None
         self._charge("EXISTS")
         return found
 
     def expire(self, key: str, seconds: float) -> bool:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key)
             if e is None:
                 ok = False
@@ -226,7 +389,8 @@ class KVStore:
         return ok
 
     def persist(self, key: str) -> bool:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key)
             if e is None or e.expires_at is None:
                 return False
@@ -236,7 +400,8 @@ class KVStore:
 
     def ttl(self, key: str) -> float:
         """-2 missing, -1 no expiry, else seconds remaining."""
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key)
             if e is None:
                 out = -2.0
@@ -248,43 +413,65 @@ class KVStore:
         return out
 
     def type_of(self, key: str) -> Optional[str]:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key)
             return None if e is None else e.kind
 
     def keys(self, pattern: str = "*") -> List[str]:
-        with self._lock:
-            now = self._now()
-            out = [k for k, e in self._data.items()
-                   if (e.expires_at is None or e.expires_at > now)
-                   and fnmatch.fnmatch(k, pattern)]
+        out: List[str] = []
+        now = self._now()
+        for st in self._stripes:
+            with st.lock:
+                out.extend(k for k, e in st.data.items()
+                           if (e.expires_at is None or e.expires_at > now)
+                           and fnmatch.fnmatch(k, pattern))
         self._charge("KEYS")
         return out
 
     def dbsize(self) -> int:
-        with self._lock:
-            now = self._now()
-            return sum(1 for e in self._data.values()
-                       if e.expires_at is None or e.expires_at > now)
+        n = 0
+        now = self._now()
+        for st in self._stripes:
+            with st.lock:
+                n += sum(1 for e in st.data.values()
+                         if e.expires_at is None or e.expires_at > now)
+        return n
 
     def flushall(self) -> None:
-        with self._lock:
-            self._data.clear()
-            self._cond.notify_all()
+        self._acquire(self._stripes)
+        try:
+            for st in self._stripes:
+                st.data.clear()
+                st.cond.notify_all()
+        finally:
+            self._release(self._stripes)
         self._charge("FLUSHALL")
+
+    def info(self) -> Dict[str, Any]:
+        """Server-info snapshot (remote-callable over the TCP transport):
+        name, stripe count, live key count, and the metrics counters —
+        including ``fanout``, which cluster benchmarks read to report
+        scatter width."""
+        snap = self.metrics.snapshot()
+        snap["name"] = self.name
+        snap["stripes"] = len(self._stripes)
+        snap["dbsize"] = self.dbsize()
+        return snap
 
     # -- strings / counters --------------------------------------------------
 
     def set(self, key: str, value: Any, ex: Optional[float] = None,
             nx: bool = False) -> bool:
         nbytes = _sizeof(value)
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             if nx and self._get_entry(key) is not None:
                 self._charge("SET", nbytes)
                 return False
             exp = self._now() + ex if ex is not None else None
-            self._data[key] = _Entry("string", value, exp)
-            self._cond.notify_all()
+            st.data[key] = _Entry("string", value, exp)
+            st.cond.notify_all()
         self._charge("SET", nbytes)
         return True
 
@@ -292,28 +479,31 @@ class KVStore:
         return self.set(key, value, nx=True)
 
     def get(self, key: str) -> Any:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "string")
             out = None if e is None else e.value
         self._charge("GET", 0, _sizeof(out) if out is not None else 0)
         return out
 
     def getset(self, key: str, value: Any) -> Any:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "string")
             old = None if e is None else e.value
-            self._data[key] = _Entry("string", value)
-            self._cond.notify_all()
+            st.data[key] = _Entry("string", value)
+            st.cond.notify_all()
         self._charge("GETSET", _sizeof(value))
         return old
 
     def incrby(self, key: str, amount: int = 1) -> int:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "string", create=True)
             cur = int(e.value) if e.value is not None else 0
             e.value = cur + amount
             out = e.value
-            self._cond.notify_all()
+            st.cond.notify_all()
         self._charge("INCRBY")
         return out
 
@@ -326,17 +516,25 @@ class KVStore:
     def mset(self, mapping: Dict[str, Any]) -> int:
         """Set many string keys in one command (one RTT for the batch)."""
         nbytes = sum(_sizeof(v) for v in mapping.values())
-        with self._lock:
+        stripes = self._stripes_for(mapping)
+        self._acquire(stripes)
+        try:
             for k, v in mapping.items():
-                self._data[k] = _Entry("string", v)
-            self._cond.notify_all()
+                self._stripe(k).data[k] = _Entry("string", v)
+            for st in stripes:
+                st.cond.notify_all()
+        finally:
+            self._release(stripes)
         self._charge("MSET", nbytes)
         return len(mapping)
 
     def mget(self, keys: Iterable[str]) -> List[Any]:
         """Get many string keys in one command. Like Redis MGET, missing
         or wrong-typed keys yield None instead of aborting the batch."""
-        with self._lock:
+        keys = list(keys)
+        stripes = self._stripes_for(keys)
+        self._acquire(stripes)
+        try:
             out: List[Any] = []
             for k in keys:
                 try:
@@ -344,6 +542,8 @@ class KVStore:
                 except WrongTypeError:
                     e = None
                 out.append(None if e is None else e.value)
+        finally:
+            self._release(stripes)
         self._charge("MGET", 0, sum(_sizeof(v) for v in out if v is not None))
         return out
 
@@ -366,7 +566,8 @@ class KVStore:
     def getrange(self, key: str, start: int, end: int) -> bytes:
         """Redis GETRANGE: bytes [start, end] (inclusive), negative offsets
         count from the end, missing key yields b""."""
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             cur = self._range_bytes(self._get_entry(key, "string"), key)
             n = len(cur)
             s = max(0, start + n if start < 0 else start)
@@ -376,7 +577,7 @@ class KVStore:
         return out
 
     def _setrange_locked(self, key: str, offset: int, value: Any) -> int:
-        """Must hold the lock. Shared by SETRANGE and MSETRANGE."""
+        """Must hold the key's stripe lock. Shared by SETRANGE/MSETRANGE."""
         if offset < 0:
             raise ValueError("offset is out of range")
         value = bytes(value)
@@ -389,7 +590,7 @@ class KVStore:
             cur += b"\x00" * (offset - len(cur))
         new = cur[:offset] + value + cur[offset + len(value):]
         if e is None:
-            self._data[key] = _Entry("string", new)
+            self._stripe(key).data[key] = _Entry("string", new)
         else:
             e.value = new
         return len(new)
@@ -397,27 +598,31 @@ class KVStore:
     def setrange(self, key: str, offset: int, value: Any) -> int:
         """Redis SETRANGE: overwrite bytes at ``offset`` (zero-padding any
         gap), creating the key if missing. Returns the new length."""
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             n = self._setrange_locked(key, offset, value)
-            self._cond.notify_all()
+            st.cond.notify_all()
         self._charge("SETRANGE", _sizeof(value))
         return n
 
     def msetrange(self, entries: List[Tuple[str, int, Any]]) -> int:
         """Many SETRANGEs across keys as ONE atomic command (the Lua-script
-        equivalent; one round trip, one lock acquisition). ``entries`` is
-        ``[(key, offset, bytes), ...]``; returns the number of writes
-        applied. This is the write-combining flush primitive of the
-        block-backed shared arrays. Runs targeting the same key mutate one
-        scratch bytearray in place — a strided flush with hundreds of runs
-        per segment must not re-copy the whole value per run."""
+        equivalent; one round trip, one lock acquisition per involved
+        stripe). ``entries`` is ``[(key, offset, bytes), ...]``; returns
+        the number of writes applied. This is the write-combining flush
+        primitive of the block-backed shared arrays. Runs targeting the
+        same key mutate one scratch bytearray in place — a strided flush
+        with hundreds of runs per segment must not re-copy the whole
+        value per run."""
         nbytes = sum(_sizeof(v) for _, _, v in entries)
         groups: Dict[str, List[Tuple[int, Any]]] = {}
         for key, offset, value in entries:
             if offset < 0:
                 raise ValueError("offset is out of range")
             groups.setdefault(key, []).append((offset, value))
-        with self._lock:
+        stripes = self._stripes_for(groups)
+        self._acquire(stripes)
+        try:
             for key, runs in groups.items():
                 e = self._get_entry(key, "string", create=False)
                 cur = bytearray(self._range_bytes(e, key))
@@ -434,15 +639,19 @@ class KVStore:
                     continue
                 new = bytes(cur)
                 if e is None:
-                    self._data[key] = _Entry("string", new)
+                    self._stripe(key).data[key] = _Entry("string", new)
                 else:
                     e.value = new
-            self._cond.notify_all()
+            for st in stripes:
+                st.cond.notify_all()
+        finally:
+            self._release(stripes)
         self._charge("MSETRANGE", nbytes)
         return len(entries)
 
     def strlen(self, key: str) -> int:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             cur = self._range_bytes(self._get_entry(key, "string"), key)
         self._charge("STRLEN")
         return len(cur)
@@ -451,42 +660,47 @@ class KVStore:
 
     def lpush(self, key: str, *values: Any) -> int:
         nbytes = sum(_sizeof(v) for v in values)
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "list", create=True)
             for v in values:
                 e.value.insert(0, v)
             n = len(e.value)
-            self._cond.notify_all()
+            st.cond.notify_all()
         self._charge("LPUSH", nbytes)
         return n
 
     def rpush(self, key: str, *values: Any) -> int:
         nbytes = sum(_sizeof(v) for v in values)
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "list", create=True)
             e.value.extend(values)
             n = len(e.value)
-            self._cond.notify_all()
+            st.cond.notify_all()
         self._charge("RPUSH", nbytes)
         return n
 
     def _pop(self, key: str, left: bool) -> Tuple[bool, Any]:
+        """Must hold the key's stripe lock."""
         e = self._get_entry(key, "list")
         if e is None or not e.value:
             return False, None
         v = e.value.pop(0) if left else e.value.pop()
         if not e.value:
-            del self._data[key]
+            del self._stripe(key).data[key]
         return True, v
 
     def lpop(self, key: str) -> Any:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             ok, v = self._pop(key, True)
         self._charge("LPOP", 0, _sizeof(v) if ok else 0)
         return v if ok else None
 
     def rpop(self, key: str) -> Any:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             ok, v = self._pop(key, False)
         self._charge("RPOP", 0, _sizeof(v) if ok else 0)
         return v if ok else None
@@ -494,29 +708,60 @@ class KVStore:
     def _bpop(self, keys: Iterable[str], timeout: Optional[float],
               left: bool, cmd: str) -> Optional[Tuple[str, Any]]:
         keys = list(keys)
+        if self._txn_tid == threading.get_ident():
+            timeout = 0.0  # inside transaction(fn): scripts cannot block
         deadline = None if timeout is None else time.monotonic() + timeout
         t0 = time.monotonic()
         result: Optional[Tuple[str, Any]] = None
-        with self._lock:
-            while True:
-                popped = False
-                for k in keys:
-                    ok, v = self._pop(k, left)
+        stripes = self._stripes_for(keys)
+        if len(stripes) == 1:
+            # Fast path: all keys on one stripe -> genuine condition wait,
+            # woken only by mutations of this stripe.
+            st = stripes[0]
+            with st.lock:
+                while True:
+                    popped = False
+                    for k in keys:
+                        ok, v = self._pop(k, left)
+                        if ok:
+                            result = (k, v)
+                            popped = True
+                            break
+                    if popped:
+                        break
+                    if deadline is None:
+                        st.cond.wait()
+                    else:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0 or not st.cond.wait(remaining):
+                            break
+        else:
+            # Cross-stripe multi-key pop: non-blocking sweeps with
+            # exponential backoff (the same pattern the shard router uses
+            # across stores). IPC primitives always wait on a single
+            # hash-tagged key, so this path is cold.
+            delay = _BPOP_MIN_BACKOFF_S
+            while result is None:
+                for k in keys:  # preserve BLPOP's left-to-right priority
+                    st = self._stripe(k)
+                    with st.lock:
+                        ok, v = self._pop(k, left)
                     if ok:
                         result = (k, v)
-                        popped = True
                         break
-                if popped:
+                if result is not None:
                     break
                 if deadline is None:
-                    self._cond.wait()
+                    time.sleep(delay)
                 else:
                     remaining = deadline - time.monotonic()
-                    if remaining <= 0 or not self._cond.wait(remaining):
+                    if remaining <= 0:
                         break
+                    time.sleep(min(delay, remaining))
+                delay = min(delay * 2, _BPOP_MAX_BACKOFF_S)
         # Charge latency outside the lock: network time must not serialize
-        # the (single-threaded) command execution of other clients.
-        self.metrics.blocked_time_s += time.monotonic() - t0
+        # command execution of other clients.
+        self.metrics.record_blocked(time.monotonic() - t0)
         if result is not None:
             self._charge(cmd, 0, _sizeof(result[1]))
         else:
@@ -533,6 +778,22 @@ class KVStore:
             keys = [keys]
         return self._bpop(keys, timeout, False, "BRPOP")
 
+    def _blpop_rpush_locked(self, src: str, dst: str, value: Any
+                            ) -> Tuple[bool, Any]:
+        """Must hold both src's and dst's stripe locks. Validates dst
+        BEFORE popping: erroring after the pop would silently drop the
+        popped element (Redis LMOVE errors without consuming the source)."""
+        e_dst = self._get_entry(dst)
+        if e_dst is not None and e_dst.kind != "list":
+            raise WrongTypeError(
+                f"key {dst!r} holds {e_dst.kind}, operation requires list")
+        ok, v = self._pop(src, True)
+        if not ok:
+            return False, None
+        e = self._get_entry(dst, "list", create=True)
+        e.value.append(value)
+        return True, v
+
     def blpop_rpush(self, src: str, dst: str, value: Any,
                     timeout: Optional[float] = None) -> Any:
         """Atomically BLPOP ``src`` then RPUSH ``value`` onto ``dst``.
@@ -542,34 +803,62 @@ class KVStore:
         item and pushes a token back — each a single KV command where the
         naive construction needs two (paper's per-command RTT tax).
         Returns the popped element, or None on timeout.
+
+        Hash-tagged src/dst (every queue's keys) share a stripe: single
+        lock, plain condition wait. Cross-stripe pairs acquire both
+        stripes in index order for the atomic move and wait on src's
+        stripe alone, re-checking under src's lock so a push between
+        attempts cannot be missed.
         """
+        if self._txn_tid == threading.get_ident():
+            timeout = 0.0  # inside transaction(fn): scripts cannot block
         deadline = None if timeout is None else time.monotonic() + timeout
         t0 = time.monotonic()
         popped = None
         got = False
-        with self._lock:
-            while True:
-                # Validate dst BEFORE popping: erroring after the pop would
-                # silently drop the popped element (Redis LMOVE errors
-                # without consuming the source).
-                e_dst = self._get_entry(dst)
-                if e_dst is not None and e_dst.kind != "list":
-                    raise WrongTypeError(
-                        f"key {dst!r} holds {e_dst.kind}, operation requires list")
-                ok, v = self._pop(src, True)
-                if ok:
-                    popped, got = v, True
-                    e = self._get_entry(dst, "list", create=True)
-                    e.value.append(value)
-                    self._cond.notify_all()
-                    break
-                if deadline is None:
-                    self._cond.wait()
-                else:
-                    remaining = deadline - time.monotonic()
-                    if remaining <= 0 or not self._cond.wait(remaining):
+        s_st, d_st = self._stripe(src), self._stripe(dst)
+        if s_st is d_st:
+            with s_st.lock:
+                while True:
+                    got, popped = self._blpop_rpush_locked(src, dst, value)
+                    if got:
+                        s_st.cond.notify_all()
                         break
-        self.metrics.blocked_time_s += time.monotonic() - t0
+                    if deadline is None:
+                        s_st.cond.wait()
+                    else:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0 or not s_st.cond.wait(remaining):
+                            break
+        else:
+            pair = sorted((s_st, d_st), key=lambda st: st.index)
+            while True:
+                self._acquire(pair)
+                try:
+                    got, popped = self._blpop_rpush_locked(src, dst, value)
+                    if got:
+                        s_st.cond.notify_all()
+                        d_st.cond.notify_all()
+                except BaseException:
+                    self._release(pair)
+                    raise
+                self._release(pair)
+                if got:
+                    break
+                # src was empty: wait on src's stripe only (holding dst's
+                # stripe across the wait would block its other clients).
+                # The emptiness re-check happens under the same lock
+                # pushers notify through, so no wakeup can be missed.
+                with s_st.lock:
+                    e = self._get_entry(src, "list")
+                    if e is None or not e.value:
+                        if deadline is None:
+                            s_st.cond.wait()
+                        else:
+                            remaining = deadline - time.monotonic()
+                            if remaining <= 0 or not s_st.cond.wait(remaining):
+                                break
+        self.metrics.record_blocked(time.monotonic() - t0)
         self._charge("BLPOPRPUSH",
                      _sizeof(value) if got else 0,
                      _sizeof(popped) if got else 0)
@@ -579,45 +868,55 @@ class KVStore:
         """Blocking LLEN: wait until the list is non-empty (or timeout) and
         return its length, without consuming. Backs ``Connection.poll`` —
         a wakeup-driven wait instead of an llen busy-poll."""
+        if self._txn_tid == threading.get_ident():
+            timeout = 0.0  # inside transaction(fn): scripts cannot block
         deadline = None if timeout is None else time.monotonic() + timeout
         t0 = time.monotonic()
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             while True:
                 e = self._get_entry(key, "list")
                 n = 0 if e is None else len(e.value)
                 if n:
                     break
                 if deadline is None:
-                    self._cond.wait()
+                    st.cond.wait()
                 else:
                     remaining = deadline - time.monotonic()
-                    if remaining <= 0 or not self._cond.wait(remaining):
+                    if remaining <= 0 or not st.cond.wait(remaining):
                         break
-        self.metrics.blocked_time_s += time.monotonic() - t0
+        self.metrics.record_blocked(time.monotonic() - t0)
         self._charge("BLLEN")
         return n
 
     def rpoplpush(self, src: str, dst: str) -> Any:
-        with self._lock:
+        stripes = self._stripes_for((src, dst))
+        self._acquire(stripes)
+        try:
             ok, v = self._pop(src, False)
             if not ok:
                 self._charge("RPOPLPUSH")
                 return None
             e = self._get_entry(dst, "list", create=True)
             e.value.insert(0, v)
-            self._cond.notify_all()
+            for st in stripes:
+                st.cond.notify_all()
+        finally:
+            self._release(stripes)
         self._charge("RPOPLPUSH", 0, _sizeof(v))
         return v
 
     def llen(self, key: str) -> int:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "list")
             n = 0 if e is None else len(e.value)
         self._charge("LLEN")
         return n
 
     def lindex(self, key: str, index: int) -> Any:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "list")
             try:
                 v = None if e is None else e.value[index]
@@ -627,7 +926,8 @@ class KVStore:
         return v
 
     def lset(self, key: str, index: int, value: Any) -> bool:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "list")
             if e is None:
                 raise KeyError(f"no such key {key!r}")
@@ -635,13 +935,14 @@ class KVStore:
                 e.value[index] = value
             except IndexError:
                 raise IndexError("index out of range") from None
-            self._cond.notify_all()
+            st.cond.notify_all()
         self._charge("LSET", _sizeof(value))
         return True
 
     def lrange(self, key: str, start: int, stop: int) -> List[Any]:
         """Redis semantics: stop is inclusive; negative indices allowed."""
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "list")
             if e is None:
                 out: List[Any] = []
@@ -654,7 +955,8 @@ class KVStore:
         return out
 
     def ltrim(self, key: str, start: int, stop: int) -> bool:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "list")
             if e is None:
                 return True
@@ -663,7 +965,7 @@ class KVStore:
             t = stop + n if stop < 0 else stop
             e.value[:] = e.value[max(0, s):max(0, t) + 1]
             if not e.value:
-                del self._data[key]
+                del st.data[key]
         self._charge("LTRIM")
         return True
 
@@ -677,42 +979,47 @@ class KVStore:
         if mapping:
             items.update(mapping)
         nbytes = sum(_sizeof(v) for v in items.values())
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "hash", create=True)
             added = sum(1 for f in items if f not in e.value)
             e.value.update(items)
-            self._cond.notify_all()
+            st.cond.notify_all()
         self._charge("HSET", nbytes)
         return added
 
     def hsetnx(self, key: str, field_: str, value: Any) -> bool:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "hash", create=True)
             if field_ in e.value:
                 ok = False
             else:
                 e.value[field_] = value
                 ok = True
-            self._cond.notify_all()
+            st.cond.notify_all()
         self._charge("HSETNX", _sizeof(value))
         return ok
 
     def hget(self, key: str, field_: str) -> Any:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "hash")
             v = None if e is None else e.value.get(field_)
         self._charge("HGET", 0, _sizeof(v) if v is not None else 0)
         return v
 
     def hmget(self, key: str, fields: Iterable[str]) -> List[Any]:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "hash")
             out = [None if e is None else e.value.get(f) for f in fields]
         self._charge("HMGET", 0, sum(_sizeof(v) for v in out if v is not None))
         return out
 
     def hdel(self, key: str, *fields: str) -> int:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "hash")
             if e is None:
                 n = 0
@@ -723,63 +1030,71 @@ class KVStore:
                         del e.value[f]
                         n += 1
                 if not e.value:
-                    del self._data[key]
+                    del st.data[key]
         self._charge("HDEL")
         return n
 
     def hgetall(self, key: str) -> Dict[str, Any]:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "hash")
             out = {} if e is None else dict(e.value)
         self._charge("HGETALL", 0, sum(_sizeof(v) for v in out.values()))
         return out
 
     def hlen(self, key: str) -> int:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "hash")
             return 0 if e is None else len(e.value)
 
     def hkeys(self, key: str) -> List[str]:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "hash")
             return [] if e is None else list(e.value.keys())
 
     def hvals(self, key: str) -> List[Any]:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "hash")
             return [] if e is None else list(e.value.values())
 
     def hexists(self, key: str, field_: str) -> bool:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "hash")
             return e is not None and field_ in e.value
 
     def hincrby(self, key: str, field_: str, amount: int = 1) -> int:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "hash", create=True)
             cur = int(e.value.get(field_, 0))
             e.value[field_] = cur + amount
             out = e.value[field_]
-            self._cond.notify_all()
+            st.cond.notify_all()
         self._charge("HINCRBY")
         return out
 
     # -- sets ----------------------------------------------------------------
 
     def sadd(self, key: str, *members: Any) -> int:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "set", create=True)
             n = 0
             for m in members:
                 if m not in e.value:
                     e.value.add(m)
                     n += 1
-            self._cond.notify_all()
+            st.cond.notify_all()
         self._charge("SADD", sum(_sizeof(m) for m in members))
         return n
 
     def srem(self, key: str, *members: Any) -> int:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "set")
             if e is None:
                 n = 0
@@ -790,62 +1105,93 @@ class KVStore:
                         e.value.discard(m)
                         n += 1
                 if not e.value:
-                    del self._data[key]
+                    del st.data[key]
         self._charge("SREM")
         return n
 
     def smembers(self, key: str) -> set:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "set")
             out = set() if e is None else set(e.value)
         self._charge("SMEMBERS", 0, sum(_sizeof(m) for m in out))
         return out
 
     def scard(self, key: str) -> int:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "set")
             return 0 if e is None else len(e.value)
 
     def sismember(self, key: str, member: Any) -> bool:
-        with self._lock:
+        st = self._stripe(key)
+        with st.lock:
             e = self._get_entry(key, "set")
             return e is not None and member in e.value
 
     # -- transactions --------------------------------------------------------
 
-    def transaction(self, fn):
+    def transaction(self, fn, key_hint: Optional[str] = None,
+                    _charge_latency: bool = True):
         """Run ``fn(store)`` atomically (models a Redis Lua script / MULTI).
 
-        Inner commands execute without per-command network latency — a
-        pipelined/Lua batch pays one round trip; only bytes still cost
-        bandwidth. Metrics keep counting inner commands.
+        Acquires EVERY stripe in index order — the one global
+        serialization point left in the striped store, preserving full
+        MULTI/EXEC transactionality across keys. Inner commands re-enter
+        their stripe locks (RLock) and execute without per-command network
+        latency — a pipelined/Lua batch pays one round trip; only bytes
+        still cost bandwidth. Metrics keep counting inner commands.
+        Blocking commands called from inside ``fn`` run non-blocking
+        (their timeout is forced to 0, like ``execute_batch`` and Redis
+        scripts): waiting on one stripe's condition while this thread
+        holds every other stripe would deadlock the producers meant to
+        wake it.
+
+        ``key_hint`` is accepted and ignored: on a single store every key
+        co-locates. IPC primitives pass it whenever the session store
+        exposes ``shards`` — which a generic-dispatch ``KVClient`` proxy
+        appears to — and the hint must not kill the remote call.
         """
-        with self._lock:
+        self._acquire(self._stripes)
+        try:
+            prev_tid, self._txn_tid = self._txn_tid, threading.get_ident()
             saved, self.latency = self.latency, None
             b0 = self.metrics.bytes_in + self.metrics.bytes_out
             try:
                 out = fn(self)
             finally:
                 self.latency = saved
+                self._txn_tid = prev_tid
             moved = (self.metrics.bytes_in + self.metrics.bytes_out) - b0
-            self._cond.notify_all()
-        # one RTT + the batch's bandwidth cost (bytes already in metrics)
+            # stashed under the take-all lock: a shard router reads it
+            # right after its sub-batch to bill the scatter accurately
+            # (recomputing a bytes delta outside the lock would attribute
+            # concurrent clients' traffic to this batch)
+            self._last_txn_moved = moved
+            for st in self._stripes:
+                st.cond.notify_all()
+        finally:
+            self._release(self._stripes)
+        # one RTT + the batch's bandwidth cost (bytes already in metrics).
+        # _charge_latency=False lets a shard router bill the whole scatter
+        # itself (one concurrent RTT) without mutating this store's model.
         self.metrics.record("EVAL")
-        if self.latency is not None:
+        if _charge_latency and self.latency is not None:
             self.latency.charge(moved)
         return out
 
-    def execute_batch(self, commands: List[Tuple[str, tuple, dict]]
+    def execute_batch(self, commands: List[Tuple[str, tuple, dict]],
+                      _charge_latency: bool = True
                       ) -> List[Tuple[bool, Any]]:
-        """Run ``[(cmd, args, kwargs), ...]`` under ONE lock acquisition and
-        ONE latency charge (Redis MULTI/EXEC). Per-command errors are
-        captured as ``(False, exc)`` without aborting the batch, so callers
-        always get exactly ``len(commands)`` results — the framing-safety
-        contract the pipelined wire protocol relies on.
+        """Run ``[(cmd, args, kwargs), ...]`` under ONE take-all-stripes
+        acquisition and ONE latency charge (Redis MULTI/EXEC). Per-command
+        errors are captured as ``(False, exc)`` without aborting the
+        batch, so callers always get exactly ``len(commands)`` results —
+        the framing-safety contract the pipelined wire protocol relies on.
 
         Like Redis MULTI, blocking commands run non-blocking inside a
-        batch (their timeout is forced to 0): blocking under the global
-        lock would stall every other client.
+        batch (their timeout is forced to 0): blocking while holding
+        every stripe would stall every other client.
         """
         commands = [_debatch(c) for c in commands]
 
@@ -860,16 +1206,11 @@ class KVStore:
                     out.append((False, exc))
             return out
 
-        return self.transaction(run)
+        return self.transaction(run, _charge_latency=_charge_latency)
 
     def pipeline(self) -> "Pipeline":
         """Queue commands locally, execute them in one batch on exit."""
         return Pipeline(self)
-
-    # used by ShardedKVStore waiters
-    def _wait_hint(self, timeout: float) -> None:
-        with self._lock:
-            self._cond.wait(timeout)
 
 
 #: blocking command -> index of its positional ``timeout`` argument;
@@ -925,7 +1266,9 @@ class PipelineResult:
 
 class Pipeline:
     """Client-side command batch: queue N commands, flush them as one
-    ``execute_batch`` (one RTT, one lock acquisition server-side).
+    ``execute_batch`` (one RTT, one lock acquisition server-side; against
+    a shard router, one concurrently-flushed ``execute_batch`` per
+    involved shard — still ~one wall-clock RTT).
 
     Usage::
 
@@ -990,52 +1333,26 @@ class Pipeline:
 
 
 # ---------------------------------------------------------------------------
-# Sharded router (beyond-paper: removes the single-Redis bottleneck of §6.3)
+# Shard routing (shared by the in-process router and the TCP cluster client)
 # ---------------------------------------------------------------------------
 
 
-class ShardedKVStore:
-    """Hash-routes keys across N independent KVStores.
+class _ShardRouter:
+    """Key-routing layer over ``self.shards`` (KVStores in-process, or
+    per-shard ``KVClient`` connections in ``repro.core.kvcluster``):
+    consistent hashing with Redis-Cluster hash tags, per-shard grouping of
+    multi-key commands, cross-shard blocking-op backoff, and batch
+    partitioning for scatter/gather pipelines. Concrete classes provide
+    ``shards`` and an ``execute_batch`` flush strategy."""
 
-    Single-key commands keep full Redis semantics (each shard is itself
-    single-threaded-atomic). Multi-key blocking pops poll across the
-    involved shards. ``transaction`` is only supported when all touched
-    keys live on one shard (callers use key tags, like real Redis Cluster).
-    """
+    shards: List[Any]
+    hash_seed: int = 0
 
-    def __init__(self, shards: List[KVStore]):
-        if not shards:
-            raise ValueError("need at least one shard")
-        self.shards = shards
-        self.name = f"sharded[{len(shards)}]"
+    def _hash(self, key: str) -> int:
+        return _key_hash(key, self.hash_seed)
 
-    @staticmethod
-    def _hash(key: str) -> int:
-        # Redis Cluster hash-tag rule: only the {...} portion is hashed.
-        if "{" in key and "}" in key:
-            s = key.index("{") + 1
-            e = key.index("}", s)
-            if e > s:
-                key = key[s:e]
-        h = 2166136261
-        for ch in key.encode():
-            h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
-        return h
-
-    def shard_for(self, key: str) -> KVStore:
+    def shard_for(self, key: str) -> Any:
         return self.shards[self._hash(key) % len(self.shards)]
-
-    @property
-    def metrics(self) -> Metrics:
-        agg = Metrics()
-        for s in self.shards:
-            m = s.metrics
-            for c, n in m.commands.items():
-                agg.commands[c] = agg.commands.get(c, 0) + n
-            agg.bytes_in += m.bytes_in
-            agg.bytes_out += m.bytes_out
-            agg.blocked_time_s += m.blocked_time_s
-        return agg
 
     def flushall(self) -> None:
         for s in self.shards:
@@ -1050,8 +1367,18 @@ class ShardedKVStore:
             out.extend(s.keys(pattern))
         return out
 
+    def info(self) -> List[Dict[str, Any]]:
+        """Per-shard info snapshots, in shard order."""
+        return [s.info() for s in self.shards]
+
     def delete(self, *keys: str) -> int:
-        return sum(self.shard_for(k).delete(k) for k in keys)
+        """One DELETE per involved shard (not per key: a resource teardown
+        deleting hundreds of keys over TCP must not pay per-key RTTs)."""
+        groups: Dict[int, List[str]] = {}
+        for k in keys:
+            groups.setdefault(self._hash(k) % len(self.shards), []).append(k)
+        return sum(self.shards[idx].delete(*ks)
+                   for idx, ks in groups.items())
 
     def blpop(self, keys, timeout: Optional[float] = None):
         return self._bpop(keys, timeout, "blpop")
@@ -1071,7 +1398,9 @@ class ShardedKVStore:
         # Multi-shard: round-robin non-blocking pops with exponential
         # backoff, capped both at _BPOP_MAX_BACKOFF_S and at the time
         # remaining — a fixed sleep either burns CPU (too short) or adds
-        # up to its full period of wakeup latency (too long).
+        # up to its full period of wakeup latency (too long). Over TCP
+        # each sweep costs one RTT per involved shard, which is why IPC
+        # resource keys are hash-tagged onto one shard.
         deadline = None if timeout is None else time.monotonic() + timeout
         delay = _BPOP_MIN_BACKOFF_S
         while True:
@@ -1118,7 +1447,7 @@ class ShardedKVStore:
         return v
 
     @staticmethod
-    def _check_list_dst(shard: KVStore, dst: str) -> None:
+    def _check_list_dst(shard: Any, dst: str) -> None:
         kind = shard.type_of(dst)
         if kind is not None and kind != "list":
             raise WrongTypeError(
@@ -1154,17 +1483,27 @@ class ShardedKVStore:
                 self._hash(entry[0]) % len(self.shards), []).append(entry)
         return sum(self.shards[idx].msetrange(g) for idx, g in groups.items())
 
-    def execute_batch(self, commands: List[Tuple[str, tuple, dict]]
-                      ) -> List[Tuple[bool, Any]]:
-        """Route single-key commands to their shard (by first argument) and
-        run one sub-batch per involved shard; commands whose first argument
-        is not a key string (mset, mget, multi-key delete, blpop key lists)
-        run through this router's own methods instead of being guessed onto
-        a shard. Results come back in submission order; atomicity holds per
-        shard only (Redis Cluster semantics)."""
-        commands = [_debatch(c) for c in commands]
+    def _route_batch(self, commands: List[Tuple[str, tuple, dict]],
+                     flush) -> List[Tuple[bool, Any]]:
+        """Run a (debatched) command list: single-key commands accumulate
+        into per-shard groups; commands whose keys can span shards (mset,
+        mget, multi-key delete, blpop key lists, cross-shard moves) run
+        through this router's own methods instead of being guessed onto a
+        shard. ``flush(groups, out)`` is the transport strategy (in-process
+        sub-batches, or the TCP scatter/gather); it is called with the
+        accumulated groups BEFORE any router-handled command executes and
+        once at the end, so a batch always observes its own earlier writes
+        in submission order — the same read-your-own-writes contract a
+        single server gives a pipelined batch. ``groups`` maps shard index
+        to ``[(submission_index, command), ...]``."""
         out: List[Optional[Tuple[bool, Any]]] = [None] * len(commands)
         groups: Dict[int, List[Tuple[int, Tuple[str, tuple, dict]]]] = {}
+
+        def flush_groups() -> None:
+            if groups:
+                flush(groups, out)
+                groups.clear()
+
         for i, command in enumerate(commands):
             cmd, args, kwargs = command
             # Commands touching several keys can span shards: hand them to
@@ -1184,16 +1523,14 @@ class ShardedKVStore:
                     self._hash(args[0]) % len(self.shards), []).append(
                         (i, command))
                 continue
+            flush_groups()  # earlier single-key writes land first
             try:  # multi-key / keyless command: the router knows how
                 if cmd.startswith("_") or not hasattr(self, cmd):
                     raise AttributeError(f"unknown command {cmd!r}")
                 out[i] = (True, getattr(self, cmd)(*args, **kwargs))
             except Exception as exc:
                 out[i] = (False, exc)
-        for idx, numbered in groups.items():
-            results = self.shards[idx].execute_batch([c for _, c in numbered])
-            for (i, _), res in zip(numbered, results):
-                out[i] = res
+        flush_groups()
         return out  # type: ignore[return-value]
 
     def pipeline(self) -> Pipeline:
@@ -1207,10 +1544,86 @@ class ShardedKVStore:
         return self.shard_for(key_hint).transaction(fn)
 
     def __getattr__(self, cmd: str):
+        if cmd.startswith("_"):
+            raise AttributeError(cmd)
+
         # Route any single-key command by its first argument.
         def call(key, *args, **kwargs):
             return getattr(self.shard_for(key), cmd)(key, *args, **kwargs)
+        call.__name__ = cmd
         return call
+
+
+# ---------------------------------------------------------------------------
+# Sharded router (beyond-paper: removes the single-Redis bottleneck of §6.3)
+# ---------------------------------------------------------------------------
+
+
+class ShardedKVStore(_ShardRouter):
+    """Hash-routes keys across N independent KVStores.
+
+    Single-key commands keep full Redis semantics (each shard is itself
+    per-key atomic). Multi-key blocking pops poll across the involved
+    shards. ``transaction`` is only supported when all touched keys live
+    on one shard (callers use key tags, like real Redis Cluster).
+    """
+
+    def __init__(self, shards: List[KVStore]):
+        if not shards:
+            raise ValueError("need at least one shard")
+        self.shards = shards
+        self.name = f"sharded[{len(shards)}]"
+
+    @property
+    def metrics(self) -> Metrics:
+        agg = Metrics()
+        for s in self.shards:
+            snap = s.metrics.snapshot()  # locked copy: shards mutate live
+            for c, n in snap["commands"].items():
+                agg.commands[c] = agg.commands.get(c, 0) + n
+            agg.bytes_in += snap["bytes_in"]
+            agg.bytes_out += snap["bytes_out"]
+            agg.blocked_time_s += snap["blocked_time_s"]
+            for w, n in snap["fanout"].items():
+                agg.fanout[w] = agg.fanout.get(w, 0) + n
+        return agg
+
+    def execute_batch(self, commands: List[Tuple[str, tuple, dict]]
+                      ) -> List[Tuple[bool, Any]]:
+        """Route the batch per shard (see ``_route_batch``) and flush one
+        sub-batch per involved shard. Results come back in submission
+        order; atomicity holds per shard only (Redis Cluster semantics).
+
+        Latency accounting models the cluster client's concurrent
+        scatter/gather: per-shard charges are suppressed during the
+        sub-batches and ONE scatter charge (max cost across shards, not
+        the sum) is billed per flush; ``Metrics.fanout`` records the
+        scatter width so benchmarks can report fan-out."""
+        return self._route_batch([_debatch(c) for c in commands],
+                                 self._flush_groups)
+
+    def _flush_groups(self, groups, out) -> None:
+        sizes: List[int] = []
+        model: Optional[LatencyModel] = None
+        for idx in sorted(groups):
+            numbered = groups[idx]
+            shard = self.shards[idx]
+            # _charge_latency=False: the scatter is billed below as ONE
+            # concurrent RTT; mutating shard.latency here instead would
+            # race concurrent flushes to the same shard.
+            results = shard.execute_batch([c for _, c in numbered],
+                                          _charge_latency=False)
+            # the batch's own byte volume, stashed by transaction() under
+            # its take-all lock (a metrics delta would also count other
+            # clients' concurrent traffic)
+            sizes.append(getattr(shard, "_last_txn_moved", 0))
+            if model is None and shard.latency is not None:
+                model = shard.latency
+            for (i, _), res in zip(numbered, results):
+                out[i] = res
+        self.shards[min(groups)].metrics.record_fanout(len(groups))
+        if model is not None:
+            model.charge_scatter(sizes)
 
 
 _BPOP_MIN_BACKOFF_S = 0.0005

@@ -25,10 +25,12 @@ def main() -> int:
 
     from . import serialization
     from . import session as S
-    from .kvserver import KVClient
+    from .kvcluster import connect
     from .storage import KVObjectStore
 
-    client = KVClient((host, int(port)))
+    # one-address bootstrap: REPRO_KV_ADDR may name a plain KVServer or a
+    # KVCluster control endpoint — workers join either transparently
+    client = connect((host, int(port)))
     sess = S.Session(store=client, storage=KVObjectStore(client))
     S.set_session(sess)
 

@@ -278,3 +278,140 @@ class TestByteRangeOverTCP:
         finally:
             from repro.core import reset_session
             reset_session()
+
+
+class TestConcurrentClients:
+    """PR 3 satellite: many clients interleaving on one server never
+    desync framing, and the client socket registry stays bounded."""
+
+    def test_concurrent_nontransactional_pipelines_interleave(self, server):
+        n_clients, n_rounds, batch = 4, 10, 20
+        errors = []
+
+        def run(ci):
+            c = KVClient(server.address)
+            try:
+                for r in range(n_rounds):
+                    p = c.pipeline(transactional=False)
+                    futs = []
+                    for j in range(batch):
+                        p.incr("shared-count")
+                        futs.append(p.rpush(f"own-{ci}", f"{r}:{j}".encode()))
+                        p.llen(f"own-{ci}")
+                    p.execute()
+                    # framing intact: our private list grew exactly as queued
+                    assert futs[-1].get() == (r + 1) * batch
+            except Exception as exc:  # pragma: no cover - failure detail
+                errors.append((ci, exc))
+            finally:
+                c.close()
+
+        threads = [threading.Thread(target=run, args=(i,))
+                   for i in range(n_clients)]
+        [t.start() for t in threads]
+        [t.join(60) for t in threads]
+        assert errors == []
+        assert server.store.get("shared-count") == n_clients * n_rounds * batch
+        for i in range(n_clients):
+            assert server.store.llen(f"own-{i}") == n_rounds * batch
+
+    def test_concurrent_transactional_pipelines_atomic(self, server):
+        n_clients, n_rounds = 4, 15
+
+        def run(ci):
+            c = KVClient(server.address)
+            try:
+                for _ in range(n_rounds):
+                    with c.pipeline() as p:
+                        p.incr("a")
+                        p.incr("b")
+            finally:
+                c.close()
+
+        threads = [threading.Thread(target=run, args=(i,))
+                   for i in range(n_clients)]
+        [t.start() for t in threads]
+        [t.join(60) for t in threads]
+        assert server.store.get("a") == n_clients * n_rounds
+        assert server.store.get("b") == n_clients * n_rounds
+
+    def test_dead_thread_sockets_pruned(self, server):
+        c = KVClient(server.address)
+        for wave in range(5):
+            threads = [threading.Thread(target=lambda: c.incr("n"))
+                       for _ in range(4)]
+            [t.start() for t in threads]
+            [t.join(10) for t in threads]
+        c.incr("n")  # triggers a prune pass from a live thread
+        # registry holds live threads only, not one socket per dead thread
+        assert len(c._socks) <= 2, len(c._socks)
+        c.close()
+        assert c._socks == {}
+
+    def test_close_idempotent_under_concurrent_callers(self, server):
+        c = KVClient(server.address)
+        c.incr("n")
+        threads = [threading.Thread(target=c.close) for _ in range(8)]
+        [t.start() for t in threads]
+        [t.join(10) for t in threads]
+        assert c._socks == {}
+        # the client remains usable: close() invalidates, _sock reconnects
+        assert c.incr("n") == 2
+        c.close()
+
+
+class TestBufferPool:
+    def test_acquire_release_reuses(self):
+        from repro.core.kvserver import _BufferPool
+        pool = _BufferPool()
+        b = pool.acquire(1000)
+        pool.release(b)
+        assert pool.acquire(900) is b  # recycled, capacity >= request
+        assert pool.acquire(900) is not b  # pool drained -> fresh
+
+    def test_gross_overallocation_refused(self):
+        from repro.core.kvserver import _BufferPool
+        pool = _BufferPool()
+        big = pool.acquire(100_000)
+        pool.release(big)
+        small = pool.acquire(8)
+        assert small is not big  # a 100 KB buffer must not serve 8 bytes
+
+    def test_oversize_buffers_not_hoarded(self):
+        from repro.core.kvserver import _BufferPool
+        pool = _BufferPool()
+        huge = pool.acquire(_BufferPool._MAX_BUF_BYTES + 1)
+        pool.release(huge)
+        assert pool._free == []
+
+    def test_pooled_small_frames_roundtrip_correct_values(self, server):
+        """Recycled receive buffers never corrupt decoded values: distinct
+        payloads over one connection (same pooled buffers) stay distinct."""
+        c = KVClient(server.address)
+        blobs = [bytes([i]) * 512 for i in range(16)]
+        for i, blob in enumerate(blobs):
+            c.set(f"pk{i}", blob)
+        got = [c.get(f"pk{i}") for i in range(16)]
+        assert [bytes(g) for g in got] == blobs
+        c.close()
+
+
+class TestTransactionKeyHintOverTCP:
+    def test_joinable_queue_task_done_over_plain_client(self, server):
+        """A generic-dispatch KVClient looks like it has `.shards`, so the
+        IPC layer passes transaction(..., key_hint=...); the remote
+        KVStore must accept and ignore the hint, not TypeError."""
+        set_session(Session(store=KVClient(server.address)))
+        q = mp.JoinableQueue()
+        q.put("item")
+        assert q.get(timeout=5) == "item"
+        q.task_done()
+        q.join(5)
+
+    def test_bounded_semaphore_release_over_plain_client(self, server):
+        set_session(Session(store=KVClient(server.address)))
+        sem = mp.BoundedSemaphore(1)
+        sem.acquire()
+        sem.release()
+        with pytest.raises(ValueError):
+            sem.release()

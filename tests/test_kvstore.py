@@ -521,3 +521,234 @@ class TestByteRange:
         sh.setrange("k", 0, b"hello")
         assert sh.getrange("k", 1, 3) == b"ell"
         assert sh.strlen("k") == 5
+
+
+class TestStripedLocking:
+    """PR 3: the striped store runs distinct-key commands in parallel
+    while keeping per-key atomicity and batch transactionality."""
+
+    def _two_stripe_keys(self, kv):
+        """Two keys guaranteed to live on different stripes."""
+        base = "stripe-a"
+        other = next(k for k in (f"stripe-b{i}" for i in range(200))
+                     if kv._stripe_index(k) != kv._stripe_index(base))
+        return base, other
+
+    def test_hash_tags_share_a_stripe(self, kv):
+        assert kv._stripe_index("{u}:slots") == kv._stripe_index("{u}:items")
+
+    def test_distinct_stripes_do_not_serialize(self, kv):
+        """A held stripe lock blocks only its own stripe: ops on another
+        stripe complete, ops on the same stripe wait."""
+        k_held, k_other = self._two_stripe_keys(kv)
+        same_stripe = next(
+            k for k in (f"stripe-c{i}" for i in range(500))
+            if kv._stripe_index(k) == kv._stripe_index(k_held))
+        held = kv._stripe(k_held)
+        done_other, done_same = [], []
+        held.lock.acquire()
+        try:
+            t1 = threading.Thread(
+                target=lambda: done_other.append(kv.incr(k_other)))
+            t2 = threading.Thread(
+                target=lambda: done_same.append(kv.incr(same_stripe)))
+            t1.start()
+            t2.start()
+            t1.join(2)
+            assert done_other == [1], "other-stripe op blocked by held stripe"
+            time.sleep(0.05)
+            assert done_same == [], "same-stripe op ran through a held lock"
+        finally:
+            held.lock.release()
+        t2.join(2)
+        assert done_same == [1]
+
+    def test_same_key_ops_stay_atomic(self, kv):
+        def bump():
+            for _ in range(300):
+                kv.incr("shared")
+        threads = [threading.Thread(target=bump) for _ in range(8)]
+        [t.start() for t in threads]
+        [t.join(10) for t in threads]
+        assert kv.get("shared") == 2400
+
+    def test_distinct_key_ops_in_parallel_threads(self, kv):
+        def bump(i):
+            for _ in range(200):
+                kv.incr(f"c{i}")
+        threads = [threading.Thread(target=bump, args=(i,)) for i in range(8)]
+        [t.start() for t in threads]
+        [t.join(10) for t in threads]
+        assert [kv.get(f"c{i}") for i in range(8)] == [200] * 8
+
+    def test_blpop_wakes_across_stripe_traffic(self, kv):
+        """A waiter wakes on its own key even while other stripes churn."""
+        k_wait, k_noise = self._two_stripe_keys(kv)
+        out = []
+        t = threading.Thread(target=lambda: out.append(kv.blpop(k_wait, 5)))
+        t.start()
+        for _ in range(50):
+            kv.rpush(k_noise, b"n")
+            kv.lpop(k_noise)
+        kv.rpush(k_wait, b"v")
+        t.join(3)
+        assert out == [(k_wait, b"v")]
+
+    def test_multi_stripe_blpop_late_push_wakes(self, kv):
+        k1, k2 = self._two_stripe_keys(kv)
+        out = []
+        t = threading.Thread(target=lambda: out.append(kv.blpop([k1, k2], 5)))
+        t.start()
+        time.sleep(0.05)
+        kv.rpush(k2, b"m")
+        t.join(3)
+        assert out == [(k2, b"m")]
+
+    def test_cross_stripe_blpop_rpush_atomic_and_wakes(self, kv):
+        """The fused op works across stripes: late push wakes the waiter,
+        the element moves atomically."""
+        src, dst = self._two_stripe_keys(kv)
+        out = []
+        t = threading.Thread(
+            target=lambda: out.append(kv.blpop_rpush(src, dst, b"tok", 5)))
+        t.start()
+        time.sleep(0.05)
+        kv.rpush(src, b"item")
+        t.join(3)
+        assert out == [b"item"]
+        assert kv.lrange(dst, 0, -1) == [b"tok"]
+        assert not kv.exists(src)
+
+    def test_cross_stripe_blpop_rpush_bad_dst_does_not_consume(self, kv):
+        src, dst = self._two_stripe_keys(kv)
+        kv.set(dst, b"not-a-list")
+        kv.rpush(src, b"item")
+        with pytest.raises(WrongTypeError):
+            kv.blpop_rpush(src, dst, b"tok", 0.1)
+        assert kv.lrange(src, 0, -1) == [b"item"]
+
+    def test_execute_batch_remains_transactional(self, kv):
+        """Writers batch two cross-stripe sets; a transactional reader can
+        never observe them out of sync (take-all-stripes ordering)."""
+        ka, kb = self._two_stripe_keys(kv)
+        kv.mset({ka: 0, kb: 0})
+        stop = threading.Event()
+        torn = []
+
+        def writer():
+            v = 0
+            while not stop.is_set():
+                v += 1
+                kv.execute_batch([("set", (ka, v), {}), ("set", (kb, v), {})])
+
+        def reader():
+            while not stop.is_set():
+                a, b = kv.transaction(lambda s: (s.get(ka), s.get(kb)))
+                if a != b:
+                    torn.append((a, b))
+
+        threads = [threading.Thread(target=writer),
+                   threading.Thread(target=reader)]
+        [t.start() for t in threads]
+        time.sleep(0.4)
+        stop.set()
+        [t.join(5) for t in threads]
+        assert torn == []
+
+    def test_stress_mixed_ops_under_contention(self, kv):
+        """Pipelines, singles and blocking ops interleaving across threads
+        leave exact counts behind (no lost updates, no deadlock)."""
+        n_threads, n_iter = 6, 60
+        kv.rpush("{q}:slots", *([b"s"] * 4))
+
+        def work(i):
+            for j in range(n_iter):
+                kv.incr("total")
+                kv.incr(f"mine-{i}")
+                assert kv.blpop_rpush("{q}:slots", "{q}:items", b"x", 5) is not None
+                assert kv.blpop_rpush("{q}:items", "{q}:slots", b"s", 5) is not None
+                with kv.pipeline() as p:
+                    p.rpush(f"log-{i}", j)
+                    p.llen(f"log-{i}")
+
+        threads = [threading.Thread(target=work, args=(i,))
+                   for i in range(n_threads)]
+        [t.start() for t in threads]
+        [t.join(30) for t in threads]
+        assert kv.get("total") == n_threads * n_iter
+        assert all(kv.get(f"mine-{i}") == n_iter for i in range(n_threads))
+        assert all(kv.llen(f"log-{i}") == n_iter for i in range(n_threads))
+        assert kv.llen("{q}:slots") == 4
+        assert not kv.exists("{q}:items")
+
+
+class TestScatterLatency:
+    """PR 3 satellite: concurrently-flushed per-shard batches bill ONE
+    wall-clock RTT (max across shards), and Metrics reports fan-out."""
+
+    def _sharded_with_latency(self, n=2):
+        models = [LatencyModel(rtt_s=1e-3, scale=0) for _ in range(n)]
+        sh = ShardedKVStore([KVStore(models[i], name=f"s{i}")
+                             for i in range(n)])
+        return sh, models
+
+    def test_charge_scatter_bills_max_not_sum(self):
+        m = LatencyModel(rtt_s=1e-3, bandwidth_bps=1e6, scale=0)
+        m.charge_scatter([1000, 4000, 2000])
+        assert m.charges == 1
+        assert m.virtual_time == pytest.approx(1e-3 + 4000 / 1e6)
+
+    def test_sharded_batch_one_rtt_across_shards(self):
+        sh, models = self._sharded_with_latency()
+        # keys on both shards (test_routing_consistent guarantees spread)
+        cmds = [("set", (f"key-{i}", b"v"), {}) for i in range(16)]
+        sh.execute_batch(cmds)
+        assert all(s.dbsize() for s in sh.shards)  # batch hit both shards
+        total_virtual = sum(m.virtual_time for m in models)
+        total_charges = sum(m.charges for m in models)
+        # one scatter charge at max cost, not one RTT per shard
+        assert total_charges == 1
+        assert total_virtual == pytest.approx(1e-3, rel=0.2)
+
+    def test_fanout_recorded_in_metrics(self):
+        sh, _ = self._sharded_with_latency()
+        sh.execute_batch([("set", (f"key-{i}", b"v"), {}) for i in range(16)])
+        fanout = sh.metrics.fanout
+        assert fanout.get(2) == 1
+        assert "fanout" in sh.shards[0].metrics.snapshot()
+
+    def test_single_shard_batch_fanout_width_one(self):
+        sh, models = self._sharded_with_latency()
+        sh.execute_batch([("incr", ("{tag}:a",), {}),
+                          ("incr", ("{tag}:b",), {})])
+        assert sh.metrics.fanout == {1: 1}
+        assert sum(m.charges for m in models) == 1
+
+    def test_blocking_inside_transaction_forced_nonblocking(self, kv):
+        """A blocking command inside transaction(fn) must not wait while
+        holding every stripe (it would deadlock its own producers): like
+        Redis scripts, it runs with timeout forced to 0."""
+        t0 = time.monotonic()
+        got = kv.transaction(lambda s: s.blpop("empty", 5))
+        assert got is None
+        assert time.monotonic() - t0 < 1.0
+        assert kv.transaction(lambda s: s.blpop_rpush("e2", "d2", b"x", 5)) is None
+        assert kv.transaction(lambda s: s.bllen("e3", 5)) == 0
+        # and the store still works normally afterwards (tid restored)
+        kv.rpush("q", b"v")
+        assert kv.blpop("q", 1) == ("q", b"v")
+
+
+class TestShardedBatchOrdering:
+    def test_batch_reads_its_own_writes_across_router_commands(self):
+        from repro.core.kvstore import KVStore, ShardedKVStore
+        sh = ShardedKVStore([KVStore(name=f"s{i}") for i in range(3)])
+        res = sh.execute_batch([
+            ("set", ("a", 1), {}),
+            ("set", ("b", 2), {}),
+            ("mget", (["a", "b"],), {}),
+            ("mset", ({"a": 10},), {}),
+            ("get", ("a",), {}),
+        ])
+        assert [v for ok, v in res] == [True, True, [1, 2], 1, 10]
+        assert all(ok for ok, _ in res)

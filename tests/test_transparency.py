@@ -70,6 +70,33 @@ def test_same_code_same_result(app):
     assert app(serverless_mp) == app(stdlib_mp)
 
 
+@pytest.fixture(scope="module")
+def kv_cluster():
+    """A real multi-process sharded serving plane (PR 3): each shard is
+    its own OS process reached over TCP."""
+    from repro.core.kvcluster import KVCluster
+    with KVCluster(shards=2) as cl:
+        yield cl
+
+
+@pytest.mark.parametrize("app", APPS, ids=lambda f: f.__name__)
+def test_same_code_same_result_over_cluster(app, kv_cluster):
+    """THE scaling transparency claim: the identical application code
+    also runs unchanged when the store is a sharded multi-process
+    cluster instead of an in-process KVStore — queues, locks, shared
+    values, and the Pool job queue all hash-route through ClusterClient
+    without the application (or the IPC layer) knowing."""
+    from repro.core import Session, set_session
+    client = kv_cluster.client()
+    try:
+        set_session(Session(store=client))
+        assert app(serverless_mp) == app(stdlib_mp)
+    finally:
+        from repro.core import reset_session
+        reset_session()
+        client.close()
+
+
 def test_pipe_api_parity():
     """send/recv/poll protocol matches stdlib semantics."""
     import multiprocessing as std
