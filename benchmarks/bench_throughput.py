@@ -19,18 +19,28 @@ Three families of rows:
   N client threads flushing scatter/gather pipelines against (a) ONE
   in-process ``KVServer`` (client and server threads share a GIL — the
   seed's ~2.3 GB/s loopback ceiling) and (b) a ``KVCluster`` of M shard
-  *processes* reached through ``ClusterClient``. Run directly for the
-  full matrix and the CI speedup gate::
+  *processes* reached through ``ClusterClient``. Baseline and cluster
+  passes run INTERLEAVED (a-b-a-b, best-of) so a scheduler-noise burst
+  on a shared runner hits both sides instead of skewing the ratio.
 
-      python -m benchmarks.bench_throughput --clients 4 --shards 4
-      python -m benchmarks.bench_throughput --quick --clients 2 \
-          --shards 2 --assert-speedup 1.0
+* ``throughput/mux/*`` — the PR 4 client-transport A/B on the SAME
+  cluster in the SAME run: N threads scattering pipelines through a
+  ``ClusterClient`` with per-thread sockets (``mux=False``, the PR 3
+  transport: N x S frames per burst) vs through the multiplexed I/O
+  engine (one tagged-frame connection per shard, group-commit
+  micro-batching: ~1-2 x S frames per burst). The small-command case is
+  the acceptance gate — it is the regime the per-frame syscall tax lost
+  0.6x in the PR 3 matrix. Run directly for the matrix and the CI gate::
+
+      python -m benchmarks.bench_throughput --clients 4 --shards 2
+      python -m benchmarks.bench_throughput --quick --clients 4 \
+          --shards 2 --assert-speedup 1.1 --assert-cluster-floor 0.5
 """
 
 from __future__ import annotations
 
 import threading
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Tuple
 
 from repro.core import KVClient, KVServer, mp
 from repro.core.kvcluster import KVCluster
@@ -51,6 +61,22 @@ def _best_rate(measure: Callable[[], Tuple[float, float]]
         rate, secs = measure()
         if rate > best[0]:
             best = (rate, secs)
+    return best
+
+
+def _interleaved_best(measures: Dict[str, Callable[[], Tuple[float, float]]],
+                      passes: int = _PASSES) -> Dict[str, Tuple[float, float]]:
+    """Best-of-``passes`` for SEVERAL measurements, interleaved a-b-a-b
+    instead of aa-bb: on noisy shared runners a scheduler burst then
+    degrades every side of a ratio equally instead of landing entirely on
+    whichever side happened to run during it. This is what stopped the
+    CI cluster-smoke tripwire from swinging with runner noise."""
+    best = {k: (0.0, float("inf")) for k in measures}
+    for _ in range(passes):
+        for k, measure in measures.items():
+            rate, secs = measure()
+            if rate > best[k][0]:
+                best[k] = (rate, secs)
     return best
 
 
@@ -204,39 +230,130 @@ def _fanout_ops(store, n_clients: int, rounds: int, batch: int,
     return n_clients * rounds * per_round / t.s, t.s
 
 
+def _matrix_cases(quick: bool) -> List[Tuple[str, bool, int, int]]:
+    return [("cmds", False, 20 if quick else 40, 50 if quick else 100),
+            ("8KB", True, 10 if quick else 12, 30 if quick else 50)]
+
+
 def _cluster_matrix(quick: bool, clients_list: List[int],
                     shards_list: List[int]) -> List[Row]:
     """Two rows (command-rate + payload) per (clients, shards) pair:
     KVCluster aggregate ops/s vs the single in-process KVServer baseline
     (client and server threads sharing one GIL) at the same client
-    count. Best-of-_PASSES to smooth scheduler noise."""
+    count. Baseline and cluster passes interleave (see
+    ``_interleaved_best``) so runner noise cancels out of the ratio."""
     rows: List[Row] = []
-    cases = [("cmds", False, 20 if quick else 40, 50 if quick else 100),
-             ("8KB", True, 10 if quick else 12, 30 if quick else 50)]
+    cases = _matrix_cases(quick)
     for n_clients in clients_list:
-        base: dict = {}
-        with KVServer() as server:  # baseline: 1 process, shared GIL
-            client = KVClient(server.address)
-            for tag, payload, rounds, batch in cases:
-                base[tag], _ = _best_rate(lambda: _fanout_ops(
-                    client, n_clients, rounds, batch, payload))
-            client.close()
         for n_shards in shards_list:
-            with KVCluster(shards=n_shards) as cluster:
+            with KVServer() as server, KVCluster(shards=n_shards) as cluster:
+                client = KVClient(server.address)  # 1 process, shared GIL
                 cc = cluster.client()
                 for tag, payload, rounds, batch in cases:
-                    ops, secs = _best_rate(lambda: _fanout_ops(
-                        cc, n_clients, rounds, batch, payload))
+                    best = _interleaved_best({
+                        "base": lambda: _fanout_ops(
+                            client, n_clients, rounds, batch, payload),
+                        "cluster": lambda: _fanout_ops(
+                            cc, n_clients, rounds, batch, payload),
+                    })
+                    base, _ = best["base"]
+                    ops, secs = best["cluster"]
                     width = max(cc.metrics.fanout, default=1)
                     per_round = batch * (2 if payload else 1)
                     rows.append(row(
                         f"throughput/cluster/{tag}/c{n_clients}xs{n_shards}",
                         secs / (n_clients * rounds * per_round),
                         f"{ops:,.0f} ops/s vs single-server "
-                        f"{base[tag]:,.0f} ops/s = {ops / base[tag]:.2f}x "
+                        f"{base:,.0f} ops/s = {ops / base:.2f}x "
                         f"({n_clients} clients, {n_shards} shard procs, "
                         f"scatter width {width})"))
+                client.close()
                 cc.close()
+    return rows
+
+
+def _singles_ops(store, n_clients: int, n_ops: int) -> Tuple[float, float]:
+    """Aggregate ops/s of ``n_clients`` threads each issuing ``n_ops``
+    SINGLE small commands (no pipeline) — the purest per-frame-tax
+    regime: per-thread sockets pay one frame (send+recv, both ends) per
+    op, while the mux group-commits overlapping singles into merged
+    ``execute_batch`` frames."""
+    errors: List[BaseException] = []
+    store.flushall()
+
+    def worker(ci: int) -> None:
+        try:
+            for j in range(n_ops):
+                store.incr(f"bench:c{ci}:k{j % 16}")
+        except BaseException as exc:  # pragma: no cover - surfaced below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_clients)]
+    with Timer() as t:
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+    if errors:
+        raise errors[0]
+    assert store.get("bench:c0:k0") == n_ops // 16 + (1 if n_ops % 16 else 0)
+    return n_clients * n_ops / t.s, t.s
+
+
+def _mux_matrix(quick: bool, clients_list: List[int],
+                shards_list: List[int]) -> List[Row]:
+    """PR 4 acceptance rows: the SAME cluster driven through per-thread
+    sockets (``mux=False`` — one frame per thread per shard per flush)
+    vs the multiplexed I/O engine (one connection per shard: gather-
+    written frames, corked server responses, burst-drained reads, and
+    group-committed singles), passes interleaved. Three cases per
+    (clients, shards) pair: ``cmds`` (small-command pipelines — the
+    regime the per-frame tax cost PR 3 its 0.6x; its ratio is the CI
+    gate), ``singles`` (unpipelined burst — maximal frame tax), and
+    ``8KB`` (data plane)."""
+    rows: List[Row] = []
+    cases = _matrix_cases(quick)
+    n_singles = 100 if quick else 250
+    for n_clients in clients_list:
+        for n_shards in shards_list:
+            with KVCluster(shards=n_shards) as cluster:
+                per_thread = cluster.client(mux=False)
+                muxed = cluster.client()
+                for tag, payload, rounds, batch in cases:
+                    # one extra pass vs the cluster matrix: this ratio is
+                    # the CI gate, so it gets the most noise suppression
+                    best = _interleaved_best({
+                        "sockets": lambda: _fanout_ops(
+                            per_thread, n_clients, rounds, batch, payload),
+                        "mux": lambda: _fanout_ops(
+                            muxed, n_clients, rounds, batch, payload),
+                    }, passes=_PASSES + 1)
+                    base, _ = best["sockets"]
+                    ops, secs = best["mux"]
+                    per_round = batch * (2 if payload else 1)
+                    rows.append(row(
+                        f"throughput/mux/{tag}/c{n_clients}xs{n_shards}",
+                        secs / (n_clients * rounds * per_round),
+                        f"mux {ops:,.0f} ops/s vs per-thread sockets "
+                        f"{base:,.0f} ops/s = {ops / base:.2f}x "
+                        f"({n_clients} clients, {n_shards} shard procs)"))
+                best = _interleaved_best({
+                    "sockets": lambda: _singles_ops(
+                        per_thread, n_clients, n_singles),
+                    "mux": lambda: _singles_ops(muxed, n_clients, n_singles),
+                }, passes=_PASSES + 1)
+                base, _ = best["sockets"]
+                ops, secs = best["mux"]
+                rows.append(row(
+                    f"throughput/mux/singles/c{n_clients}xs{n_shards}",
+                    secs / (n_clients * n_singles),
+                    f"mux {ops:,.0f} ops/s vs per-thread sockets "
+                    f"{base:,.0f} ops/s = {ops / base:.2f}x "
+                    f"({n_clients} clients, {n_shards} shard procs, "
+                    "unpipelined singles)"))
+                per_thread.close()
+                muxed.close()
     return rows
 
 
@@ -245,9 +362,13 @@ def run(quick: bool = False) -> List[Row]:
     with KVServer() as server:  # no latency model: real loopback transport
         rows.append(_bounded_queue_ops(server, quick))
         rows.append(_payload_mbs(server, quick))
-    rows.extend(_cluster_matrix(quick, clients_list=[2],
-                                shards_list=[2]))
+    rows.extend(_cluster_matrix(quick, clients_list=[2], shards_list=[2]))
+    rows.extend(_mux_matrix(quick, clients_list=[4], shards_list=[2]))
     return rows
+
+
+def _ratio_of(derived: str) -> float:
+    return float(derived.split("= ")[1].split("x")[0])
 
 
 def main(argv: List[str] | None = None) -> int:
@@ -258,23 +379,44 @@ def main(argv: List[str] | None = None) -> int:
     ap.add_argument("--shards", type=int, default=4)
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--assert-speedup", type=float, default=None,
-                    help="fail unless cluster ops/s >= this multiple of "
-                         "the single-process server's (CI gate)")
+                    help="fail unless the mux small-command ops/s >= this "
+                         "multiple of the per-thread-socket transport's on "
+                         "the same cluster (CI gate; conservative floor "
+                         "under the ~1.5x+ the mux holds on idle hardware)")
+    ap.add_argument("--assert-cluster-floor", type=float, default=None,
+                    help="fail unless cluster data-plane ops/s >= this "
+                         "multiple of the single-process server's "
+                         "(catastrophic-regression tripwire)")
     args = ap.parse_args(argv)
-    rows = _cluster_matrix(args.quick, clients_list=[args.clients],
-                           shards_list=[args.shards])
-    speedup = None
+    rows = _mux_matrix(args.quick, clients_list=[args.clients],
+                       shards_list=[args.shards])
+    rows += _cluster_matrix(args.quick, clients_list=[args.clients],
+                            shards_list=[args.shards])
+    mux_speedup = None
+    cluster_speedup = None
     for name, us, derived in rows:
         print(f"{name:44s} {us:10.2f} us/op  {derived}")
-        if "/8KB/" in name and "= " in derived:
-            # the gate reads the data-plane (payload) case: that is the
-            # work a sharded serving plane offloads from the client GIL
-            speedup = float(derived.split("= ")[1].split("x")[0])
+        if "/mux/cmds/" in name and "= " in derived:
+            # the gate reads the small-command case: the per-frame syscall
+            # tax regime the mux exists to collapse
+            mux_speedup = _ratio_of(derived)
+        elif "/cluster/8KB/" in name and "= " in derived:
+            # tripwire reads the data-plane (payload) case: the work a
+            # sharded serving plane offloads from the client GIL
+            cluster_speedup = _ratio_of(derived)
     if args.assert_speedup is not None:
-        assert speedup is not None and speedup >= args.assert_speedup, (
-            f"cluster payload speedup {speedup} < required "
+        assert mux_speedup is not None and mux_speedup >= args.assert_speedup, (
+            f"mux small-command speedup {mux_speedup} < required "
             f"{args.assert_speedup}")
-        print(f"speedup gate OK: {speedup:.2f}x >= {args.assert_speedup}x")
+        print(f"mux speedup gate OK: {mux_speedup:.2f}x >= "
+              f"{args.assert_speedup}x")
+    if args.assert_cluster_floor is not None:
+        assert (cluster_speedup is not None
+                and cluster_speedup >= args.assert_cluster_floor), (
+            f"cluster payload speedup {cluster_speedup} < required "
+            f"{args.assert_cluster_floor}")
+        print(f"cluster floor OK: {cluster_speedup:.2f}x >= "
+              f"{args.assert_cluster_floor}x")
     return 0
 
 

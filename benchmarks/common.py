@@ -61,3 +61,29 @@ class Timer:
 
 def row(name: str, seconds: float, derived: str = "") -> Row:
     return (name, seconds * 1e6, derived)
+
+
+_METRIC_PATTERNS = (
+    # ordered: first match of each unit wins (benches lead with the
+    # measured side, then the baseline)
+    ("ops_s", r"([\d,]+(?:\.\d+)?)\s*ops/s"),
+    ("mb_s", r"([\d,]+(?:\.\d+)?)\s*MB/s"),
+    ("speedup_x", r"=\s*([\d.]+)x"),
+    ("cmds_per_rtt", r"cmds/rtt=([\d.]+)|([\d,]+(?:\.\d+)?)\s*cmds/rtt"),
+)
+
+
+def parse_metrics(us_per_call: float, derived: str) -> dict:
+    """Machine-readable metrics out of a row: the RTT/latency figure is
+    ``us_per_call`` itself; throughput figures (ops/s, MB/s) and A/B
+    speedups are recovered from the human-readable ``derived`` string so
+    every bench keeps printing one line per case while CI gets numbers
+    it can chart across PRs (`benchmarks/run.py --json`)."""
+    import re
+    out = {"rtt_us": us_per_call}
+    for key, pattern in _METRIC_PATTERNS:
+        m = re.search(pattern, derived)
+        if m:
+            value = next(g for g in m.groups() if g is not None)
+            out[key] = float(value.replace(",", ""))
+    return out

@@ -1,14 +1,22 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAMES]
+        [--json OUT.json]
 
 Prints ``name,us_per_call,derived`` CSV (see DESIGN.md §5 for the
-paper-artifact index).
+paper-artifact index). ``--only`` accepts a comma-separated module list
+(e.g. ``--only latency,throughput,sort``) so CI can run one suite per
+job. ``--json`` additionally writes every row machine-readable — name,
+us_per_call (the RTT figure), the derived string, and parsed ops/s,
+MB/s, and speedup numbers — so the perf trajectory can be tracked as a
+per-PR workflow artifact (``BENCH_pr4.json``) instead of living only in
+ROADMAP.md prose.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -28,24 +36,46 @@ MODULES = [
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names (default: all)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write machine-readable results (per-case "
+                         "ops/s, MB/s, RTT) to PATH")
     args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
 
     import importlib
+    from .common import parse_metrics
     failures = 0
+    report: dict = {"schema": 1, "quick": args.quick, "rows": [],
+                    "failures": []}
     print("name,us_per_call,derived")
     for name, modname in MODULES:
-        if args.only and args.only != name:
+        if only is not None and name not in only:
             continue
         try:
             mod = importlib.import_module(modname)
-            for row in mod.run(quick=args.quick):
-                rname, us, derived = row
+            for bench_row in mod.run(quick=args.quick):
+                rname, us, derived = bench_row
                 print(f"{rname},{us:.1f},\"{derived}\"")
                 sys.stdout.flush()
+                report["rows"].append({
+                    "suite": name,
+                    "name": rname,
+                    "us_per_call": round(us, 3),
+                    "derived": derived,
+                    "metrics": parse_metrics(us, derived),
+                })
         except Exception:
             failures += 1
-            print(f"{name},ERROR,\"{traceback.format_exc(limit=3)}\"")
+            tb = traceback.format_exc(limit=3)
+            print(f"{name},ERROR,\"{tb}\"")
+            report["failures"].append({"suite": name, "traceback": tb})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"wrote {len(report['rows'])} rows to {args.json}",
+              file=sys.stderr)
     return 1 if failures else 0
 
 

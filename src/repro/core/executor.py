@@ -317,6 +317,10 @@ class FunctionExecutor:
             fut._reject(RemoteError(body[0], body[1]))
 
     def _collect_queue(self) -> None:
+        # Over the multiplexed TCP transport this blpop rides the client's
+        # dedicated BLOCKING lane: the collector parking here between
+        # results can never head-of-line block the submission threads'
+        # fast commands on the shared main-lane socket (see kvserver).
         while True:
             try:
                 got = self._store.blpop(self._result_list, timeout=0.5)

@@ -23,11 +23,31 @@ that tier:
     ``ShardedKVStore`` (the shared ``_ShardRouter`` mixin), so
     hash-tagged resource keys — every IPC primitive's keys, including
     block-array segment keys — stay co-located on one shard.
-    ``pipeline()`` batches split into one ``execute_batch`` frame per
-    involved shard and flush as a **scatter/gather**: all frames are
-    written before any response is read, so N shards still cost ~one
-    wall-clock round trip. Cross-shard blocking pops fall back to the
-    ``ShardedKVStore`` exponential-backoff sweep.
+    ``pipeline()`` batches split into one ``execute_batch`` submission
+    per involved shard and flush as a **scatter/gather** over each
+    shard's I/O mux: every shard's batch is enqueued before any mux is
+    flushed, then the per-shard futures are gathered — N shards still
+    cost ~one wall-clock round trip. Cross-shard blocking pops fall back
+    to the ``ShardedKVStore`` exponential-backoff sweep.
+
+    v3 cost model (syscalls per N-thread scatter burst against S
+    shards): with the per-thread-socket transport (``mux=False``) every
+    thread writes its own ``execute_batch`` frame per involved shard and
+    reads its own responses — ~4 x N x S syscalls per burst (send + recv
+    on both ends), the per-frame tax that lost 0.6x on small commands in
+    the PR 3 matrix. With the mux, each shard's connection carries every
+    thread's frame: concurrent frames ship in one flat-combined gather
+    write, the server reads them from one buffered recv and CORKS their
+    responses into one write, and one baton-holding waiter drains the
+    whole response burst — ~4 x S syscalls per burst, independent of N.
+    Each thread's batch stays its OWN frame (responses stream back per
+    thread; semantically merging batches across threads was measured and
+    rejected — it couples the threads' latencies into a convoy), while
+    bursts of plain single commands DO group-commit into one merged
+    ``execute_batch`` frame. Shard batches that share one connection
+    (co-resident shards, e.g. duplicate addresses in the descriptor) are
+    merged client-side into a single frame. The pickling work is
+    unchanged — only the frame/syscall count collapses.
 
 ``connect(address)``
     One-address bootstrap: returns a ``ClusterClient`` when the address
@@ -266,14 +286,21 @@ class KVCluster:
                                + (f"\n{tails}" if tails else ""))
 
     def restart_shard(self, index: int) -> Tuple[str, int]:
-        """Respawn shard ``index`` at its previous address (so routing and
-        already-bootstrapped clients stay valid). The shard's partition
-        restarts EMPTY — callers own the data-loss consequences, which is
-        why restart is explicit. Returns the shard's address."""
+        """Respawn shard ``index`` on a FRESH ephemeral OS-assigned port
+        and republish the descriptor. Rebinding the previous fixed port
+        was a race — the dead child's socket can linger (TIME_WAIT, or
+        the OS hands the port to someone else between death and respawn),
+        which made the CI cluster smoke flaky with retry-on-EADDRINUSE
+        noise. Ephemeral binding cannot collide; the cost is that
+        already-bootstrapped clients must re-bootstrap from the control
+        endpoint (which always serves the current descriptor). The
+        shard's partition restarts EMPTY — callers own the data-loss
+        consequences, which is why restart is explicit. Returns the
+        shard's new address."""
         old = self._procs[index]
-        addr = old.address
+        host = old.address[0] if old.address else self.host
         old.terminate()
-        self._procs[index] = _ShardProc(index, addr[0], addr[1])
+        self._procs[index] = _ShardProc(index, host, 0)
         if self._control is not None:
             self._control.store.set(DESCRIPTOR_KEY, self.describe())
         return self._procs[index].address
@@ -299,7 +326,8 @@ class ClusterClient(_ShardRouter):
 
     def __init__(self, address: Optional[Tuple[str, int]] = None,
                  shard_addresses: Optional[Sequence[Tuple[str, int]]] = None,
-                 legacy_protocol: bool = False, hash_seed: int = 0):
+                 legacy_protocol: bool = False, hash_seed: int = 0,
+                 mux: bool = True):
         if shard_addresses is None:
             if address is None:
                 raise ValueError("need a control address or shard addresses")
@@ -318,8 +346,16 @@ class ClusterClient(_ShardRouter):
         if not shard_addresses:
             raise ValueError("need at least one shard address")
         self.hash_seed = hash_seed
-        self.shards = [KVClient(tuple(a), legacy_protocol=legacy_protocol)
-                       for a in shard_addresses]
+        # shards at the same address share ONE KVClient (hence one mux
+        # connection): their scatter sub-batches coalesce into one frame
+        by_addr: Dict[Tuple[str, int], KVClient] = {}
+        self.shards = []
+        for a in shard_addresses:
+            a = tuple(a)
+            if a not in by_addr:
+                by_addr[a] = KVClient(a, legacy_protocol=legacy_protocol,
+                                      mux=mux)
+            self.shards.append(by_addr[a])
         # client-side counters only (server-side metrics live per shard and
         # are readable via info()): fanout records scatter widths, which no
         # single shard can observe
@@ -330,22 +366,77 @@ class ClusterClient(_ShardRouter):
                       ) -> List[Tuple[bool, Any]]:
         """Scatter/gather batch: route commands per shard
         (``_route_batch``, which preserves submission order around
-        multi-key commands), WRITE every shard's ``execute_batch`` frame
-        before READING any response, then drain the per-shard responses.
-        The flushes overlap on the wire and in the shard processes, so N
-        involved shards cost ~one wall-clock round trip instead of N.
+        multi-key commands), ENQUEUE every shard's ``execute_batch`` on
+        its mux, flush each involved connection once, then gather the
+        per-shard futures. The flushes overlap on the wire and in the
+        shard processes, so N involved shards cost ~one wall-clock round
+        trip instead of N; concurrent threads' scatters group-commit into
+        the same per-shard frames, and co-resident shard batches (one
+        connection) coalesce into one frame.
 
         Framing safety under errors matches the single-connection
-        pipeline contract: every successfully scattered frame's response
-        is drained even when another shard fails, so no connection is
-        left holding a pending response to desync the next caller; a
-        connection that fails mid-send or mid-read is closed (it may
-        carry a partial frame), and its threads reconnect on next use."""
+        pipeline contract: every scattered batch's future is awaited even
+        when another shard fails, so no connection is left holding an
+        uncorrelated response; a connection that dies is torn down by its
+        mux (every pending future resolves with the error) and is
+        re-established on next use."""
         return self._route_batch([_debatch(c) for c in commands],
                                  self._scatter_groups)
 
     def _scatter_groups(self, groups, out) -> None:
         self.metrics.record_fanout(len(groups))
+        if not all(self.shards[idx].mux_enabled for idx in groups):
+            return self._scatter_groups_sockets(groups, out)
+        first_err: Optional[BaseException] = None
+        pending = []
+        flushes = []
+        # Phase 1: merge shard groups per CONNECTION (co-resident shards
+        # share a client/mux — their sub-batches become one frame) and
+        # enqueue each connection's batch without flushing yet.
+        by_mux: Dict[int, List[int]] = {}
+        for idx in sorted(groups):
+            by_mux.setdefault(id(self.shards[idx]), []).append(idx)
+        for idxs in by_mux.values():
+            client = self.shards[idxs[0]]
+            numbered = [nc for idx in idxs for nc in groups[idx]]
+            cmds = [c for _, c in numbered]
+            try:
+                fut = client._mux().submit(
+                    "batch", ("execute_batch", (cmds,), {}),
+                    ncmds=len(cmds), flush=False, coalesce=False)
+            except Exception as exc:
+                if first_err is None:
+                    first_err = exc
+                continue
+            flushes.append(fut)
+            pending.append((fut, numbered))
+        # Phase 2: one flush per involved connection (the scatter). The
+        # flush is keyed on that connection's pending: if another
+        # thread's flat-combining leader already shipped our frame, this
+        # returns without ever contending the write lock.
+        for fut in flushes:
+            try:
+                fut.mux.flush(fut)
+            except Exception as exc:  # pragma: no cover - submit raised first
+                if first_err is None:
+                    first_err = exc
+        # Phase 3: gather. Every future is awaited — a shard error never
+        # leaves another shard's response unconsumed.
+        for fut, numbered in pending:
+            ok, value = fut.result()
+            if not ok:
+                if first_err is None:
+                    first_err = value
+                continue
+            for (i, _), res in zip(numbered, value):
+                out[i] = res
+        if first_err is not None:
+            raise first_err
+
+    def _scatter_groups_sockets(self, groups, out) -> None:
+        """PR 3 transport (``mux=False``/legacy): write every shard's
+        frame on this thread's per-shard socket before reading any
+        response, then drain — kept for A/B benchmarking."""
         first_err: Optional[BaseException] = None
         pending = []
         for idx in sorted(groups):
@@ -380,8 +471,11 @@ class ClusterClient(_ShardRouter):
             raise first_err
 
     def close(self) -> None:
+        seen = set()
         for c in self.shards:
-            c.close()
+            if id(c) not in seen:  # co-resident shards share one client
+                seen.add(id(c))
+                c.close()
 
 
 def connect(address: Tuple[str, int],

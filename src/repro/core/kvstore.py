@@ -45,6 +45,17 @@ scales past one lock:
 
 Values are stored as-is (the IPC layer passes serialized ``bytes``, like
 real Redis); byte sizes feed the latency model and the metrics.
+
+Remote (v3 mux) cost model: over the multiplexed TCP transport, an
+N-thread burst of single small commands against one server reaches the
+store as ~1-2 merged ``execute_batch`` frames (group commit) instead of
+N frames — the ``EVAL`` metric counts those merged transactions, while
+the inner per-command metrics still count every command. Blocking
+commands (``_blocks``) never merge: they ride a dedicated blocking-lane
+connection and park server-side on their own thread, so ``blocked_time_s``
+keeps meaning genuine waiter time, not head-of-line stalls. Scatter
+batches from a cluster client stay one frame per (thread, shard) —
+``charge_scatter`` already bills them as one concurrent round trip.
 """
 
 from __future__ import annotations
@@ -1216,6 +1227,23 @@ class KVStore:
 #: blocking command -> index of its positional ``timeout`` argument;
 #: ``execute_batch`` clamps these to 0 (Redis-MULTI non-blocking rule).
 _BLOCKING_TIMEOUT_ARG = {"blpop": 1, "brpop": 1, "bllen": 1, "blpop_rpush": 3}
+
+
+def _blocks(cmd: str, args: tuple, kwargs: dict) -> bool:
+    """True when this request may park server-side: a blocking command
+    whose effective timeout is None (forever) or positive. Both ends of
+    the v3 multiplexed transport classify with this one predicate — the
+    client to route the request onto its blocking lane, the server to
+    dispatch it to a dedicated thread so a parked BLPOP never head-of-line
+    blocks the commands multiplexed behind it on the same socket."""
+    idx = _BLOCKING_TIMEOUT_ARG.get(cmd)
+    if idx is None:
+        return False
+    if len(args) > idx:
+        timeout = args[idx]
+    else:
+        timeout = (kwargs or {}).get("timeout")
+    return timeout is None or timeout > 0
 
 
 def _debatch(command: Tuple[str, tuple, dict]) -> Tuple[str, tuple, dict]:

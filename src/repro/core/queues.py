@@ -28,6 +28,15 @@ payload); ``blpop_rpush`` fuses them so a put+get round trip costs 2 RTTs
 instead of 4 — the difference the paper measures between "comparable to a
 large VM" and per-operation latency death (§6).
 
+Over the multiplexed TCP transport (``kvserver`` v3), the blocking
+operations above (``recv``/``poll``/bounded ``put``/``get`` with a
+nonzero timeout) ride the client's dedicated **blocking lane**
+connection, where the server parks them on their own thread and answers
+out of order; the non-blocking ones share the main-lane socket, where
+concurrent threads' commands group-commit into one frame — so a consumer
+parked in ``Queue.get`` never head-of-line blocks the producers' pushes,
+even though the whole process multiplexes two sockets per server.
+
 All payloads cross the store as serialized bytes (KV latency/metrics see
 true wire sizes); over the TCP transport, large payloads travel as
 zero-copy out-of-band frames (see ``kvserver``).

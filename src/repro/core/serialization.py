@@ -19,6 +19,15 @@ blobs) are emitted as separate zero-copy buffers instead of being copied
 into the pickle stream. The transport (``kvserver``) sends each buffer
 as its own scatter-gather frame part, so a 1 MB payload crosses the wire
 without a single sender-side copy.
+
+``FRAME_TAG`` is the request-id tag of the v3 multiplexed wire dialect:
+a fixed-width unsigned word prepended to a frame's part-length vector.
+Many client threads share ONE socket per server; the tag is what lets
+the server answer out of order (a parked BLPOP must not head-of-line
+block the commands behind it) and lets the client-side I/O mux correlate
+each response with the submitting thread's future. It lives here, next
+to the payload encoding, because it is the one piece of framing state
+that both ends must agree on byte-for-byte.
 """
 
 from __future__ import annotations
@@ -27,11 +36,19 @@ import importlib
 import io
 import marshal
 import pickle
+import struct
 import types
 from typing import Any, Dict, List, Optional, Set, Tuple
 
 __all__ = ["dumps", "loads", "dumps_oob", "loads_oob", "payload_size",
-           "OOB_THRESHOLD"]
+           "OOB_THRESHOLD", "FRAME_TAG", "MAX_FRAME_TAG"]
+
+#: v3 frame tag: one network-order u32 request id per tagged frame. Ids
+#: are per-connection and wrap at 2**32 — a connection never has 4
+#: billion requests in flight, so a wrapped id can't collide with a live
+#: one.
+FRAME_TAG = struct.Struct("!I")
+MAX_FRAME_TAG = 1 << 32
 
 #: Payloads at least this large go out-of-band when a buffer callback is
 #: active. Below it, the header/descriptor overhead outweighs the copy.

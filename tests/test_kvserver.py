@@ -336,7 +336,9 @@ class TestConcurrentClients:
         assert server.store.get("b") == n_clients * n_rounds
 
     def test_dead_thread_sockets_pruned(self, server):
-        c = KVClient(server.address)
+        # mux=False: the per-thread socket registry is the PR 3 transport,
+        # kept for A/B benchmarking — this test covers its pruning.
+        c = KVClient(server.address, mux=False)
         for wave in range(5):
             threads = [threading.Thread(target=lambda: c.incr("n"))
                        for _ in range(4)]
@@ -349,7 +351,7 @@ class TestConcurrentClients:
         assert c._socks == {}
 
     def test_close_idempotent_under_concurrent_callers(self, server):
-        c = KVClient(server.address)
+        c = KVClient(server.address, mux=False)
         c.incr("n")
         threads = [threading.Thread(target=c.close) for _ in range(8)]
         [t.start() for t in threads]
@@ -393,6 +395,285 @@ class TestBufferPool:
             c.set(f"pk{i}", blob)
         got = [c.get(f"pk{i}") for i in range(16)]
         assert [bytes(g) for g in got] == blobs
+        c.close()
+
+
+class TestMux:
+    """PR 4: the multiplexed client I/O engine — one v3 tagged-frame
+    connection per server shared by every thread, a dedicated blocking
+    lane, group-commit micro-batching, and futures that can never hang."""
+
+    def test_out_of_order_correlation_under_8_threads(self, server):
+        """8 threads hammer ONE client (one shared main-lane socket) with
+        distinct keys; every response must land on the thread that asked
+        — a single mis-correlated tag would show up as a wrong value."""
+        c = KVClient(server.address)
+        n_threads, n_ops = 8, 60
+        errors = []
+
+        def run(ti):
+            try:
+                for j in range(n_ops):
+                    assert c.incr(f"mux:{ti}") == j + 1
+                    c.set(f"mux:val:{ti}", f"{ti}:{j}".encode())
+                    assert c.get(f"mux:val:{ti}") == f"{ti}:{j}".encode()
+            except Exception as exc:  # pragma: no cover - failure detail
+                errors.append((ti, exc))
+
+        threads = [threading.Thread(target=run, args=(i,))
+                   for i in range(n_threads)]
+        [t.start() for t in threads]
+        [t.join(60) for t in threads]
+        assert errors == []
+        for i in range(n_threads):
+            assert server.store.get(f"mux:{i}") == n_ops
+        # all of that shared ONE main-lane connection
+        assert set(c._muxes) == {"main"}
+        c.close()
+
+    def test_out_of_order_responses_on_blocking_lane(self, server):
+        """Two blpops parked on one blocking-lane socket: the SECOND
+        submitted is answered FIRST — only tag correlation (not arrival
+        order) can route the responses to the right futures."""
+        c = KVClient(server.address)
+        out = {}
+        t1 = threading.Thread(target=lambda: out.setdefault(
+            "first", c.blpop("ooo:q1", 10)))
+        t1.start()
+        time.sleep(0.1)
+        t2 = threading.Thread(target=lambda: out.setdefault(
+            "second", c.blpop("ooo:q2", 10)))
+        t2.start()
+        time.sleep(0.1)
+        server.store.rpush("ooo:q2", b"b")   # wakes the later request
+        t2.join(5)
+        assert out.get("second") == ("ooo:q2", b"b")
+        assert "first" not in out            # still parked, not corrupted
+        server.store.rpush("ooo:q1", b"a")
+        t1.join(5)
+        assert out.get("first") == ("ooo:q1", b"a")
+        assert len(c._muxes) <= 2  # one main + one blocking lane, at most
+        c.close()
+
+    def test_blocking_lane_isolation(self, server):
+        """A parked blpop must not stall the shared main-lane socket:
+        fast commands issued while it waits complete well before it."""
+        c = KVClient(server.address)
+        parked = []
+        t = threading.Thread(target=lambda: parked.append(
+            c.blpop("iso:q", 4)))
+        t.start()
+        time.sleep(0.1)
+        t0 = time.perf_counter()
+        for i in range(50):
+            c.incr("iso:fast")
+        elapsed = time.perf_counter() - t0
+        assert c.get("iso:fast") == 50
+        assert elapsed < 2.0, (
+            f"fast commands took {elapsed:.1f}s behind a parked blpop")
+        server.store.rpush("iso:q", b"done")
+        t.join(5)
+        assert parked == [("iso:q", b"done")]
+        c.close()
+
+    def test_group_commit_merges_queued_submissions(self, server):
+        """Submissions enqueued before one flush coalesce into a single
+        execute_batch frame: the server sees ONE transaction (EVAL),
+        and every future resolves with its own result."""
+        c = KVClient(server.address)
+        c.incr("warm")                    # establish the main-lane mux
+        m = c._mux()
+        before = server.store.metrics.commands.get("EVAL", 0)
+        futs = [m.submit("single", ("incr", (f"gc:{i}",), {}), flush=False)
+                for i in range(10)]
+        m.flush()
+        assert [f.result() for f in futs] == [(True, 1)] * 10
+        assert server.store.metrics.commands.get("EVAL", 0) - before == 1
+        c.close()
+
+    def test_merged_error_mid_batch_never_desyncs(self, server):
+        """A WRONGTYPE inside a merged group-commit frame fails exactly
+        the guilty future; every other future resolves, and the tagged
+        framing stays usable for follow-up traffic."""
+        c = KVClient(server.address)
+        c.set("mex:str", b"v")
+        m = c._mux()
+        good1 = m.submit("single", ("incr", ("mex:n",), {}), flush=False)
+        bad = m.submit("single", ("rpush", ("mex:str", b"x"), {}),
+                       flush=False)
+        good2 = m.submit("single", ("incr", ("mex:n",), {}), flush=False)
+        m.flush()
+        assert good1.result() == (True, 1)
+        ok, exc = bad.result()
+        assert not ok and isinstance(exc, TypeError)
+        assert good2.result() == (True, 2)
+        # connection still in sync: plain calls keep working
+        assert c.incr("mex:n") == 3
+        assert c.get("mex:str") == b"v"
+        c.close()
+
+    def test_concurrent_pipeline_error_storm_stays_in_sync(self, server):
+        """8 threads flushing pipelines where a third of the commands
+        error: every thread sees its own errors in its own batch, and
+        the shared socket never desyncs."""
+        from repro.core.kvstore import PipelineError
+        c = KVClient(server.address)
+        c.set("storm:bad", b"not-a-list")
+        errors = []
+
+        def run(ti):
+            try:
+                for r in range(10):
+                    p = c.pipeline()
+                    p.incr(f"storm:{ti}")
+                    p.rpush("storm:bad", b"x")   # always WRONGTYPE
+                    p.incr(f"storm:{ti}")
+                    with pytest.raises(PipelineError) as ei:
+                        p.execute()
+                    assert ei.value.index == 1
+            except Exception as exc:  # pragma: no cover - failure detail
+                errors.append((ti, exc))
+
+        threads = [threading.Thread(target=run, args=(i,)) for i in range(8)]
+        [t.start() for t in threads]
+        [t.join(60) for t in threads]
+        assert errors == []
+        for i in range(8):
+            assert server.store.get(f"storm:{i}") == 20
+        assert c.get("storm:bad") == b"not-a-list"
+        c.close()
+
+    def test_shutdown_reclaims_parked_futures(self, server):
+        """close() while a blpop is parked: the waiter gets a prompt
+        ConnectionError — no future is left hanging on a dead socket —
+        and the client transparently reconnects afterwards."""
+        c = KVClient(server.address)
+        got = []
+
+        def park():
+            try:
+                got.append(c.blpop("reclaim:q", 30))
+            except ConnectionError:
+                got.append("connection-error")
+
+        t = threading.Thread(target=park)
+        t.start()
+        time.sleep(0.2)
+        t0 = time.perf_counter()
+        c.close()
+        t.join(5)
+        assert got == ["connection-error"]
+        assert time.perf_counter() - t0 < 3.0
+        assert c.incr("reclaim:n") == 1   # fresh mux on next use
+        c.close()
+
+    def test_queued_submissions_fail_when_connection_dies(self, server):
+        """Unflushed submissions on a killed mux resolve with the error
+        instead of waiting for a flush that can never happen."""
+        c = KVClient(server.address)
+        c.incr("warm")
+        m = c._mux()
+        fut = m.submit("single", ("incr", ("dead:n",), {}), flush=False)
+        m.close()
+        ok, exc = fut.result()
+        assert not ok and isinstance(exc, ConnectionError)
+        with pytest.raises(ConnectionError):
+            m.submit("single", ("incr", ("dead:n",), {}))
+        c.close()
+
+    def test_nontransactional_pipeline_routes_blocking_ops(self, server):
+        """A non-transactional pipeline mixing fast commands with a
+        genuinely blocking pop: the pop parks on the blocking lane and is
+        woken by the pipeline's own rpush riding the main lane."""
+        c = KVClient(server.address)
+        p = c.pipeline(transactional=False)
+        fast = p.incr("lane:n")
+        popped = p.blpop("lane:q", 10)    # blocking: rides the block lane
+        p.rpush("lane:q", b"wake")        # lands on the main lane
+        p.execute()
+        assert fast.get() == 1
+        assert popped.get() == ("lane:q", b"wake")
+        c.close()
+
+    def test_chunk_flush_keys_on_last_pending(self, server):
+        """The interleaving that used to hang a non-transactional
+        pipeline: a concurrent thread's flush ships the chunk's FIRST
+        pending, then more commands enqueue. Flushing keyed on the LAST
+        pending must ship the stragglers (keyed on the first, they were
+        stranded unsent forever)."""
+        c = KVClient(server.address)
+        c.incr("warm")
+        m = c._mux()
+        p1 = m.submit("single", ("incr", ("lastkey:a",), {}), flush=False)
+        m.flush()   # stand-in for another thread's traffic: ships p1
+        assert p1.sent
+        p2 = m.submit("single", ("incr", ("lastkey:b",), {}), flush=False)
+        m.flush(p2)  # what the fixed chunk drain does: key on the LAST
+        assert p1.result() == (True, 1)
+        assert p2.result() == (True, 1)
+        c.close()
+
+    def test_encode_failure_fails_only_guilty_pending(self, server):
+        """An unpicklable argument must fail ITS future with the pickle
+        error — without killing the connection, stranding co-batched
+        futures, or losing the reader baton."""
+        class Boom:
+            def __reduce__(self):
+                raise RuntimeError("unpicklable on purpose")
+
+        c = KVClient(server.address)
+        c.incr("warm")
+        m = c._mux()
+        # solo bad submission: nominated as reader, then resolved by the
+        # encode failure — the baton must be released, not die with it
+        ok, exc = m.submit("single", ("set", ("ek", Boom()), {})).result()
+        assert not ok and isinstance(exc, RuntimeError)
+        assert m.alive
+        # connection (and baton) still fully usable
+        assert c.incr("ek:n") == 1
+        # co-batched: good + bad + good in one flush — every future
+        # resolves, nothing hangs
+        g1 = m.submit("single", ("incr", ("ek:g",), {}), flush=False)
+        bad = m.submit("single", ("set", ("ek", Boom()), {}), flush=False)
+        g2 = m.submit("single", ("incr", ("ek:g",), {}), flush=False)
+        m.flush(g2)
+        results = [g1.result(), bad.result(), g2.result()]
+        assert all(r is not None for r in results)
+        assert not results[1][0]
+        # the goods may have shared the bad's merged frame (then they
+        # fail with it and the key is untouched) or ridden their own
+        assert c.get("ek:g") in (None, 1, 2)
+        assert c.incr("ek:after") == 1
+        c.close()
+
+    def test_blocking_workers_are_reused(self, server):
+        """Steady-state blocking polls (the executor-collector pattern)
+        must reuse the server's parked-command worker instead of
+        spawning one thread per request."""
+        import threading as _threading
+        c = KVClient(server.address)
+        for _ in range(5):
+            assert c.blpop("bw:never", 0.01) is None
+        before = _threading.active_count()
+        for _ in range(20):
+            assert c.blpop("bw:never", 0.01) is None
+        after = _threading.active_count()
+        # 20 blocking requests must not have minted ~20 threads
+        assert after - before <= 2, (before, after)
+        c.close()
+
+    def test_fork_inherited_mux_not_shared(self, server):
+        """A mux created before a fork must not be reused in the child:
+        the pid guard forces a fresh connection (shared fds would
+        interleave two processes' tags on one socket)."""
+        import os
+        c = KVClient(server.address)
+        c.incr("fork:n")
+        m = c._mux()
+        m.pid = os.getpid() + 1   # simulate: created by another process
+        m2 = c._mux()
+        assert m2 is not m and m2.pid == os.getpid()
+        assert c.incr("fork:n") == 2
         c.close()
 
 
