@@ -30,11 +30,19 @@ Three families of rows:
   engine (one tagged-frame connection per shard, group-commit
   micro-batching: ~1-2 x S frames per burst). The small-command case is
   the acceptance gate — it is the regime the per-frame syscall tax lost
-  0.6x in the PR 3 matrix. Run directly for the matrix and the CI gate::
+  0.6x in the PR 3 matrix.
+
+* ``throughput/raw/*`` — the PR 5 wire-dialect A/B on the SAME cluster:
+  the muxed transport speaking the pure pickle v3 dialect (``raw=False``)
+  vs the v4 zero-pickle raw codec (struct-packed commands encoded at
+  submit, dispatch-table execution server-side, raw small replies). The
+  small-command pipeline case is the regime the codec exists for — after
+  PR 4 collapsed the syscalls, per-op CPU was the pickle on both ends of
+  the client GIL. Run directly for the matrices and the CI gates::
 
       python -m benchmarks.bench_throughput --clients 4 --shards 2
       python -m benchmarks.bench_throughput --quick --clients 4 \
-          --shards 2 --assert-speedup 1.1 --assert-cluster-floor 0.5
+          --shards 2 --only cmds --assert-speedup 1.1 --assert-raw-floor 0.8
 """
 
 from __future__ import annotations
@@ -230,20 +238,28 @@ def _fanout_ops(store, n_clients: int, rounds: int, batch: int,
     return n_clients * rounds * per_round / t.s, t.s
 
 
-def _matrix_cases(quick: bool) -> List[Tuple[str, bool, int, int]]:
-    return [("cmds", False, 20 if quick else 40, 50 if quick else 100),
-            ("8KB", True, 10 if quick else 12, 30 if quick else 50)]
+def _matrix_cases(quick: bool,
+                  only: "List[str] | None" = None
+                  ) -> List[Tuple[str, bool, int, int]]:
+    cases = [("cmds", False, 20 if quick else 40, 50 if quick else 100),
+             ("8KB", True, 10 if quick else 12, 30 if quick else 50)]
+    if only is not None:
+        cases = [c for c in cases if c[0] in only]
+    return cases
 
 
 def _cluster_matrix(quick: bool, clients_list: List[int],
-                    shards_list: List[int]) -> List[Row]:
+                    shards_list: List[int],
+                    only: "List[str] | None" = None) -> List[Row]:
     """Two rows (command-rate + payload) per (clients, shards) pair:
     KVCluster aggregate ops/s vs the single in-process KVServer baseline
     (client and server threads sharing one GIL) at the same client
     count. Baseline and cluster passes interleave (see
     ``_interleaved_best``) so runner noise cancels out of the ratio."""
     rows: List[Row] = []
-    cases = _matrix_cases(quick)
+    cases = _matrix_cases(quick, only)
+    if not cases:
+        return rows
     for n_clients in clients_list:
         for n_shards in shards_list:
             with KVServer() as server, KVCluster(shards=n_shards) as cluster:
@@ -302,7 +318,8 @@ def _singles_ops(store, n_clients: int, n_ops: int) -> Tuple[float, float]:
 
 
 def _mux_matrix(quick: bool, clients_list: List[int],
-                shards_list: List[int]) -> List[Row]:
+                shards_list: List[int],
+                only: "List[str] | None" = None) -> List[Row]:
     """PR 4 acceptance rows: the SAME cluster driven through per-thread
     sockets (``mux=False`` — one frame per thread per shard per flush)
     vs the multiplexed I/O engine (one connection per shard: gather-
@@ -313,7 +330,10 @@ def _mux_matrix(quick: bool, clients_list: List[int],
     gate), ``singles`` (unpipelined burst — maximal frame tax), and
     ``8KB`` (data plane)."""
     rows: List[Row] = []
-    cases = _matrix_cases(quick)
+    cases = _matrix_cases(quick, only)
+    singles = only is None or "singles" in only
+    if not cases and not singles:
+        return rows
     n_singles = 100 if quick else 250
     for n_clients in clients_list:
         for n_shards in shards_list:
@@ -338,22 +358,89 @@ def _mux_matrix(quick: bool, clients_list: List[int],
                         f"mux {ops:,.0f} ops/s vs per-thread sockets "
                         f"{base:,.0f} ops/s = {ops / base:.2f}x "
                         f"({n_clients} clients, {n_shards} shard procs)"))
-                best = _interleaved_best({
-                    "sockets": lambda: _singles_ops(
-                        per_thread, n_clients, n_singles),
-                    "mux": lambda: _singles_ops(muxed, n_clients, n_singles),
-                }, passes=_PASSES + 1)
-                base, _ = best["sockets"]
-                ops, secs = best["mux"]
-                rows.append(row(
-                    f"throughput/mux/singles/c{n_clients}xs{n_shards}",
-                    secs / (n_clients * n_singles),
-                    f"mux {ops:,.0f} ops/s vs per-thread sockets "
-                    f"{base:,.0f} ops/s = {ops / base:.2f}x "
-                    f"({n_clients} clients, {n_shards} shard procs, "
-                    "unpipelined singles)"))
+                if singles:
+                    best = _interleaved_best({
+                        "sockets": lambda: _singles_ops(
+                            per_thread, n_clients, n_singles),
+                        "mux": lambda: _singles_ops(
+                            muxed, n_clients, n_singles),
+                    }, passes=_PASSES + 1)
+                    base, _ = best["sockets"]
+                    ops, secs = best["mux"]
+                    rows.append(row(
+                        f"throughput/mux/singles/c{n_clients}xs{n_shards}",
+                        secs / (n_clients * n_singles),
+                        f"mux {ops:,.0f} ops/s vs per-thread sockets "
+                        f"{base:,.0f} ops/s = {ops / base:.2f}x "
+                        f"({n_clients} clients, {n_shards} shard procs, "
+                        "unpipelined singles)"))
                 per_thread.close()
                 muxed.close()
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Raw-codec dialect A/B (PR 5): zero-pickle v4 vs pickle v3 on one cluster
+# ---------------------------------------------------------------------------
+
+
+def _raw_matrix(quick: bool, clients_list: List[int],
+                shards_list: List[int],
+                only: "List[str] | None" = None) -> List[Row]:
+    """PR 5 acceptance rows: the SAME cluster, the SAME mux transport,
+    speaking pickle v3 (``raw=False``) vs the v4 raw codec — so the
+    ratio isolates the wire dialect (per-command struct codec + server
+    dispatch table vs Pickler/Unpickler on both ends), with passes
+    interleaved for noise cancellation. ``cmds`` (small-command
+    pipelines — the client-GIL pickling regime the codec targets, and
+    the CI gate) plus ``singles`` (group-committed raw merges) and
+    ``8KB`` (payloads ride the unchanged OOB pickle path in BOTH modes
+    — a sanity row, not a speedup claim)."""
+    rows: List[Row] = []
+    cases = _matrix_cases(quick, only)
+    singles = only is None or "singles" in only
+    if not cases and not singles:
+        return rows
+    n_singles = 100 if quick else 250
+    for n_clients in clients_list:
+        for n_shards in shards_list:
+            with KVCluster(shards=n_shards) as cluster:
+                pickle_c = cluster.client(raw=False)
+                raw_c = cluster.client()
+                for tag, payload, rounds, batch in cases:
+                    best = _interleaved_best({
+                        "pickle": lambda: _fanout_ops(
+                            pickle_c, n_clients, rounds, batch, payload),
+                        "raw": lambda: _fanout_ops(
+                            raw_c, n_clients, rounds, batch, payload),
+                    }, passes=_PASSES + 1)
+                    base, _ = best["pickle"]
+                    ops, secs = best["raw"]
+                    per_round = batch * (2 if payload else 1)
+                    rows.append(row(
+                        f"throughput/raw/{tag}/c{n_clients}xs{n_shards}",
+                        secs / (n_clients * rounds * per_round),
+                        f"raw {ops:,.0f} ops/s vs pickle {base:,.0f} "
+                        f"ops/s = {ops / base:.2f}x "
+                        f"({n_clients} clients, {n_shards} shard procs)"))
+                if singles:
+                    best = _interleaved_best({
+                        "pickle": lambda: _singles_ops(
+                            pickle_c, n_clients, n_singles),
+                        "raw": lambda: _singles_ops(
+                            raw_c, n_clients, n_singles),
+                    }, passes=_PASSES + 1)
+                    base, _ = best["pickle"]
+                    ops, secs = best["raw"]
+                    rows.append(row(
+                        f"throughput/raw/singles/c{n_clients}xs{n_shards}",
+                        secs / (n_clients * n_singles),
+                        f"raw {ops:,.0f} ops/s vs pickle {base:,.0f} "
+                        f"ops/s = {ops / base:.2f}x "
+                        f"({n_clients} clients, {n_shards} shard procs, "
+                        "unpipelined singles)"))
+                pickle_c.close()
+                raw_c.close()
     return rows
 
 
@@ -364,6 +451,8 @@ def run(quick: bool = False) -> List[Row]:
         rows.append(_payload_mbs(server, quick))
     rows.extend(_cluster_matrix(quick, clients_list=[2], shards_list=[2]))
     rows.extend(_mux_matrix(quick, clients_list=[4], shards_list=[2]))
+    rows.extend(_raw_matrix(quick, clients_list=[4], shards_list=[2],
+                            only=["cmds", "singles"]))
     return rows
 
 
@@ -378,6 +467,10 @@ def main(argv: List[str] | None = None) -> int:
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--shards", type=int, default=4)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated case tags (cmds,8KB,singles) — "
+                         "e.g. --only cmds runs just the small-command "
+                         "pipeline rows across every matrix")
     ap.add_argument("--assert-speedup", type=float, default=None,
                     help="fail unless the mux small-command ops/s >= this "
                          "multiple of the per-thread-socket transport's on "
@@ -387,13 +480,23 @@ def main(argv: List[str] | None = None) -> int:
                     help="fail unless cluster data-plane ops/s >= this "
                          "multiple of the single-process server's "
                          "(catastrophic-regression tripwire)")
+    ap.add_argument("--assert-raw-floor", type=float, default=None,
+                    help="fail unless raw-v4 small-command ops/s >= this "
+                         "multiple of pickle-v3's on the same cluster "
+                         "(catastrophic-regression floor, NOT the ~1.2x+ "
+                         "claim — quick-mode ratios swing with runner "
+                         "noise)")
     args = ap.parse_args(argv)
-    rows = _mux_matrix(args.quick, clients_list=[args.clients],
-                       shards_list=[args.shards])
+    only = args.only.split(",") if args.only else None
+    rows = _raw_matrix(args.quick, clients_list=[args.clients],
+                       shards_list=[args.shards], only=only)
+    rows += _mux_matrix(args.quick, clients_list=[args.clients],
+                        shards_list=[args.shards], only=only)
     rows += _cluster_matrix(args.quick, clients_list=[args.clients],
-                            shards_list=[args.shards])
+                            shards_list=[args.shards], only=only)
     mux_speedup = None
     cluster_speedup = None
+    raw_speedup = None
     for name, us, derived in rows:
         print(f"{name:44s} {us:10.2f} us/op  {derived}")
         if "/mux/cmds/" in name and "= " in derived:
@@ -404,6 +507,10 @@ def main(argv: List[str] | None = None) -> int:
             # tripwire reads the data-plane (payload) case: the work a
             # sharded serving plane offloads from the client GIL
             cluster_speedup = _ratio_of(derived)
+        elif "/raw/cmds/" in name and "= " in derived:
+            # the raw gate reads the small-command pipeline case: the
+            # per-command pickle CPU regime the v4 codec exists to remove
+            raw_speedup = _ratio_of(derived)
     if args.assert_speedup is not None:
         assert mux_speedup is not None and mux_speedup >= args.assert_speedup, (
             f"mux small-command speedup {mux_speedup} < required "
@@ -417,6 +524,12 @@ def main(argv: List[str] | None = None) -> int:
             f"{args.assert_cluster_floor}")
         print(f"cluster floor OK: {cluster_speedup:.2f}x >= "
               f"{args.assert_cluster_floor}x")
+    if args.assert_raw_floor is not None:
+        assert raw_speedup is not None and raw_speedup >= args.assert_raw_floor, (
+            f"raw-vs-pickle small-command speedup {raw_speedup} < required "
+            f"{args.assert_raw_floor}")
+        print(f"raw dialect floor OK: {raw_speedup:.2f}x >= "
+              f"{args.assert_raw_floor}x")
     return 0
 
 

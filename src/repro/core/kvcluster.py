@@ -46,8 +46,19 @@ that tier:
     bursts of plain single commands DO group-commit into one merged
     ``execute_batch`` frame. Shard batches that share one connection
     (co-resident shards, e.g. duplicate addresses in the descriptor) are
-    merged client-side into a single frame. The pickling work is
-    unchanged — only the frame/syscall count collapses.
+    merged client-side into a single frame.
+
+    v4 raw dialect (PR 5): scatter sub-batches whose commands sit in the
+    hot vocabulary are struct-packed per entry AT SUBMIT
+    (``serialization.encode_command``) — the per-shard frame is a byte
+    concatenation of pre-encoded entries, the shard decodes it into a
+    dispatch-table indexed batch without unpickling, and small replies
+    come back through the same codec — so after PR 4 collapsed the
+    frame/syscall count, the remaining per-command pickle CPU on the
+    client GIL collapses too. Commands or replies outside the
+    vocabulary (large OOB values, the long command tail) fall back to
+    pickle per command on the same connection; ``raw=False`` keeps the
+    pure pickle dialect for A/B.
 
 ``connect(address)``
     One-address bootstrap: returns a ``ClusterClient`` when the address
@@ -327,7 +338,7 @@ class ClusterClient(_ShardRouter):
     def __init__(self, address: Optional[Tuple[str, int]] = None,
                  shard_addresses: Optional[Sequence[Tuple[str, int]]] = None,
                  legacy_protocol: bool = False, hash_seed: int = 0,
-                 mux: bool = True):
+                 mux: bool = True, raw: bool = True):
         if shard_addresses is None:
             if address is None:
                 raise ValueError("need a control address or shard addresses")
@@ -354,7 +365,7 @@ class ClusterClient(_ShardRouter):
             a = tuple(a)
             if a not in by_addr:
                 by_addr[a] = KVClient(a, legacy_protocol=legacy_protocol,
-                                      mux=mux)
+                                      mux=mux, raw=raw)
             self.shards.append(by_addr[a])
         # client-side counters only (server-side metrics live per shard and
         # are readable via info()): fanout records scatter widths, which no

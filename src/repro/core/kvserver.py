@@ -7,12 +7,22 @@ framed protocol served by a thread-per-connection server over a shared
 atomicity — plus a client exposing the same method surface, so every IPC
 primitive runs unchanged against a genuinely remote store.
 
-Wire format (version 3: multiplexed tagged frames; v2 multi-part
-zero-copy and v1 legacy kept for interop)::
+Wire format (version 4: zero-pickle raw command frames; v3 multiplexed
+tagged frames, v2 multi-part zero-copy, and v1 legacy kept for interop)::
 
     frame    := u32 word, rest
+    word bit29 (with MSB) set -> RAW (v4): the frame's single part is a
+                      struct-packed binary command/reply body
+                      (``serialization.encode_command``/``encode_reply``
+                      — type-tagged scalars, u8 dispatch id), NOT a
+                      pickle. Composes with bit30: a tagged raw frame
+                      carries a request id like v3. Requests outside the
+                      raw vocabulary fall back per command to the
+                      pickle dialects below; replies to raw requests
+                      fall back per reply (exceptions, OOB-sized
+                      values), each frame self-describing via its flags.
     word MSB set, bit30 set -> tagged multi-part (v3):
-                      nparts = word & 0x3FFFFFFF, then a u32 request id,
+                      nparts = word & 0x1FFFFFFF, then a u32 request id,
                       then nparts x u32 part lengths, then the parts.
                       Responses carry the request id of the request they
                       answer and may arrive OUT OF ORDER: the server
@@ -21,7 +31,7 @@ zero-copy and v1 legacy kept for interop)::
                       many client threads multiplex one connection
                       without head-of-line blocking.
     word MSB set, bit30 clear -> multi-part (v2): nparts = word &
-                      0x3FFFFFFF, then nparts x u32 part lengths, then
+                      0x1FFFFFFF, then nparts x u32 part lengths, then
                       the parts. part[0] = pickle-5 payload (out-of-band
                       descriptors), part[1:] = raw buffers (numpy
                       arrays, large bytes) referenced by the payload —
@@ -32,6 +42,15 @@ zero-copy and v1 legacy kept for interop)::
 
     request  := (cmd: str, args: tuple, kwargs: dict)
     response := (ok: bool, value_or_exception)
+
+v4 per-command cost model: a raw small command costs a u8 dispatch-table
+index + a few fixed-width struct reads on the server (no ``getattr``, no
+Unpickler) and a type-tag append loop on the client (no Pickler, no
+memo), executed at submit time so the mux's flush lock only ever
+concatenates ready-made buffers. Pickle remains the capability dialect:
+anything the codec does not cover — including every >= 4 KiB value,
+which keeps the pickle-5 out-of-band zero-copy path — transparently
+ships as v2/v3 frames on the same connection.
 
 Frames are written with scatter-gather ``sendmsg`` (header + payload +
 buffers in one syscall, no concatenation copy) and read with ``recv_into``
@@ -122,6 +141,8 @@ __all__ = ["KVServer", "KVClient"]
 _HDR = struct.Struct("!I")
 _MULTI = 0x80000000
 _TAGGED = 0x40000000        # v3: a request-id tag follows the header word
+_RAW = 0x20000000           # v4: part[0] is a raw-codec body, not pickle
+_FLAGS = _MULTI | _TAGGED | _RAW
 _RID = serialization.FRAME_TAG
 _MAX_PARTS = 1 << 20        # sanity bound on frame part count
 _IOV_CHUNK = 64             # buffers per sendmsg call (stay under IOV_MAX)
@@ -188,14 +209,18 @@ def _sendv(sock: socket.socket, buffers: Sequence[Any]) -> None:
                 sent = 0
 
 
-def _frame_parts(parts: Sequence[Any], rid: Optional[int] = None) -> List[Any]:
+def _frame_parts(parts: Sequence[Any], rid: Optional[int] = None,
+                 raw: bool = False) -> List[Any]:
     """Header + parts, ready for one `_sendv` gather write. ``rid`` tags
     the frame with a request id (v3 multiplexed dialect); None emits an
-    untagged v2 frame."""
-    if rid is None:
-        hdr = bytearray(_HDR.pack(_MULTI | len(parts)))
-    else:
-        hdr = bytearray(_HDR.pack(_MULTI | _TAGGED | len(parts)))
+    untagged v2 frame. ``raw`` flags part[0] as a v4 raw-codec body."""
+    word = _MULTI | len(parts)
+    if rid is not None:
+        word |= _TAGGED
+    if raw:
+        word |= _RAW
+    hdr = bytearray(_HDR.pack(word))
+    if rid is not None:
         hdr += _RID.pack(rid)
     for p in parts:
         n = memoryview(p).nbytes
@@ -208,13 +233,34 @@ def _frame_parts(parts: Sequence[Any], rid: Optional[int] = None) -> List[Any]:
     return [hdr, *parts]
 
 
-def _send_frames(sock: socket.socket, parts: Sequence[Any],
-                 rid: Optional[int] = None) -> None:
-    _sendv(sock, _frame_parts(parts, rid))
-
-
 def _encode_frames(obj: Any, rid: Optional[int] = None) -> List[Any]:
     payload, buffers = serialization.dumps_oob(obj)
+    return _frame_parts([payload, *buffers], rid)
+
+
+def _encode_request_frames(request: Tuple[str, tuple, dict],
+                           rid: Optional[int] = None,
+                           raw: bool = True) -> List[Any]:
+    """Request frame: the raw v4 body when the command is in the hot
+    vocabulary, else the pickle (v2/v3) dialect — per-command fallback."""
+    if raw:
+        body = serialization.encode_command(*request)
+        if body is not None:
+            return _frame_parts([body], rid, raw=True)
+    return _encode_frames(request, rid)
+
+
+def _encode_reply_frames(resp: Tuple[bool, Any], rid: Optional[int],
+                         raw: bool) -> List[Any]:
+    """Response frame in the dialect the request arrived in; a raw
+    request whose reply is not raw-codable (exceptions, OOB-sized
+    values) answers in pickle, flagged per frame, and the client decodes
+    by flag."""
+    if raw:
+        body = serialization.encode_reply(*resp)
+        if body is not None:
+            return _frame_parts([body], rid, raw=True)
+    payload, buffers = serialization.dumps_oob(resp)
     return _frame_parts([payload, *buffers], rid)
 
 
@@ -347,15 +393,17 @@ class _ConnReader:
 
 
 def _recv_frames(reader: _ConnReader
-                 ) -> Optional[Tuple[List[Any], bool, Optional[bytearray],
-                                     Optional[int]]]:
-    """Read one frame. Returns ``(parts, is_legacy, lease, rid)`` or None
-    on EOF. ``rid`` is the v3 request id, or None for untagged (v1/v2)
-    frames. ``parts`` are valid until the next read on ``reader`` unless
+                 ) -> Optional[Tuple[List[Any], bool, bool,
+                                     Optional[bytearray], Optional[int]]]:
+    """Read one frame. Returns ``(parts, is_legacy, is_raw, lease, rid)``
+    or None on EOF. ``rid`` is the v3/v4 request id, or None for untagged
+    (v1/v2, or untagged-raw) frames; ``is_raw`` marks a v4 raw-codec
+    body. ``parts`` are valid until the next read on ``reader`` unless
     backed by ``lease`` (a pool buffer the caller must release once the
     parts are decoded) or fresh-allocated (frames with out-of-band parts,
     nparts > 1, whose decoded values alias the body zero-copy and must
-    never be recycled).
+    never be recycled). Raw bodies are always copied by decode, so they
+    always recycle.
 
     A multi-part frame's whole body lands in ONE buffer; parts are
     memoryview slices of it — per-part buffers would pay an mmap + page
@@ -372,7 +420,7 @@ def _recv_frames(reader: _ConnReader
         if got is None:
             return None
         lease, view = got
-        return [view], True, lease, None
+        return [view], True, False, lease, None
     rid: Optional[int] = None
     if word & _TAGGED:
         got = reader.read(_RID.size)
@@ -382,9 +430,10 @@ def _recv_frames(reader: _ConnReader
         (rid,) = _RID.unpack(view)
         if lease is not None:
             reader.pool.release(lease)
-    nparts = word & ~(_MULTI | _TAGGED)
-    if not 1 <= nparts <= _MAX_PARTS:
-        raise ConnectionError(f"bad frame: {nparts} parts")
+    raw = bool(word & _RAW)
+    nparts = word & ~_FLAGS
+    if not 1 <= nparts <= _MAX_PARTS or (raw and nparts != 1):
+        raise ConnectionError(f"bad frame: {nparts} parts (raw={raw})")
     got = reader.read(_HDR.size * nparts)
     if got is None:
         return None
@@ -401,7 +450,7 @@ def _recv_frames(reader: _ConnReader
     for ln in lens:
         parts.append(view[offset:offset + ln])
         offset += ln
-    return parts, False, lease, rid
+    return parts, False, raw, lease, rid
 
 
 def _decode(parts: List[Any], legacy: bool) -> Any:
@@ -410,17 +459,27 @@ def _decode(parts: List[Any], legacy: bool) -> Any:
     return serialization.loads_oob(parts[0], parts[1:])
 
 
+def _decode_reply(parts: List[Any], legacy: bool, raw: bool
+                  ) -> Tuple[bool, Any]:
+    """Client-side response decode: raw v4 replies through the binary
+    codec, everything else through pickle."""
+    if raw:
+        return serialization.decode_reply(parts[0])
+    return _decode(parts, legacy)
+
+
 def _recv_decode(reader: _ConnReader) -> Optional[Tuple[Any, bool]]:
-    """Read one frame, decode it, and recycle any lease (decode copied
-    everything a recyclable buffer held — see ``_recv_frames``). Returns
-    ``(obj, is_legacy)`` or None on EOF. Used by the untagged (v1/v2)
-    in-order response paths, which never see tagged frames."""
+    """Read one RESPONSE frame, decode it, and recycle any lease (decode
+    copied everything a recyclable buffer held — see ``_recv_frames``).
+    Returns ``(obj, is_legacy)`` or None on EOF. Used by the untagged
+    (v1/v2/untagged-raw) in-order response paths, which never see tagged
+    frames."""
     got = _recv_frames(reader)
     if got is None:
         return None
-    parts, legacy, lease, _ = got
+    parts, legacy, raw, lease, _ = got
     try:
-        return _decode(parts, legacy), legacy
+        return _decode_reply(parts, legacy, raw), legacy
     finally:
         if lease is not None:
             reader.pool.release(lease)
@@ -446,6 +505,30 @@ _CORK_MAX_BYTES = 256 * 1024
 
 #: idle seconds before a parked-command worker thread retires
 _BLOCKING_WORKER_IDLE_S = 5.0
+
+
+def _build_dispatch(store: KVStore) -> Tuple[Any, ...]:
+    """Precomputed cid -> bound-method table, the v4 fast path: a raw
+    command executes as ``table[cid](*args, **kwargs)`` — no per-request
+    ``getattr``, no underscore/name checks, no generic arg unpacking.
+    Built once per server; index order is ``serialization.RAW_COMMANDS``."""
+    return tuple(getattr(store, name, None)
+                 for name in serialization.RAW_COMMANDS)
+
+
+#: raw dispatch ids of commands that may park server-side (same predicate
+#: as ``_blocks``, resolved to wire ids once at import)
+_RAW_BLOCKING_NAMES = {
+    serialization.RAW_COMMAND_IDS[c]: c
+    for c in ("blpop", "brpop", "bllen", "blpop_rpush")
+    if c in serialization.RAW_COMMAND_IDS
+}
+
+
+def _raw_request_blocks(request: Tuple[int, tuple, dict]) -> bool:
+    cid, args, kwargs = request
+    name = _RAW_BLOCKING_NAMES.get(cid)
+    return name is not None and _blocks(name, args, kwargs)
 
 
 class _BlockingWorkers:
@@ -522,6 +605,9 @@ class _Handler(socketserver.BaseRequestHandler):
 
     def handle(self) -> None:
         store: KVStore = self.server.store  # type: ignore[attr-defined]
+        table = getattr(self.server, "raw_dispatch", None)
+        if table is None:  # bare _Server without a KVServer wrapper
+            table = _build_dispatch(store)
         tuned = False
         reader = _ConnReader(self.request)  # connection-private: no lock
         pool = reader.pool
@@ -551,7 +637,7 @@ class _Handler(socketserver.BaseRequestHandler):
                 return
             if got is None:
                 return
-            parts, legacy, lease, rid = got
+            parts, legacy, raw, lease, rid = got
             if not tuned and not legacy:
                 # v2/v3 connections get NODELAY + deep buffers. Legacy
                 # (v1) connections keep the seed's untuned socket so the
@@ -562,7 +648,10 @@ class _Handler(socketserver.BaseRequestHandler):
             # chunk, which the next _recv_frames overwrites.
             try:
                 try:
-                    request = _decode(parts, legacy)
+                    if raw:
+                        request = serialization.decode_command_id(parts[0])
+                    else:
+                        request = _decode(parts, legacy)
                 finally:
                     # decode copied everything a pooled lease held (bodies
                     # with aliasing out-of-band parts are never leased)
@@ -574,19 +663,22 @@ class _Handler(socketserver.BaseRequestHandler):
                 request = None
                 resp = (False, exc)
             else:
-                if rid is not None and _request_blocks(request):
+                blocks = (_raw_request_blocks(request) if raw
+                          else _request_blocks(request))
+                if rid is not None and blocks:
                     # parked commands respond from their own (reused)
                     # worker thread; any corked output flushes on the
                     # next loop turn
                     if workers is None:
                         workers = _BlockingWorkers(self._serve_one)
-                    workers.dispatch((store, request, legacy, rid,
-                                      send_lock))
+                    workers.dispatch((store, table, request, legacy, raw,
+                                      rid, send_lock))
                     continue
-                resp = self._execute(store, request)
+                resp = (self._execute_raw(store, table, request) if raw
+                        else self._execute(store, request))
             if rid is not None:
                 try:
-                    frames = _encode_frames(resp, rid)
+                    frames = _encode_reply_frames(resp, rid, raw)
                 except Exception:
                     return
                 cork.extend(frames)
@@ -596,7 +688,7 @@ class _Handler(socketserver.BaseRequestHandler):
                 continue
             if not flush_cork():  # in-order dialects: nothing may pass them
                 return
-            if not self._respond(resp, legacy, rid, send_lock):
+            if not self._respond(resp, legacy, raw, rid, send_lock):
                 return
 
     @staticmethod
@@ -609,12 +701,52 @@ class _Handler(socketserver.BaseRequestHandler):
         except Exception as exc:  # propagate to client
             return False, exc
 
-    def _serve_one(self, store: KVStore, request: Any, legacy: bool,
-                   rid: Optional[int], send_lock: threading.Lock) -> bool:
-        return self._respond(self._execute(store, request), legacy, rid,
-                             send_lock)
+    @staticmethod
+    def _execute_raw(store: KVStore, table: Tuple[Any, ...],
+                     request: Tuple[int, tuple, dict]) -> Tuple[bool, Any]:
+        """The v4 fast path: dispatch-id indexing into the precomputed
+        bound-method table — no getattr, no name checks. A raw
+        ``execute_batch`` runs its id-dispatched entries under ONE
+        take-all-stripes ``transaction`` (same EVAL accounting and same
+        blocking-clamp semantics as ``KVStore.execute_batch``: the
+        store's in-transaction guard forces blocking entries
+        non-blocking)."""
+        cid, args, kwargs = request
+        try:
+            if cid == serialization.RAW_EXEC_ID:
+                entries = args[0]
 
-    def _respond(self, resp: Tuple[bool, Any], legacy: bool,
+                def run(s: KVStore) -> List[Tuple[bool, Any]]:
+                    out: List[Tuple[bool, Any]] = []
+                    for ecid, ea, ek in entries:
+                        try:
+                            fn = table[ecid]
+                            if fn is None:
+                                raise AttributeError(
+                                    "unknown command "
+                                    f"{serialization.RAW_COMMANDS[ecid]!r}")
+                            out.append((True, fn(*ea, **ek)))
+                        except Exception as exc:
+                            out.append((False, exc))
+                    return out
+
+                return True, store.transaction(run)
+            fn = table[cid]
+            if fn is None:
+                raise AttributeError(
+                    f"unknown command {serialization.RAW_COMMANDS[cid]!r}")
+            return True, fn(*args, **kwargs)
+        except Exception as exc:  # propagate to client
+            return False, exc
+
+    def _serve_one(self, store: KVStore, table: Tuple[Any, ...],
+                   request: Any, legacy: bool, raw: bool,
+                   rid: Optional[int], send_lock: threading.Lock) -> bool:
+        resp = (self._execute_raw(store, table, request) if raw
+                else self._execute(store, request))
+        return self._respond(resp, legacy, raw, rid, send_lock)
+
+    def _respond(self, resp: Tuple[bool, Any], legacy: bool, raw: bool,
                  rid: Optional[int], send_lock: threading.Lock) -> bool:
         try:
             if legacy:
@@ -623,9 +755,9 @@ class _Handler(socketserver.BaseRequestHandler):
                 with send_lock:
                     _send_frame(self.request, payload)
             else:
-                payload, buffers = serialization.dumps_oob(resp)
+                frames = _encode_reply_frames(resp, rid, raw)
                 with send_lock:
-                    _send_frames(self.request, [payload, *buffers], rid)
+                    _sendv(self.request, frames)
             return True
         except OSError:
             return False
@@ -652,6 +784,9 @@ class KVServer:
         self.store = store or KVStore(name="kvserver")
         self._server = _Server((host, port), _Handler)
         self._server.store = self.store  # type: ignore[attr-defined]
+        # v4 fast path: cid -> bound method, built once for every handler
+        self._server.raw_dispatch = _build_dispatch(  # type: ignore[attr-defined]
+            self.store)
         self._thread: Optional[threading.Thread] = None
 
     @property
@@ -705,10 +840,19 @@ class _MuxPending:
     ``event`` doubles as the reader-baton signal: it fires either because
     the pending RESOLVED (``resolved`` is set first) or because this
     waiter was NOMINATED to take over reading the shared socket (see
-    ``_SockMux._await``)."""
+    ``_SockMux._await``).
+
+    ``raw_entries``/``raw_body`` hold the v4 pre-encoding, produced AT
+    SUBMIT on the submitting thread (outside every mux lock): the
+    per-command raw bodies (one for a single, one per batch entry) and
+    the standalone frame body. A flat-combined flush then ships them
+    as-is, and a group commit merges them by byte concatenation — no
+    pickling, no re-encoding under the flush lock. None means the
+    request is outside the raw vocabulary and flushes via pickle."""
 
     __slots__ = ("kind", "request", "ncmds", "coalesce", "sent",
-                 "resolved", "ok", "value", "event", "nominated", "mux")
+                 "resolved", "ok", "value", "event", "nominated", "mux",
+                 "raw_entries", "raw_body", "est")
 
     def __init__(self, mux: "_SockMux", kind: str, request: Any, ncmds: int,
                  coalesce: bool):
@@ -723,6 +867,28 @@ class _MuxPending:
         self.ok = False
         self.value: Any = None
         self.event = threading.Event()
+        self.raw_entries: Optional[List[bytes]] = None
+        self.raw_body: Optional[bytes] = None
+        self.est = 0
+
+    def _encode_raw(self) -> None:
+        """Pre-encode the request (v4) on the submitting thread."""
+        if self.kind == "single":
+            body = serialization.encode_command(*self.request)
+            if body is not None:
+                self.raw_entries = [body]
+                self.raw_body = body
+        else:  # batch: ("execute_batch", (cmds,), {})
+            subs: List[bytes] = []
+            for c in self.request[1][0]:
+                if c[0] == "execute_batch":
+                    return  # no EXEC-in-EXEC on the raw wire: pickle it
+                b = serialization.encode_command(*c)
+                if b is None:
+                    return
+                subs.append(b)
+            self.raw_entries = subs
+            self.raw_body = serialization.encode_batch_entries(subs)
 
     def _resolve(self, ok: bool, value: Any) -> None:
         self.ok, self.value = ok, value
@@ -786,9 +952,11 @@ class _SockMux:
     can no longer arrive.
     """
 
-    def __init__(self, address: Tuple[str, int], name: str = "mux"):
+    def __init__(self, address: Tuple[str, int], name: str = "mux",
+                 raw: bool = True):
         self.address = address
         self.name = name
+        self.raw = raw  # v4 submit-time encoding (False = pickle v3 A/B)
         self.pid = _CUR_PID  # a forked child must not share the socket
         self.sock = socket.create_connection(address)
         _tune(self.sock)
@@ -815,6 +983,10 @@ class _SockMux:
         every shard's batch first so co-resident shards coalesce into one
         frame)."""
         p = _MuxPending(self, kind, request, ncmds, coalesce)
+        if self.raw:
+            p._encode_raw()
+        p.est = (len(p.raw_body) + 16 if p.raw_body is not None
+                 else _est_request_bytes(request))
         with self._qlock:
             if self._dead is not None:
                 raise ConnectionError(
@@ -862,9 +1034,16 @@ class _SockMux:
             # is even written — harmless)
             self._nominate_locked()
         frames: List[Any] = []
-        for rid, request in plans:
+        for rid, request, raw_body in plans:
             try:
-                frames.extend(_encode_frames(request, rid))
+                if raw_body is not None:
+                    # pre-encoded at submit (or a byte-concatenated merge
+                    # of pre-encoded entries): nothing to pickle here
+                    if not isinstance(raw_body, bytes):
+                        raw_body = serialization.encode_batch_entries(raw_body)
+                    frames.extend(_frame_parts([raw_body], rid, raw=True))
+                else:
+                    frames.extend(_encode_frames(request, rid))
             except Exception as exc:
                 # encoding failed BEFORE anything hit the wire: fail only
                 # this plan's futures (unregistering the rid) and keep
@@ -884,13 +1063,16 @@ class _SockMux:
             self._kill(ConnectionError(f"kv mux send failed: {exc!r}"))
 
     def _plan_locked(self, batch: List[_MuxPending]
-                     ) -> List[Tuple[int, Any]]:
+                     ) -> List[Tuple[int, Any, Any]]:
         """Must hold ``_qlock``. Turn drained pendings into wire plans
-        ``(rid, request)``: non-coalescible pendings ship as their own
-        tagged frame; runs of coalescible pendings merge into group-commit
-        ``execute_batch`` frames, bounded by command count and estimated
-        bytes."""
-        plans: List[Tuple[int, Any]] = []
+        ``(rid, request, raw)``: non-coalescible pendings ship as their
+        own tagged frame; runs of coalescible pendings merge into
+        group-commit ``execute_batch`` frames, bounded by command count
+        and estimated bytes. ``raw`` is the pre-encoded v4 body (bytes),
+        a list of pre-encoded entry bodies to concatenate outside this
+        lock (a merged group where every member pre-encoded), or None
+        (pickle the ``request`` at write time — the fallback dialect)."""
+        plans: List[Tuple[int, Any, Any]] = []
         group: List[_MuxPending] = []
         group_cmds = 0
         group_bytes = 0
@@ -903,20 +1085,25 @@ class _SockMux:
                 p = group[0]
                 rid = self._next_rid_locked()
                 self._inflight[rid] = (p.kind, p)
-                plans.append((rid, p.request))
+                plans.append((rid, p.request, p.raw_body))
             else:
-                cmds: List[Any] = []
-                specs: List[Tuple[_MuxPending, int]] = []
-                for p in group:
-                    if p.kind == "single":
-                        cmds.append(p.request)
-                        specs.append((p, 1))
-                    else:
-                        cmds.extend(p.request[1][0])
-                        specs.append((p, p.ncmds))
+                specs: List[Tuple[_MuxPending, int]] = [
+                    (p, 1 if p.kind == "single" else p.ncmds) for p in group]
+                if all(p.raw_entries is not None for p in group):
+                    raw: Any = [s for p in group for s in p.raw_entries]
+                    request = None
+                else:
+                    cmds: List[Any] = []
+                    for p in group:
+                        if p.kind == "single":
+                            cmds.append(p.request)
+                        else:
+                            cmds.extend(p.request[1][0])
+                    raw = None
+                    request = ("execute_batch", (cmds,), {})
                 rid = self._next_rid_locked()
                 self._inflight[rid] = ("merged", specs)
-                plans.append((rid, ("execute_batch", (cmds,), {})))
+                plans.append((rid, request, raw))
             group, group_cmds, group_bytes = [], 0, 0
 
         for p in batch:
@@ -924,15 +1111,14 @@ class _SockMux:
                 close_group()
                 rid = self._next_rid_locked()
                 self._inflight[rid] = (p.kind, p)
-                plans.append((rid, p.request))
+                plans.append((rid, p.request, p.raw_body))
                 continue
-            est = _est_request_bytes(p.request)
             if group and (group_cmds + p.ncmds > _MUX_COALESCE_MAX
-                          or group_bytes + est > _MUX_COALESCE_BYTES):
+                          or group_bytes + p.est > _MUX_COALESCE_BYTES):
                 close_group()
             group.append(p)
             group_cmds += p.ncmds
-            group_bytes += est
+            group_bytes += p.est
         close_group()
         return plans
 
@@ -973,9 +1159,9 @@ class _SockMux:
                 got = _recv_frames(self._conn_reader)
                 if got is None:
                     raise ConnectionError("server closed the connection")
-                parts, legacy, lease, rid = got
+                parts, legacy, raw, lease, rid = got
                 try:
-                    resp = _decode(parts, legacy)
+                    resp = _decode_reply(parts, legacy, raw)
                 finally:
                     if lease is not None:
                         self._conn_reader.pool.release(lease)
@@ -1084,17 +1270,29 @@ class KVClient:
     connection server-side, exactly like one Redis connection per Lambda
     container. Benchmarks A/B the two on the same server.
 
+    ``raw=True`` (default) speaks the v4 **raw dialect** for the hot
+    command vocabulary: commands and replies cross the wire through the
+    struct-packed binary codec (``serialization.encode_command``) with
+    automatic per-command fallback to pickle for anything outside it —
+    large/OOB values, exotic types, the long tail of commands. On the
+    mux transport the raw body is encoded AT SUBMIT on the submitting
+    thread, so flat-combined flushes concatenate ready-made buffers
+    instead of pickling under the flush lock. ``raw=False`` keeps the
+    pure pickle v3/v2 dialects for A/B benchmarking.
+
     ``pipeline()`` batches commands into one flush (see module docstring);
     ``legacy_protocol=True`` speaks the seed's v1 wire dialect (one
     in-band pickled frame per command) for A/B benchmarking and implies
-    ``mux=False``.
+    ``mux=False`` and ``raw=False``.
     """
 
     def __init__(self, address: Tuple[str, int],
-                 legacy_protocol: bool = False, mux: bool = True):
+                 legacy_protocol: bool = False, mux: bool = True,
+                 raw: bool = True):
         self.address = address
         self.legacy_protocol = legacy_protocol
         self.mux_enabled = mux and not legacy_protocol
+        self.raw_enabled = raw and not legacy_protocol
         self._tls = threading.local()
         # thread ident -> (thread, socket): lets close() reach every live
         # connection and lets _sock() prune entries of exited threads
@@ -1122,7 +1320,8 @@ class KVClient:
             if m is not None and m.pid == _CUR_PID:
                 m.close()
             m = _SockMux(self.address,
-                         name=f"{lane}@{self.address[0]}:{self.address[1]}")
+                         name=f"{lane}@{self.address[0]}:{self.address[1]}",
+                         raw=self.raw_enabled)
             self._muxes[lane] = m
             return m
 
@@ -1197,7 +1396,8 @@ class KVClient:
             _send_frame(sock, serialization.dumps(
                 request, protocol=_LEGACY_PICKLE_PROTOCOL))
         else:
-            _sendv(sock, _encode_frames(request))
+            _sendv(sock, _encode_request_frames(request,
+                                                raw=self.raw_enabled))
         return self._read_response(sock)
 
     def _read_response(self, sock: socket.socket) -> Tuple[bool, Any]:
@@ -1227,7 +1427,7 @@ class KVClient:
         if self.legacy_protocol:
             payload = serialization.dumps(cmd, protocol=_LEGACY_PICKLE_PROTOCOL)
             return [_HDR.pack(len(payload)) + payload]
-        return _encode_frames(cmd)
+        return _encode_request_frames(cmd, raw=self.raw_enabled)
 
     def _flush_pipeline(self, cmds: List[Tuple[str, tuple, dict]],
                         transactional: bool) -> List[Tuple[bool, Any]]:
@@ -1316,7 +1516,7 @@ class KVClient:
             p = self._submit(cmd, args, kwargs, flush=False)
             pending.append((i, p))
             muxes[id(p.mux)] = p
-            est += _est_request_bytes((cmd, args, kwargs))
+            est += p.est  # exact for raw-encoded, estimated for pickle
             if est >= _PIPELINE_CHUNK_BYTES:
                 drain()
         drain()

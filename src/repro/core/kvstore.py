@@ -56,6 +56,17 @@ connection and park server-side on their own thread, so ``blocked_time_s``
 keeps meaning genuine waiter time, not head-of-line stalls. Scatter
 batches from a cluster client stay one frame per (thread, shard) —
 ``charge_scatter`` already bills them as one concurrent round trip.
+
+Remote (v4 raw) cost model: commands in the hot vocabulary
+(``serialization.RAW_COMMANDS`` — exactly the commands these IPC
+primitives issue per operation) cross the wire as struct-packed binary
+bodies and execute through a precomputed per-command dispatch table in
+the server, with no pickling in either direction for small
+commands/replies; a raw ``execute_batch`` runs id-dispatched under one
+``transaction`` (same EVAL count, same blocking clamp via the
+in-transaction guard). Everything outside the vocabulary — and every
+value of 4 KiB or more — transparently falls back to the pickle
+dialects above, per command, on the same connection.
 """
 
 from __future__ import annotations

@@ -40,6 +40,15 @@ even though the whole process multiplexes two sockets per server.
 All payloads cross the store as serialized bytes (KV latency/metrics see
 true wire sizes); over the TCP transport, large payloads travel as
 zero-copy out-of-band frames (see ``kvserver``).
+
+Every queue/pipe command above (``rpush``/``blpop``/``blpop_rpush``/
+``bllen``/``llen``/``lpop``/``incr``) sits in the v4 raw wire vocabulary
+(``serialization.RAW_COMMANDS``): with payload blobs under 4 KiB the
+whole operation — command AND reply — crosses the wire through the
+struct-packed codec with zero pickling of the envelope (the payload
+bytes themselves were serialized once by ``put``/``send`` and travel
+opaquely). Larger blobs automatically switch that one command to the
+pickle-5 out-of-band path, keeping the zero-copy transfer.
 """
 
 from __future__ import annotations

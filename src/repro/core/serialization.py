@@ -28,6 +28,47 @@ block the commands behind it) and lets the client-side I/O mux correlate
 each response with the submitting thread's future. It lives here, next
 to the payload encoding, because it is the one piece of framing state
 that both ends must agree on byte-for-byte.
+
+v4 "raw" command codec (``encode_command``/``decode_command`` +
+``encode_reply``/``decode_reply``): a type-tagged, struct-packed binary
+encoding of the HOT command vocabulary (:data:`RAW_COMMANDS`) that
+removes ``pickle`` from both ends of a small-command round trip — the
+client-GIL ceiling left after PRs 1-4 amortized the syscalls. Layout::
+
+    command := cmd_id:u8, nargs:u32, value*, nkw:u8, (klen:u8, key, value)*
+    EXEC    := cmd_id:u8, nentries:u32, (len:u32, command)*   # execute_batch
+    reply   := ok:u8 (0|1), value
+    value   := tag:u8, payload            (self-delimiting, recursive)
+
+    tag  payload
+    'N'  none                      None
+    'T'  none                      True
+    'F'  none                      False
+    'i'  i64                       int in [-2^63, 2^63)
+    'I'  u32 len + signed bytes    arbitrary-precision int
+    'f'  f64                       float (IEEE 754, NaN-safe)
+    'B'  u32 len + raw bytes       bytes  (< OOB_THRESHOLD — see below)
+    'S'  u32 len + utf-8           str    (surrogatepass, lossless)
+    'U'  u32 n + value*            tuple
+    'L'  u32 n + value*            list
+    'D'  u32 n + (u32 klen, utf-8 key, value)*   dict with str keys
+
+All words network order. Per-command **cost model**: one u8 dispatch id
+(the server indexes a precomputed bound-method table — no ``getattr``,
+no name check) plus one fixed-width tag+payload per argument; encode and
+decode are a handful of ``struct`` ops with no object graph traversal,
+no memo table, and no Pickler/Unpickler instantiation per command.
+``encode_command``/``encode_reply`` return None for anything outside the
+vocabulary — unknown commands, exotic argument types, exceptions in
+replies, containers nested deeper than ``_RAW_DEPTH``, or any
+bytes-like of ``OOB_THRESHOLD`` bytes or more (large values stay on the
+pickle-5 out-of-band zero-copy path, which ships them as scatter-gather
+frame parts without a copy) — and the transport falls back to the
+pickle dialect for that one command. ``execute_batch`` bodies are
+length-prefixed concatenations of independently encoded entries, so the
+I/O mux's group commit can merge pre-encoded submissions by byte
+concatenation (``encode_batch_entries``) without re-encoding — and
+without pickling — under the flush lock.
 """
 
 from __future__ import annotations
@@ -41,7 +82,10 @@ import types
 from typing import Any, Dict, List, Optional, Set, Tuple
 
 __all__ = ["dumps", "loads", "dumps_oob", "loads_oob", "payload_size",
-           "OOB_THRESHOLD", "FRAME_TAG", "MAX_FRAME_TAG"]
+           "OOB_THRESHOLD", "FRAME_TAG", "MAX_FRAME_TAG",
+           "RAW_COMMANDS", "RAW_COMMAND_IDS", "RAW_EXEC_ID", "Prepickled",
+           "encode_command", "decode_command", "decode_command_id",
+           "encode_reply", "decode_reply", "encode_batch_entries"]
 
 #: v3 frame tag: one network-order u32 request id per tagged frame. Ids
 #: are per-connection and wrap at 2**32 — a connection never has 4
@@ -285,3 +329,464 @@ def loads_oob(payload: Any, buffers: Optional[List[Any]] = None) -> Any:
 def payload_size(obj: Any) -> int:
     """Serialized size — used by the latency model and benchmarks."""
     return len(dumps(obj))
+
+
+class Prepickled:
+    """An already-serialized object embeddable in an outer ``dumps``.
+
+    Pickling the wrapper emits the stored payload plus a ``loads`` call,
+    so the inner object's graph is never re-traversed: the executor's
+    ``map`` serializes the task function ONCE and reuses the bytes
+    across every per-item payload (the per-item cost drops to the args).
+    """
+
+    __slots__ = ("payload",)
+
+    def __init__(self, payload: bytes):
+        self.payload = payload
+
+    def __reduce__(self):
+        return (loads, (self.payload,))
+
+
+# ---------------------------------------------------------------------------
+# v4 raw command codec (see module docstring for the frame layout)
+# ---------------------------------------------------------------------------
+
+#: The hot command vocabulary, in dispatch-id order. Index = the u8 wire
+#: id AND the server's dispatch-table slot — append only, never reorder
+#: (the id is a wire contract between mixed-version peers).
+RAW_COMMANDS: Tuple[str, ...] = (
+    "get", "set", "mget", "mset", "incr", "incrby", "decr",
+    "rpush", "lpush", "lpop", "rpop", "blpop", "brpop",
+    "blpop_rpush", "bllen", "llen",
+    "getrange", "setrange", "msetrange", "strlen",
+    "expire", "persist", "ttl", "exists", "delete",
+    "execute_batch",
+)
+RAW_COMMAND_IDS: Dict[str, int] = {c: i for i, c in enumerate(RAW_COMMANDS)}
+#: Dispatch id of ``execute_batch`` — its body nests whole sub-commands.
+RAW_EXEC_ID = RAW_COMMAND_IDS["execute_batch"]
+
+_U8 = struct.Struct("!B")
+_U32 = struct.Struct("!I")
+_I64 = struct.Struct("!q")
+_F64 = struct.Struct("!d")
+_I64_MIN, _I64_MAX = -(1 << 63), (1 << 63) - 1
+
+#: Max container nesting in raw values. 4 covers every hot shape
+#: (msetrange entry lists of tuples, the cluster descriptor's dict of
+#: lists of address pairs); anything deeper falls back to pickle.
+_RAW_DEPTH = 4
+
+_TAG_NONE, _TAG_TRUE, _TAG_FALSE = ord("N"), ord("T"), ord("F")
+_TAG_I64, _TAG_BIG, _TAG_F64 = ord("i"), ord("I"), ord("f")
+_TAG_BYTES, _TAG_STR = ord("B"), ord("S")
+_TAG_TUPLE, _TAG_LIST, _TAG_DICT = ord("U"), ord("L"), ord("D")
+
+
+class _NotRaw(Exception):
+    """Internal: the value/command is outside the raw vocabulary."""
+
+
+# Hot-path note: these run once per command per direction — the whole
+# point of the codec is beating a C pickler on SMALL payloads, so the
+# scalar cases are ordered by frequency (str keys, bytes values, ints),
+# struct methods are bound into locals, and the exec path decodes
+# entries in place without slicing sub-buffers.
+
+def _enc_value(out: bytearray, v: Any, depth: int = _RAW_DEPTH,
+               _u32: Any = _U32.pack, _i64: Any = _I64.pack,
+               _f64: Any = _F64.pack) -> None:
+    t = type(v)  # exact types only: subclasses keep pickle's fidelity
+    if t is str:
+        b = v.encode("utf-8", "surrogatepass")
+        out.append(_TAG_STR)
+        out += _u32(len(b))
+        out += b
+    elif t is bytes:
+        if len(v) >= OOB_THRESHOLD:
+            raise _NotRaw  # large values keep the zero-copy OOB path
+        out.append(_TAG_BYTES)
+        out += _u32(len(v))
+        out += v
+    elif t is int:
+        if _I64_MIN <= v <= _I64_MAX:
+            out.append(_TAG_I64)
+            out += _i64(v)
+        else:
+            big = v.to_bytes((v.bit_length() + 8) // 8, "big", signed=True)
+            out.append(_TAG_BIG)
+            out += _u32(len(big))
+            out += big
+    elif v is None:
+        out.append(_TAG_NONE)
+    elif t is bool:
+        out.append(_TAG_TRUE if v else _TAG_FALSE)
+    elif t is float:
+        out.append(_TAG_F64)
+        out += _f64(v)
+    elif t is tuple or t is list:
+        if depth <= 0:
+            raise _NotRaw
+        out.append(_TAG_TUPLE if t is tuple else _TAG_LIST)
+        out += _u32(len(v))
+        for x in v:
+            _enc_value(out, x, depth - 1)
+    elif t is dict:
+        if depth <= 0:
+            raise _NotRaw
+        out.append(_TAG_DICT)
+        out += _u32(len(v))
+        for k, x in v.items():
+            if type(k) is not str:
+                raise _NotRaw
+            kb = k.encode("utf-8", "surrogatepass")
+            out += _u32(len(kb))
+            out += kb
+            _enc_value(out, x, depth - 1)
+    else:
+        # bytearray/memoryview included: decoding would narrow them to
+        # bytes, so mutable buffers keep pickle's round-trip fidelity
+        raise _NotRaw
+
+
+def _dec_value(buf: bytes, off: int, depth: int = _RAW_DEPTH,
+               _u32: Any = _U32.unpack_from, _i64: Any = _I64.unpack_from,
+               _f64: Any = _F64.unpack_from) -> Tuple[Any, int]:
+    tag = buf[off]
+    off += 1
+    if tag == _TAG_STR:
+        (n,) = _u32(buf, off)
+        off += 4
+        end = off + n
+        return buf[off:end].decode("utf-8", "surrogatepass"), end
+    if tag == _TAG_BYTES:
+        (n,) = _u32(buf, off)
+        off += 4
+        end = off + n
+        return buf[off:end], end
+    if tag == _TAG_I64:
+        return _i64(buf, off)[0], off + 8
+    if tag == _TAG_NONE:
+        return None, off
+    if tag == _TAG_TRUE:
+        return True, off
+    if tag == _TAG_FALSE:
+        return False, off
+    if tag == _TAG_F64:
+        return _f64(buf, off)[0], off + 8
+    if tag == _TAG_TUPLE or tag == _TAG_LIST:
+        if depth <= 0:
+            raise ValueError("raw value nested too deep")
+        (n,) = _u32(buf, off)
+        off += 4
+        items = []
+        append = items.append
+        for _ in range(n):
+            v, off = _dec_value(buf, off, depth - 1)
+            append(v)
+        return (tuple(items) if tag == _TAG_TUPLE else items), off
+    if tag == _TAG_DICT:
+        if depth <= 0:
+            raise ValueError("raw value nested too deep")
+        (n,) = _u32(buf, off)
+        off += 4
+        d: Dict[str, Any] = {}
+        for _ in range(n):
+            (klen,) = _u32(buf, off)
+            off += 4
+            k = buf[off:off + klen].decode("utf-8", "surrogatepass")
+            off += klen
+            d[k], off = _dec_value(buf, off, depth - 1)
+        return d, off
+    if tag == _TAG_BIG:
+        (n,) = _u32(buf, off)
+        off += 4
+        end = off + n
+        return int.from_bytes(buf[off:end], "big", signed=True), end
+    raise ValueError(f"unknown raw value tag {tag:#x}")
+
+
+#: Memo caches for the per-command hot path. Real workloads re-touch a
+#: small working set of keys (queue item/slot keys, counters, shared
+#: array segments), so the same tiny command bodies encode and decode
+#: over and over. Keys are exact: (cmd, args) with ALL-STRING args on
+#: the encode side (numbers are excluded — ``hash(1) == hash(1.0) ==
+#: hash(True)`` would alias distinct encodings), the exact body bytes
+#: on the decode side. Cleared when full (simple, adapts to phase
+#: changes); GIL-safe, and racing fills are idempotent.
+_ENC_CACHE: Dict[tuple, bytes] = {}
+_DEC_CACHE: Dict[bytes, tuple] = {}
+_CACHE_MAX = 4096
+_CACHEABLE_BODY = 96  # bytes; only tiny bodies are worth remembering
+
+
+def encode_command(cmd: str, args: tuple, kwargs: Optional[dict] = None
+                   ) -> Optional[bytes]:
+    """Encode ``(cmd, args, kwargs)`` as a raw v4 body, or None when the
+    command/arguments are outside the raw vocabulary (the caller falls
+    back to the pickle dialect for this one command)."""
+    if not kwargs and len(args) <= 4:
+        for a in args:
+            if type(a) is not str:
+                break
+        else:
+            key = (cmd, args)
+            body = _ENC_CACHE.get(key)
+            if body is None:
+                body = _encode_command_uncached(cmd, args, {})
+                if body is not None and len(body) <= _CACHEABLE_BODY:
+                    if len(_ENC_CACHE) >= _CACHE_MAX:
+                        _ENC_CACHE.clear()
+                    _ENC_CACHE[key] = body
+            return body
+    return _encode_command_uncached(cmd, args, kwargs)
+
+
+def _encode_command_uncached(cmd: str, args: tuple,
+                             kwargs: Optional[dict]) -> Optional[bytes]:
+    cid = RAW_COMMAND_IDS.get(cmd)
+    if cid is None:
+        return None
+    kwargs = kwargs or {}
+    if cid == RAW_EXEC_ID:
+        if kwargs or len(args) != 1 or type(args[0]) not in (list, tuple):
+            return None
+        subs: List[bytes] = []
+        for entry in args[0]:
+            if type(entry) not in (list, tuple) or len(entry) != 3:
+                return None
+            c, a, k = entry
+            if c == "execute_batch":  # no EXEC-in-EXEC on the raw wire
+                return None
+            sub = encode_command(c, tuple(a), dict(k or {}))
+            if sub is None:
+                return None
+            subs.append(sub)
+        return encode_batch_entries(subs)
+    if len(kwargs) > 255:
+        return None
+    out = bytearray()
+    out.append(cid)
+    out += _U32.pack(len(args))
+    enc = _enc_value
+    try:
+        for a in args:
+            # inlined scalar fast path (str keys and bytes values are
+            # the overwhelming majority of hot-command arguments)
+            t = type(a)
+            if t is str:
+                b = a.encode("utf-8", "surrogatepass")
+                out.append(_TAG_STR)
+                out += _U32.pack(len(b))
+                out += b
+            elif t is bytes:
+                if len(a) >= OOB_THRESHOLD:
+                    return None
+                out.append(_TAG_BYTES)
+                out += _U32.pack(len(a))
+                out += a
+            elif t is int and _I64_MIN <= a <= _I64_MAX:
+                out.append(_TAG_I64)
+                out += _I64.pack(a)
+            else:
+                enc(out, a)
+        if kwargs:
+            out.append(len(kwargs))
+            for k, v in kwargs.items():
+                if type(k) is not str:
+                    return None
+                kb = k.encode("utf-8")
+                if len(kb) > 255:
+                    return None
+                out.append(len(kb))
+                out += kb
+                enc(out, v)
+        else:
+            out.append(0)
+    except (_NotRaw, OverflowError, struct.error):
+        return None
+    return bytes(out)
+
+
+def encode_batch_entries(subs: List[bytes]) -> bytes:
+    """An ``execute_batch`` body from already-encoded entry bodies: pure
+    length-prefixed concatenation, so the I/O mux's group commit merges
+    pre-encoded submissions without re-encoding under its flush lock."""
+    out = bytearray()
+    out.append(RAW_EXEC_ID)
+    out += _U32.pack(len(subs))
+    for s in subs:
+        out += _U32.pack(len(s))
+        out += s
+    return bytes(out)
+
+
+def _dec_command_at(buf: bytes, off: int,
+                    _u32: Any = _U32.unpack_from,
+                    _i64: Any = _I64.unpack_from
+                    ) -> Tuple[int, tuple, dict, int]:
+    """Decode one non-EXEC command in place; returns (cid, args, kwargs,
+    next_offset). Shared by the single-command and batch-entry paths so
+    batch entries never pay a per-entry sub-buffer slice."""
+    cid = buf[off]
+    if cid >= len(RAW_COMMANDS) or cid == RAW_EXEC_ID:
+        if cid == RAW_EXEC_ID:
+            raise ValueError("nested execute_batch on the raw wire")
+        raise ValueError(f"unknown raw command id {cid}")
+    (na,) = _u32(buf, off + 1)
+    off += 5
+    args = []
+    append = args.append
+    dec = _dec_value
+    for _ in range(na):
+        # inlined scalar fast path, mirroring encode_command's
+        tag = buf[off]
+        if tag == _TAG_STR:
+            (n,) = _u32(buf, off + 1)
+            off += 5
+            end = off + n
+            append(buf[off:end].decode("utf-8", "surrogatepass"))
+            off = end
+        elif tag == _TAG_BYTES:
+            (n,) = _u32(buf, off + 1)
+            off += 5
+            end = off + n
+            append(buf[off:end])
+            off = end
+        elif tag == _TAG_I64:
+            append(_i64(buf, off + 1)[0])
+            off += 9
+        else:
+            v, off = dec(buf, off)
+            append(v)
+    nk = buf[off]
+    off += 1
+    kwargs: Dict[str, Any] = {}
+    for _ in range(nk):
+        klen = buf[off]
+        off += 1
+        k = buf[off:off + klen].decode("utf-8")
+        off += klen
+        kwargs[k], off = dec(buf, off)
+    return cid, tuple(args), kwargs, off
+
+
+def decode_command_id(buf: Any) -> Tuple[int, tuple, dict]:
+    """Decode a raw body to ``(cmd_id, args, kwargs)`` — the server fast
+    path: the id indexes a precomputed bound-method dispatch table, so
+    execution skips ``getattr`` and the name check entirely.
+    ``execute_batch`` entries come back as nested id-triples."""
+    buf = bytes(buf)  # one copy: decoded values never alias the transport
+    try:
+        cid = buf[0]
+        if cid == RAW_EXEC_ID:
+            (n,) = _U32.unpack_from(buf, 1)
+            off = 5
+            entries = []
+            append = entries.append
+            cache = _DEC_CACHE
+            u32 = _U32.unpack_from
+            for _ in range(n):
+                (ln,) = u32(buf, off)
+                off += 4
+                end = off + ln
+                if ln <= _CACHEABLE_BODY:
+                    body = buf[off:end]
+                    entry = cache.get(body)
+                    if entry is None:
+                        ecid, ea, ek, stop = _dec_command_at(buf, off)
+                        if stop != end:
+                            raise ValueError("misframed raw batch entry")
+                        entry = (ecid, ea, ek)
+                        _dec_cache_put(body, entry)
+                else:
+                    # big entry: guaranteed cache miss AND uncacheable —
+                    # skip the memo slice copy entirely
+                    ecid, ea, ek, stop = _dec_command_at(buf, off)
+                    if stop != end:
+                        raise ValueError("misframed raw batch entry")
+                    entry = (ecid, ea, ek)
+                append(entry)
+                off = end
+            if off != len(buf):
+                raise ValueError("trailing bytes after raw batch")
+            return cid, (entries,), {}
+        entry = _DEC_CACHE.get(buf)
+        if entry is None:
+            cid, args, kwargs, off = _dec_command_at(buf, 0)
+            if off != len(buf):
+                raise ValueError("trailing bytes after raw command")
+            entry = (cid, args, kwargs)
+            _dec_cache_put(buf, entry)
+        return entry
+    except (IndexError, struct.error) as exc:
+        raise ValueError(f"malformed raw command: {exc!r}") from None
+
+
+def _dec_cache_put(body: bytes, entry: tuple) -> None:
+    """Remember a decoded body iff sharing it is provably safe: tiny, no
+    kwargs, and all-immutable-scalar args (a cached list/dict arg could
+    be mutated by one executing command and observed by the next)."""
+    if len(body) > _CACHEABLE_BODY or entry[2]:
+        return
+    for a in entry[1]:
+        t = type(a)
+        if not (t is str or t is bytes or t is int or t is float):
+            return
+    if len(_DEC_CACHE) >= _CACHE_MAX:
+        _DEC_CACHE.clear()
+    _DEC_CACHE[body] = entry
+
+
+def decode_command(buf: Any) -> Tuple[str, tuple, dict]:
+    """Name-based inverse of :func:`encode_command` (``execute_batch``
+    entries are name-triples, mirroring the pickle request shape)."""
+    cid, args, kwargs = decode_command_id(buf)
+    if cid == RAW_EXEC_ID:
+        entries = [(RAW_COMMANDS[ecid], ea, ek)
+                   for ecid, ea, ek in args[0]]
+        return "execute_batch", (entries,), {}
+    return RAW_COMMANDS[cid], args, kwargs
+
+
+#: Replies whose top-level container holds more than this many items
+#: fall back to pickle even when raw-codable. Deliberate: a C
+#: Unpickler decodes a big homogeneous result list (a 100-command batch
+#: reply, a wide MGET) faster than any per-item Python loop, and that
+#: decode runs on the CLIENT GIL — the exact bottleneck this codec
+#: exists to relieve. Small replies (the per-command hot path) stay
+#: raw, where the codec beats the Pickler's fixed per-call costs.
+_RAW_REPLY_MAX_ITEMS = 8
+
+
+def encode_reply(ok: bool, value: Any) -> Optional[bytes]:
+    """Encode an ``(ok, value)`` response as a raw v4 body, or None when
+    the value is outside the raw vocabulary (exceptions, large/OOB
+    values, exotic types) or is a wide container (see
+    ``_RAW_REPLY_MAX_ITEMS``) — the server then answers in pickle,
+    flagged per frame, and the client decodes by flag."""
+    t = type(value)
+    if ((t is list or t is tuple or t is dict)
+            and len(value) > _RAW_REPLY_MAX_ITEMS):
+        return None
+    out = bytearray()
+    out.append(1 if ok else 0)
+    try:
+        _enc_value(out, value)
+    except (_NotRaw, OverflowError, struct.error):
+        return None
+    return bytes(out)
+
+
+def decode_reply(buf: Any) -> Tuple[bool, Any]:
+    """Inverse of :func:`encode_reply`."""
+    buf = bytes(buf)
+    try:
+        v, off = _dec_value(buf, 1)
+        if off != len(buf):
+            raise ValueError("trailing bytes after raw reply")
+        return buf[0] == 1, v
+    except (IndexError, struct.error) as exc:
+        raise ValueError(f"malformed raw reply: {exc!r}") from None

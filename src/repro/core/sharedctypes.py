@@ -31,6 +31,14 @@ against remote round trips:
   transaction. This is deliberately the cost model that makes the
   paper's in-place sort prohibitively slow remotely; it is kept for A/B
   measurement (``benchmarks/bench_sort.py`` runs both layouts).
+
+Wire dialect: the block layout's whole command set — ``getrange`` /
+``setrange`` / ``msetrange`` / ``strlen`` / ``mget`` / ``mset`` plus the
+``expire``/``delete`` lifecycle — is raw-eligible
+(``serialization.RAW_COMMANDS``), so single-element accesses and small
+dirty-run flushes travel pickle-free over TCP (v4); segment-sized
+(>= 4 KiB) values per command automatically take the pickle-5
+out-of-band zero-copy path instead.
 """
 
 from __future__ import annotations

@@ -81,3 +81,26 @@ class TestExecutor:
         ex.call_async(lambda: None).result(5)
         assert any(k.startswith("jobs/") for k in sess.get_storage().list())
         ex.shutdown()
+
+    def test_map_serializes_function_once(self):
+        """map() reduces the function graph once, not once per item;
+        per-task payload stats still carry the true upload size."""
+        from repro.core import serialization as ser
+        reductions = []
+        orig = ser._Pickler._reduce_function
+
+        def counting(self, fn):
+            reductions.append(fn)
+            return orig(self, fn)
+
+        ser._Pickler._reduce_function = counting
+        try:
+            ex = FunctionExecutor()
+            big = list(range(1000))  # captured: costly to re-serialize
+            futs = ex.map(lambda x: x + big[0], range(8))
+            assert [f.result(10) for f in futs] == list(range(8))
+            assert len(reductions) == 1
+            assert all(f.stats["payload_bytes"] > 1000 for f in futs)
+            ex.shutdown()
+        finally:
+            ser._Pickler._reduce_function = orig

@@ -53,6 +53,43 @@ class TestPool:
             # 1 job submit (4 chunks in one RPUSH) + 4 result pushes
             assert pushes <= 6
 
+    def test_upload_func_content_addressed(self):
+        """Repeated maps of the SAME function upload it once (grid
+        search's loop); a different function uploads separately."""
+        from repro.core import get_session
+
+        def work(x):
+            return x + 1
+
+        storage = get_session().get_storage()
+        with mp.Pool(2) as p:
+            p.map(work, range(4))
+            funcs_after_first = set(storage.list("pool/funcs/"))
+            puts_after_first = storage.ops.get("PUT", 0)
+            for _ in range(3):
+                p.map(work, range(4))
+            assert set(storage.list("pool/funcs/")) == funcs_after_first
+            assert len(funcs_after_first) == 1
+            # no further func PUTs (result traffic rides the KV store,
+            # not object storage, so PUT counts are exactly func/init)
+            assert storage.ops.get("PUT", 0) == puts_after_first
+            p.map(lambda x: x * 2, range(4))
+            assert len(storage.list("pool/funcs/")) == 2
+
+    def test_empty_iterable_short_circuits(self):
+        """map([]) resolves immediately: no upload, no job registered
+        (a chunkless job would leak in self._jobs forever)."""
+        from repro.core import get_session
+        storage = get_session().get_storage()
+        with mp.Pool(2) as p:
+            assert p.map(lambda x: x, []) == []
+            assert p.starmap(lambda a: a, []) == []
+            assert list(p.imap(lambda x: x, [])) == []
+            res = p.map_async(lambda x: x, [])
+            assert res.get(1) == [] and res.successful()
+            assert p._jobs == {}
+            assert storage.list("pool/funcs/") == []
+
     def test_resize(self):
         p = mp.Pool(2)
         try:

@@ -1,0 +1,404 @@
+"""v4 raw wire dialect: codec round-trip matrix, pickle fallback, the
+server dispatch-table fast path, and the v1-v4 client interop grid."""
+
+import math
+import threading
+import time
+
+import pytest
+
+from repro.core import KVClient, KVServer
+from repro.core import serialization as ser
+
+# ---------------------------------------------------------------------------
+# Codec round trips (no sockets)
+# ---------------------------------------------------------------------------
+
+#: The full raw value vocabulary, edge cases included.
+ROUNDTRIP_VALUES = [
+    None, True, False,
+    0, 1, -1, 255, -256,
+    (1 << 63) - 1, -(1 << 63),            # i64 boundaries
+    1 << 63, -(1 << 63) - 1,              # just past i64 -> bigint
+    1 << 200, -(1 << 200), 12345678901234567890123456789,
+    0.0, -0.0, 1.5, -2.25, float("inf"), float("-inf"), 1e308,
+    b"", b"x", b"\x00\xff" * 50, bytes(range(256)),
+    "", "plain", "héllo ünicode ✓", "中文",
+    "a\ud800b",                           # lone surrogate (surrogatepass)
+    (), [], {},
+    (1, "two", b"three", None, True),
+    [b"x", 2.5, False, ""],
+    {"a": 1, "b": [1, 2], "c": ("x", b"y")},
+    {"nested": {"deeper": [1, (2, 3)]}},
+    ["mixed", [1, [2, 3]], {"k": b"v"}],
+]
+
+
+class TestValueRoundTrip:
+    @pytest.mark.parametrize("value", ROUNDTRIP_VALUES,
+                             ids=lambda v: repr(v)[:40])
+    def test_roundtrip_as_arg_and_reply(self, value):
+        body = ser.encode_command("set", ("k", value), {})
+        assert body is not None
+        cmd, args, kwargs = ser.decode_command(body)
+        assert cmd == "set" and kwargs == {}
+        got = args[1]
+        assert type(got) is type(value) or (
+            isinstance(value, (bytearray, memoryview)))
+        assert got == value
+        rbody = ser.encode_reply(True, value)
+        assert rbody is not None
+        ok, rvalue = ser.decode_reply(rbody)
+        assert ok is True and rvalue == value and type(rvalue) is type(value)
+
+    def test_nan_roundtrip(self):
+        ok, v = ser.decode_reply(ser.encode_reply(True, float("nan")))
+        assert ok and math.isnan(v)
+
+    def test_mutable_buffers_fall_back_to_pickle(self):
+        """bytearray/memoryview would decode narrowed to bytes, so they
+        stay on the pickle dialect (type fidelity over the wire)."""
+        assert ser.encode_command("set", ("k", bytearray(b"ab")), {}) is None
+        assert ser.encode_command("set", ("k", memoryview(b"cd")), {}) is None
+        assert ser.encode_reply(True, bytearray(b"ab")) is None
+
+    def test_int_float_bool_tags_distinct(self):
+        """1, 1.0 and True hash equal but must encode distinctly."""
+        for v in (1, 1.0, True):
+            got = ser.decode_reply(ser.encode_reply(True, v))[1]
+            assert got == v and type(got) is type(v)
+        # and through the encode cache: same key string, different values
+        a = ser.encode_command("expire", ("k", 1), {})
+        b = ser.encode_command("expire", ("k", 1.0), {})
+        assert a != b
+        assert type(ser.decode_command(a)[1][1]) is int
+        assert type(ser.decode_command(b)[1][1]) is float
+
+
+class TestCommandRoundTrip:
+    CASES = [
+        ("get", ("k",), {}),
+        ("set", ("k", b"v"), {"ex": 2.5, "nx": True}),
+        ("mget", (["a", "b", "c"],), {}),
+        ("mset", ({"a": b"1", "b": 2},), {}),
+        ("incr", ("n",), {}),
+        ("incrby", ("n", -3), {}),
+        ("rpush", ("l", b"1", b"2", b"3"), {}),
+        ("lpop", ("l",), {}),
+        ("blpop", (["q1", "q2"], 5), {}),
+        ("blpop", ("q",), {"timeout": None}),
+        ("blpop_rpush", ("slots", "items", b"payload", 0.25), {}),
+        ("bllen", ("k", 1.0), {}),
+        ("getrange", ("k", 0, -1), {}),
+        ("setrange", ("k", 4096, b"zz"), {}),
+        ("msetrange", ([("k", 0, b"ab"), ("k2", 7, b"cd")],), {}),
+        ("strlen", ("k",), {}),
+        ("expire", ("k", 3.5), {}),
+        ("delete", ("a", "b", "c"), {}),
+    ]
+
+    @pytest.mark.parametrize("cmd,args,kwargs", CASES,
+                             ids=lambda c: c if isinstance(c, str) else None)
+    def test_roundtrip(self, cmd, args, kwargs):
+        body = ser.encode_command(cmd, args, kwargs)
+        assert body is not None
+        assert ser.decode_command(body) == (cmd, args, kwargs)
+
+    def test_decode_command_id_matches_vocabulary(self):
+        body = ser.encode_command("incr", ("n",), {})
+        cid, args, kwargs = ser.decode_command_id(body)
+        assert ser.RAW_COMMANDS[cid] == "incr"
+        assert args == ("n",) and kwargs == {}
+
+    def test_execute_batch_roundtrip(self):
+        entries = [("incr", ("a",), {}), ("set", ("b", b"v"), {"nx": True}),
+                   ("blpop", ("q", 0.0), {})]
+        body = ser.encode_command("execute_batch", (entries,), {})
+        assert body is not None
+        cmd, args, kwargs = ser.decode_command(body)
+        assert cmd == "execute_batch" and kwargs == {}
+        assert args[0] == entries
+        # id-form entries for the dispatch table
+        cid, (id_entries,), _ = ser.decode_command_id(body)
+        assert cid == ser.RAW_EXEC_ID
+        assert [ser.RAW_COMMANDS[e[0]] for e in id_entries] == [
+            "incr", "set", "blpop"]
+
+    def test_batch_merge_is_concatenation(self):
+        """Group commit merges pre-encoded entries byte-for-byte."""
+        subs = [ser.encode_command("incr", (f"k{i}",), {}) for i in range(4)]
+        merged = ser.encode_batch_entries(subs)
+        direct = ser.encode_command(
+            "execute_batch", ([("incr", (f"k{i}",), {}) for i in range(4)],),
+            {})
+        assert merged == direct
+
+
+class TestFallback:
+    def test_unknown_command(self):
+        assert ser.encode_command("hset", ("h", "f", b"v"), {}) is None
+        assert ser.encode_command("transaction", (lambda s: None,), {}) is None
+
+    def test_non_raw_argument(self):
+        assert ser.encode_command("set", ("k", object()), {}) is None
+        assert ser.encode_command("set", ("k", {1: "non-str-key"}), {}) is None
+        assert ser.encode_command("set", ("k", {"x"}), {}) is None  # set type
+
+    def test_oob_sized_bytes_stay_on_pickle_path(self):
+        big = b"x" * ser.OOB_THRESHOLD
+        assert ser.encode_command("set", ("k", big), {}) is None
+        assert ser.encode_command("set", ("k", big[:-1]), {}) is not None
+        assert ser.encode_reply(True, big) is None
+
+    def test_too_deep_nesting(self):
+        v = [[[[[1]]]]]
+        assert ser.encode_command("set", ("k", v), {}) is None
+
+    def test_exec_entry_fallback_poisons_whole_batch(self):
+        entries = [("incr", ("a",), {}), ("hset", ("h", "f", b"v"), {})]
+        assert ser.encode_command("execute_batch", (entries,), {}) is None
+
+    def test_no_nested_execute_batch(self):
+        inner = [("incr", ("a",), {})]
+        entries = [("execute_batch", (inner,), {})]
+        assert ser.encode_command("execute_batch", (entries,), {}) is None
+
+    def test_exception_reply_falls_back(self):
+        assert ser.encode_reply(False, ValueError("boom")) is None
+
+    def test_wide_reply_falls_back_to_c_unpickler(self):
+        assert ser.encode_reply(True, list(range(100))) is None
+        assert ser.encode_reply(True, list(range(4))) is not None
+
+    def test_malformed_body_raises_valueerror(self):
+        body = ser.encode_command("incr", ("k",), {})
+        with pytest.raises(ValueError):
+            ser.decode_command_id(body[:-2])
+        with pytest.raises(ValueError):
+            ser.decode_command_id(body + b"\x00")
+        with pytest.raises(ValueError):
+            ser.decode_reply(b"\x01\x7f")
+
+
+# ---------------------------------------------------------------------------
+# Wire: the four dialects against one server
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def server():
+    with KVServer() as srv:
+        yield srv
+
+
+def _dialect_clients(address):
+    """One client per wire dialect: v1 legacy pickle, v2 per-thread
+    pickle, v3 multiplexed pickle, v4 raw (mux and per-thread)."""
+    return {
+        "v1": KVClient(address, legacy_protocol=True),
+        "v2": KVClient(address, mux=False, raw=False),
+        "v3": KVClient(address, mux=True, raw=False),
+        "v4": KVClient(address, mux=True, raw=True),
+        "v4-sockets": KVClient(address, mux=False, raw=True),
+    }
+
+
+class TestInterop:
+    def test_dialect_grid(self, server):
+        """Every (writer, reader) pair across v1-v4 observes the same
+        store state — the server answers each request in the dialect it
+        arrived in."""
+        clients = _dialect_clients(server.address)
+        try:
+            for wname, w in clients.items():
+                w.set(f"grid:{wname}", f"from-{wname}".encode())
+                w.rpush(f"grid:{wname}:l", b"a", b"b")
+                w.incr("grid:counter")
+            for rname, r in clients.items():
+                for wname in clients:
+                    assert r.get(f"grid:{wname}") == f"from-{wname}".encode(), \
+                        f"{rname} reading {wname}"
+                    assert r.llen(f"grid:{wname}:l") == 2
+            assert clients["v1"].get("grid:counter") == len(clients)
+        finally:
+            for c in clients.values():
+                c.close()
+
+    def test_mixed_dialects_on_one_connection(self, server):
+        """A raw client interleaves raw-codable and pickle-fallback
+        commands (plus OOB-sized payloads) on the SAME connection; every
+        frame self-describes, so framing never desyncs."""
+        c = KVClient(server.address)
+        big = b"z" * (1 << 20)  # OOB path
+        for i in range(3):
+            assert c.incr("mix:n") == i + 1            # raw
+            c.hset("mix:h", f"f{i}", b"x")             # pickle fallback
+            c.rpush("mix:big", big)                    # pickle + OOB parts
+            assert c.lpop("mix:big") == big
+            assert c.strlen("mix:missing") == 0        # raw
+        assert c.hgetall("mix:h") == {f"f{i}": b"x" for i in range(3)}
+        c.close()
+
+    def test_raw_error_reply_keeps_connection_synced(self, server):
+        c = KVClient(server.address)
+        c.set("k", b"v")
+        with pytest.raises(TypeError):
+            c.rpush("k", b"x")  # WRONGTYPE -> pickle error reply
+        assert c.get("k") == b"v"  # still in sync
+        with pytest.raises(AttributeError):
+            c.definitely_not_a_command("k")
+        assert c.incr("n") == 1
+        c.close()
+
+    def test_raw_blocking_lane(self, server):
+        c1, c2 = KVClient(server.address), KVClient(server.address)
+        out = []
+        t = threading.Thread(target=lambda: out.append(c2.blpop("rq", 5)))
+        t.start()
+        time.sleep(0.05)
+        c1.rpush("rq", b"msg")
+        t.join(3)
+        assert out == [("rq", b"msg")]
+        assert c2.blpop("rq", 0.01) is None  # raw None reply on timeout
+        c1.close()
+        c2.close()
+
+    def test_large_values_roundtrip_per_dialect(self, server):
+        """>= OOB_THRESHOLD values ride the zero-copy pickle path from a
+        raw client, transparently per command."""
+        c = KVClient(server.address)
+        for size in (ser.OOB_THRESHOLD - 1, ser.OOB_THRESHOLD,
+                     ser.OOB_THRESHOLD + 1, 1 << 20):
+            blob = bytes([size % 251]) * size
+            c.set(f"sz:{size}", blob)
+            assert c.get(f"sz:{size}") == blob
+        c.close()
+
+    def test_value_type_fidelity_over_wire(self, server):
+        c = KVClient(server.address)
+        for i, v in enumerate(ROUNDTRIP_VALUES):
+            c.set(f"fid:{i}", v)
+            got = c.get(f"fid:{i}")
+            if isinstance(v, (bytes, bytearray)):
+                assert bytes(got) == bytes(v)
+            else:
+                assert got == v and type(got) is type(v)
+        c.set("fid:big", 1 << 100)
+        assert c.get("fid:big") == 1 << 100
+        c.close()
+
+
+class TestRawPipelines:
+    def test_transactional_pipeline_is_one_eval(self, server):
+        c = KVClient(server.address)
+        before = server.store.metrics.commands.get("EVAL", 0)
+        with c.pipeline() as p:
+            a = p.rpush("l", b"1", b"2")
+            b = p.llen("l")
+            n = p.incr("n")
+        assert a.get() == 2 and b.get() == 2 and n.get() == 1
+        assert server.store.metrics.commands.get("EVAL", 0) == before + 1
+        c.close()
+
+    def test_pipeline_with_mixed_raw_and_fallback_commands(self, server):
+        """A batch containing a non-raw entry falls back to pickle as a
+        WHOLE frame and still executes transactionally."""
+        c = KVClient(server.address)
+        with c.pipeline() as p:
+            p.incr("pm:n")
+            p.hset("pm:h", "f", b"v")       # not in the raw vocabulary
+            p.rpush("pm:big", b"x" * 8192)  # OOB-sized entry
+            got = p.llen("pm:big")
+        assert got.get() == 1
+        assert c.hget("pm:h", "f") == b"v"
+        c.close()
+
+    def test_pipeline_with_execute_batch_entry_falls_back(self, server):
+        """An execute_batch entry inside a pipeline batch must NOT be
+        raw-encoded as EXEC-in-EXEC — the whole frame falls back to
+        pickle and still runs (regression: the submit-time encoder used
+        to bypass the nesting guard)."""
+        c = KVClient(server.address)
+        with c.pipeline() as p:
+            p.set("nb:a", b"1")
+            inner = p.execute_batch([("set", ("nb:b", b"2"), {}),
+                                     ("incr", ("nb:n",), {})])
+        assert [ok for ok, _ in inner.get()] == [True, True]
+        assert c.get("nb:a") == b"1" and c.get("nb:b") == b"2"
+        assert c.get("nb:n") == 1
+        c.close()
+
+    def test_error_mid_raw_batch(self, server):
+        from repro.core.kvstore import PipelineError
+        c = KVClient(server.address)
+        c.set("eb:str", b"v")
+        p = c.pipeline()
+        p.incr("eb:n")
+        p.rpush("eb:str", b"x")  # WRONGTYPE mid-batch
+        p.incr("eb:n")
+        with pytest.raises(PipelineError) as ei:
+            p.execute()
+        assert ei.value.index == 1
+        assert c.get("eb:n") == 2  # both incrs ran (MULTI semantics)
+        c.close()
+
+    def test_nontransactional_pipeline_raw(self, server):
+        c = KVClient(server.address)
+        with c.pipeline(transactional=False) as p:
+            a = p.rpush("nt:l", b"1")
+            b = p.llen("nt:l")
+        assert a.get() == 1 and b.get() == 1
+        c.close()
+
+    def test_concurrent_raw_singles_group_commit(self, server):
+        """8 threads of raw singles multiplex one connection; results
+        demux correctly (the merged frames are raw execute_batch)."""
+        c = KVClient(server.address)
+        errors = []
+
+        def worker(i):
+            try:
+                for j in range(25):
+                    assert c.incr(f"gc:{i}") == j + 1
+            except BaseException as exc:
+                errors.append(exc)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        assert all(c.get(f"gc:{i}") == 25 for i in range(8))
+        c.close()
+
+
+class TestDispatchTable:
+    def test_table_covers_vocabulary(self, server):
+        from repro.core.kvserver import _build_dispatch
+        table = _build_dispatch(server.store)
+        assert len(table) == len(ser.RAW_COMMANDS)
+        for name, fn in zip(ser.RAW_COMMANDS, table):
+            assert fn is not None and fn.__name__ == name
+
+    def test_raw_exec_records_eval_and_inner_commands(self, server):
+        c = KVClient(server.address)
+        before = server.store.metrics.commands.get("EVAL", 0)
+        with c.pipeline() as p:
+            for i in range(5):
+                p.incr(f"dt:{i}")
+        assert server.store.metrics.commands.get("EVAL", 0) == before + 1
+        assert server.store.metrics.commands.get("INCRBY", 0) >= 5
+        c.close()
+
+    def test_blocking_clamped_inside_raw_batch(self, server):
+        """A blocking command inside a raw execute_batch must not park
+        while the transaction holds every stripe."""
+        c = KVClient(server.address)
+        t0 = time.monotonic()
+        with c.pipeline() as p:
+            got = p.blpop("never:filled", 30)
+        assert got.get() is None
+        assert time.monotonic() - t0 < 5
+        c.close()
