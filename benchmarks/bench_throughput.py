@@ -38,11 +38,24 @@ Three families of rows:
   submit, dispatch-table execution server-side, raw small replies). The
   small-command pipeline case is the regime the codec exists for — after
   PR 4 collapsed the syscalls, per-op CPU was the pickle on both ends of
-  the client GIL. Run directly for the matrices and the CI gates::
+  the client GIL.
+
+* ``throughput/transport/*`` — the PR 6 same-host carrier A/B on the
+  SAME cluster with the SAME mux + v4 dialect: each shard reached over
+  ``tcp`` loopback sockets, ``uds`` Unix-domain sockets, and ``shm``
+  shared-memory SPSC rings, passes interleaved so the ratio isolates
+  the byte carrier under identical framing. ``singles`` (unpipelined
+  request/response) is the per-op carrier-cost regime and feeds the
+  ``--assert-shm-floor`` tripwire; the win regime for rings is
+  taxed-syscall sandboxes and parallel cores (see ROADMAP.md).
+
+  Run directly for the matrices and the CI gates::
 
       python -m benchmarks.bench_throughput --clients 4 --shards 2
       python -m benchmarks.bench_throughput --quick --clients 4 \
           --shards 2 --only cmds --assert-speedup 1.1 --assert-raw-floor 0.8
+      python -m benchmarks.bench_throughput --quick --transport \
+          tcp,uds,shm --assert-shm-floor 0.5
 """
 
 from __future__ import annotations
@@ -444,6 +457,78 @@ def _raw_matrix(quick: bool, clients_list: List[int],
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Same-host transport A/B (PR 6): tcp vs uds vs shm rings on one cluster
+# ---------------------------------------------------------------------------
+
+
+def _transport_matrix(quick: bool, clients_list: List[int],
+                      shards_list: List[int],
+                      transports: List[str],
+                      only: "List[str] | None" = None) -> List[Row]:
+    """PR 6 rows: the SAME cluster, the SAME mux + v4 dialect, reached
+    over each same-host carrier (``tcp`` sockets / ``uds`` sockets /
+    ``shm`` SPSC rings) with passes interleaved — the ratio isolates the
+    byte transport under identical framing. ``singles`` is the headline
+    case (per-op carrier cost, nothing amortized); ``cmds``/``8KB``
+    show where batching amortizes the carrier away. The shm win is
+    REGIME-DEPENDENT: rings pay pure-Python bookkeeping to save
+    syscalls, so they win where syscalls are taxed (gVisor/Firecracker
+    serverless sandboxes — the paper's deployment target) or where
+    parallel cores make spin-wakeups sub-µs, and lose on boxes whose
+    kernel socket path is cheaper than interpreter loops (see ROADMAP.md
+    "Performance" for the regime table); the adaptive spin/yield/park
+    waiter keeps the degradation bounded instead of catastrophic."""
+    rows: List[Row] = []
+    cases = _matrix_cases(quick, only)
+    singles = only is None or "singles" in only
+    if not cases and not singles:
+        return rows
+    n_singles = 100 if quick else 250
+    base_tr = transports[0]
+    for n_clients in clients_list:
+        for n_shards in shards_list:
+            with KVCluster(shards=n_shards) as cluster:
+                clients = {tr: cluster.client(transport=tr)
+                           for tr in transports}
+                for tag, payload, rounds, batch in cases:
+                    best = _interleaved_best({
+                        tr: (lambda c=c: _fanout_ops(
+                            c, n_clients, rounds, batch, payload))
+                        for tr, c in clients.items()}, passes=_PASSES + 1)
+                    base, _ = best[base_tr]
+                    per_round = batch * (2 if payload else 1)
+                    for tr in transports:
+                        ops, secs = best[tr]
+                        rows.append(row(
+                            f"throughput/transport/{tag}/{tr}"
+                            f"/c{n_clients}xs{n_shards}",
+                            secs / (n_clients * rounds * per_round),
+                            f"{tr} {ops:,.0f} ops/s vs {base_tr} "
+                            f"{base:,.0f} ops/s = {ops / base:.2f}x "
+                            f"({n_clients} clients, {n_shards} shard "
+                            "procs)"))
+                if singles:
+                    best = _interleaved_best({
+                        tr: (lambda c=c: _singles_ops(
+                            c, n_clients, n_singles))
+                        for tr, c in clients.items()}, passes=_PASSES + 1)
+                    base, _ = best[base_tr]
+                    for tr in transports:
+                        ops, secs = best[tr]
+                        rows.append(row(
+                            f"throughput/transport/singles/{tr}"
+                            f"/c{n_clients}xs{n_shards}",
+                            secs / (n_clients * n_singles),
+                            f"{tr} {ops:,.0f} ops/s vs {base_tr} "
+                            f"{base:,.0f} ops/s = {ops / base:.2f}x "
+                            f"({n_clients} clients, {n_shards} shard "
+                            "procs, unpipelined singles)"))
+                for c in clients.values():
+                    c.close()
+    return rows
+
+
 def run(quick: bool = False) -> List[Row]:
     rows = [_pipe_row(quick)]
     with KVServer() as server:  # no latency model: real loopback transport
@@ -453,6 +538,9 @@ def run(quick: bool = False) -> List[Row]:
     rows.extend(_mux_matrix(quick, clients_list=[4], shards_list=[2]))
     rows.extend(_raw_matrix(quick, clients_list=[4], shards_list=[2],
                             only=["cmds", "singles"]))
+    rows.extend(_transport_matrix(quick, clients_list=[1], shards_list=[1],
+                                  transports=["tcp", "uds", "shm"],
+                                  only=["singles"]))
     return rows
 
 
@@ -486,17 +574,44 @@ def main(argv: List[str] | None = None) -> int:
                          "(catastrophic-regression floor, NOT the ~1.2x+ "
                          "claim — quick-mode ratios swing with runner "
                          "noise)")
+    ap.add_argument("--transport", default=None,
+                    help="comma-separated carriers to A/B on one cluster "
+                         "(e.g. --transport tcp,uds,shm); the first is the "
+                         "ratio baseline. Adds throughput/transport/* rows")
+    ap.add_argument("--assert-shm-floor", type=float, default=None,
+                    help="fail unless shm-ring unpipelined-single ops/s >= "
+                         "this multiple of the tcp mux path's on the same "
+                         "cluster (catastrophic-regression tripwire — a "
+                         "wedged doorbell or spin-storm shows up as ~0x/"
+                         "hang; the shm WIN regime is taxed-syscall "
+                         "sandboxes and parallel cores, not necessarily "
+                         "this runner — see ROADMAP.md)")
     args = ap.parse_args(argv)
     only = args.only.split(",") if args.only else None
+    transports = args.transport.split(",") if args.transport else None
+    if args.assert_shm_floor is not None:
+        if transports is None:
+            transports = ["tcp", "uds", "shm"]
+        for need in ("tcp", "shm"):
+            if need not in transports:
+                ap.error(f"--assert-shm-floor needs {need!r} in --transport")
     rows = _raw_matrix(args.quick, clients_list=[args.clients],
                        shards_list=[args.shards], only=only)
     rows += _mux_matrix(args.quick, clients_list=[args.clients],
                         shards_list=[args.shards], only=only)
     rows += _cluster_matrix(args.quick, clients_list=[args.clients],
                             shards_list=[args.shards], only=only)
+    if transports:
+        # the singles case is the gate regime (per-op carrier cost), so
+        # it always runs alongside whatever --only selected
+        t_only = sorted(set(only or []) | {"singles"}) if only else None
+        rows += _transport_matrix(args.quick, clients_list=[args.clients],
+                                  shards_list=[args.shards],
+                                  transports=transports, only=t_only)
     mux_speedup = None
     cluster_speedup = None
     raw_speedup = None
+    shm_speedup = None
     for name, us, derived in rows:
         print(f"{name:44s} {us:10.2f} us/op  {derived}")
         if "/mux/cmds/" in name and "= " in derived:
@@ -511,6 +626,10 @@ def main(argv: List[str] | None = None) -> int:
             # the raw gate reads the small-command pipeline case: the
             # per-command pickle CPU regime the v4 codec exists to remove
             raw_speedup = _ratio_of(derived)
+        elif "/transport/singles/shm/" in name and "= " in derived:
+            # the shm tripwire reads the unpipelined-single case: pure
+            # per-op carrier cost, where a wedged ring shows up hardest
+            shm_speedup = _ratio_of(derived)
     if args.assert_speedup is not None:
         assert mux_speedup is not None and mux_speedup >= args.assert_speedup, (
             f"mux small-command speedup {mux_speedup} < required "
@@ -530,6 +649,12 @@ def main(argv: List[str] | None = None) -> int:
             f"{args.assert_raw_floor}")
         print(f"raw dialect floor OK: {raw_speedup:.2f}x >= "
               f"{args.assert_raw_floor}x")
+    if args.assert_shm_floor is not None:
+        assert shm_speedup is not None and shm_speedup >= args.assert_shm_floor, (
+            f"shm-vs-tcp unpipelined-single speedup {shm_speedup} < required "
+            f"{args.assert_shm_floor}")
+        print(f"shm transport floor OK: {shm_speedup:.2f}x >= "
+              f"{args.assert_shm_floor}x")
     return 0
 
 

@@ -72,9 +72,20 @@ claim, proven by ``tests/test_transparency.py``.
 
 Child processes are spawned as ``python -m repro.core.kvcluster
 --serve-shard``; each binds its server, reports ``KVSHARD <host>
-<port>`` on stdout, and serves until its stdin reaches EOF — the parent
-holds the write end, so shards can never outlive their supervisor, even
-if it is SIGKILLed.
+<port> [<endpoint-url> ...]`` on stdout, and serves until its stdin
+reaches EOF — the parent holds the write end, so shards can never
+outlive their supervisor, even if it is SIGKILLed.
+
+Transports (PR 6): each shard serves every carrier its ``KVServer``
+supports (TCP + Unix-domain + shm rings, see ``repro.core.transport``)
+and advertises the full endpoint list in the spawn handshake; the
+descriptor is version 2 with an ``"endpoints"`` key (one url list per
+shard) alongside the legacy ``"shards"`` host/port pairs, so old
+clients keep bootstrapping. ``ClusterClient(transport=...)`` pins one
+carrier for A/B runs; the default auto-selects per shard (shm > uds >
+tcp same-host, falling back down the list on connect failure). The
+parent removes a dead shard's stale uds rendezvous path on terminate,
+so ``restart_shard`` never trips over the corpse's socket file.
 """
 
 from __future__ import annotations
@@ -86,6 +97,7 @@ import threading
 from collections import deque
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
+from . import transport as _transport
 from .kvserver import KVClient, KVServer, _sendv
 from .kvstore import KVStore, Metrics, _ShardRouter, _debatch
 
@@ -110,6 +122,10 @@ class _ShardProc:
         self.index = index
         self.proc: Optional[subprocess.Popen] = None
         self.address: Optional[Tuple[str, int]] = None
+        #: every carrier the shard serves, as endpoint urls (PR 6); a
+        #: pre-endpoint child that reports only host/port degrades to
+        #: its tcp url, so mixed-version supervision keeps working
+        self.endpoints: List[str] = []
         self._stderr_tail: deque = deque(maxlen=200)
         self._spawn(host, port)
 
@@ -138,7 +154,7 @@ class _ShardProc:
         t.start()
         t.join(_SPAWN_TIMEOUT_S)
         words = line[0].split() if line and line[0] else []
-        if len(words) != 3 or words[0] != "KVSHARD":
+        if len(words) < 3 or words[0] != "KVSHARD":
             self.terminate()
             raise RuntimeError(
                 f"kv shard {self.index} failed to start "
@@ -147,6 +163,7 @@ class _ShardProc:
                 f"kv shard {self.index} did not report an address within "
                 f"{_SPAWN_TIMEOUT_S}s\n{self.stderr_tail()}")
         self.address = (words[1], int(words[2]))
+        self.endpoints = words[3:] or [f"tcp://{words[1]}:{words[2]}"]
 
     def _drain_stderr(self) -> None:
         # keep the pipe drained (a crashing child must not wedge writing
@@ -182,6 +199,28 @@ class _ShardProc:
             except subprocess.TimeoutExpired:
                 proc.kill()
                 proc.wait()
+        self._remove_stale_paths()
+
+    def _remove_stale_paths(self) -> None:
+        """Unlink the dead child's uds rendezvous socket (and its temp
+        dir). An orderly child removes them itself in ``KVServer.stop``;
+        this covers SIGKILL/crash so a respawned shard — or a client
+        walking the old descriptor — never trips over a stale path
+        (connecting to one fails with ECONNREFUSED, which the endpoint
+        fallback turns into a silent downgrade to tcp; removing the
+        corpse keeps the preference order honest)."""
+        for url in self.endpoints:
+            try:
+                ep = _transport.parse_endpoint(url)
+            except ValueError:
+                continue
+            if ep.scheme != "uds" or not ep.path:
+                continue
+            for path in (ep.path, os.path.dirname(ep.path)):
+                try:
+                    (os.rmdir if os.path.isdir(path) else os.unlink)(path)
+                except OSError:
+                    pass
 
 
 class KVCluster:
@@ -263,11 +302,21 @@ class KVCluster:
     def shard_addresses(self) -> List[Tuple[str, int]]:
         return [p.address for p in self._procs]
 
+    @property
+    def shard_endpoints(self) -> List[List[str]]:
+        """Per-shard endpoint urls, every carrier the shard serves."""
+        return [list(p.endpoints) for p in self._procs]
+
     def describe(self) -> Dict[str, Any]:
-        """The cluster descriptor served under :data:`DESCRIPTOR_KEY`."""
+        """The cluster descriptor served under :data:`DESCRIPTOR_KEY`.
+
+        Version 2 (PR 6): ``"endpoints"`` carries one url list per shard
+        (tcp/uds/shm); ``"shards"`` keeps the bare host/port pairs so
+        pre-endpoint clients bootstrap unchanged."""
         return {
-            "version": 1,
+            "version": 2,
             "shards": [list(p.address) for p in self._procs],
+            "endpoints": self.shard_endpoints,
             "n_shards": len(self._procs),
             "hash": "fnv1a-hashtag",
             "hash_seed": self.hash_seed,
@@ -276,7 +325,7 @@ class KVCluster:
     def client(self, **kwargs: Any) -> "ClusterClient":
         if not self._started:
             raise RuntimeError("cluster is not started")
-        return ClusterClient(shard_addresses=self.shard_addresses,
+        return ClusterClient(shard_addresses=self.shard_endpoints,
                              hash_seed=self.hash_seed, **kwargs)
 
     # -- supervision ---------------------------------------------------------
@@ -335,38 +384,46 @@ class ClusterClient(_ShardRouter):
     hints.
     """
 
-    def __init__(self, address: Optional[Tuple[str, int]] = None,
-                 shard_addresses: Optional[Sequence[Tuple[str, int]]] = None,
+    def __init__(self, address: Any = None,
+                 shard_addresses: Optional[Sequence[Any]] = None,
                  legacy_protocol: bool = False, hash_seed: int = 0,
-                 mux: bool = True, raw: bool = True):
+                 mux: bool = True, raw: bool = True,
+                 transport: Optional[str] = None):
         if shard_addresses is None:
             if address is None:
                 raise ValueError("need a control address or shard addresses")
-            boot = KVClient(tuple(address))
+            boot = KVClient(address)
             try:
                 desc = boot.get(DESCRIPTOR_KEY)
             finally:
                 boot.close()
             if not isinstance(desc, dict) or "shards" not in desc:
                 raise ConnectionError(
-                    f"{address[0]}:{address[1]} is not a cluster control "
-                    "endpoint (no descriptor; use KVClient for a plain "
-                    "KVServer)")
-            shard_addresses = [tuple(a) for a in desc["shards"]]
+                    f"{address!r} is not a cluster control endpoint (no "
+                    "descriptor; use KVClient for a plain KVServer)")
+            # v2 descriptors advertise per-shard endpoint url lists;
+            # v1 only has host/port pairs (tcp)
+            shard_addresses = (desc.get("endpoints")
+                               or [tuple(a) for a in desc["shards"]])
             hash_seed = desc.get("hash_seed", hash_seed)
         if not shard_addresses:
             raise ValueError("need at least one shard address")
         self.hash_seed = hash_seed
+        self.transport = transport
         # shards at the same address share ONE KVClient (hence one mux
-        # connection): their scatter sub-batches coalesce into one frame
-        by_addr: Dict[Tuple[str, int], KVClient] = {}
+        # connection): their scatter sub-batches coalesce into one
+        # frame. Co-residency is keyed on the NORMALIZED endpoint set,
+        # so two entries naming the same server through any address
+        # shape still share a client.
+        by_addr: Dict[Tuple[str, ...], KVClient] = {}
         self.shards = []
         for a in shard_addresses:
-            a = tuple(a)
-            if a not in by_addr:
-                by_addr[a] = KVClient(a, legacy_protocol=legacy_protocol,
-                                      mux=mux, raw=raw)
-            self.shards.append(by_addr[a])
+            eps = _transport.normalize_endpoints(a)
+            key = tuple(sorted(e.url for e in eps))
+            if key not in by_addr:
+                by_addr[key] = KVClient(eps, legacy_protocol=legacy_protocol,
+                                        mux=mux, raw=raw, transport=transport)
+            self.shards.append(by_addr[key])
         # client-side counters only (server-side metrics live per shard and
         # are readable via info()): fanout records scatter widths, which no
         # single shard can observe
@@ -489,12 +546,18 @@ class ClusterClient(_ShardRouter):
                 c.close()
 
 
-def connect(address: Tuple[str, int],
-            legacy_protocol: bool = False) -> Union[KVClient, "ClusterClient"]:
+def connect(address: Any, legacy_protocol: bool = False,
+            transport: Optional[str] = None
+            ) -> Union[KVClient, "ClusterClient"]:
     """Bootstrap from one address: a cluster control endpoint answers the
     descriptor GET and yields a ``ClusterClient``; a plain ``KVServer``
-    answers None and the already-open ``KVClient`` is returned as-is."""
-    client = KVClient(tuple(address), legacy_protocol=legacy_protocol)
+    answers None and the already-open ``KVClient`` is returned as-is.
+    ``address`` takes any shape ``KVClient`` does — a ``(host, port)``
+    tuple, an endpoint url, or a url list. ``transport`` pins the SHARD
+    carriers; the bootstrap GET itself uses whatever ``address``
+    advertises (a bare control tuple is tcp-only, and pinning one
+    round trip buys nothing)."""
+    client = KVClient(address, legacy_protocol=legacy_protocol)
     try:
         desc = client.get(DESCRIPTOR_KEY)
     except Exception:
@@ -503,9 +566,16 @@ def connect(address: Tuple[str, int],
     if isinstance(desc, dict) and "shards" in desc:
         client.close()
         return ClusterClient(
-            shard_addresses=[tuple(a) for a in desc["shards"]],
+            shard_addresses=(desc.get("endpoints")
+                             or [tuple(a) for a in desc["shards"]]),
             legacy_protocol=legacy_protocol,
-            hash_seed=desc.get("hash_seed", 0))
+            hash_seed=desc.get("hash_seed", 0),
+            transport=transport)
+    if transport is not None:
+        # plain server: re-open with the pin (raises if unadvertised)
+        client.close()
+        return KVClient(address, legacy_protocol=legacy_protocol,
+                        transport=transport)
     return client
 
 
@@ -517,7 +587,10 @@ def connect(address: Tuple[str, int],
 def _serve_shard(host: str, port: int, name: str) -> int:
     server = KVServer(KVStore(name=name), host=host, port=port)
     server.start()
-    sys.stdout.write(f"KVSHARD {server.address[0]} {server.address[1]}\n")
+    # host/port first (pre-endpoint parents read exactly those), then
+    # every endpoint url the server actually serves
+    sys.stdout.write(f"KVSHARD {server.address[0]} {server.address[1]} "
+                     + " ".join(server.endpoints) + "\n")
     sys.stdout.flush()
     try:
         sys.stdin.read()  # parent holds our stdin; EOF means shut down

@@ -118,7 +118,25 @@ leased body is recycled right after decode whenever the decoded object
 cannot alias it (legacy frames are copied by unpickling; multi-part
 frames with no out-of-band parts likewise); bodies carrying out-of-band
 buffers are never pooled, because the decoded values reference them
-zero-copy.
+zero-copy. The pool is bounded (buffer count and per-buffer size) and
+tracks its retained-bytes high-water mark, so a burst of huge frames
+can neither pin megabytes on an idle connection nor hide that it tried.
+
+Transports (PR 6): everything above is carrier-independent. The same
+v1-v4 frames flow over three interchangeable carriers described by
+self-describing endpoint urls (see ``repro.core.transport``):
+``tcp://host:port`` (cross-host), ``uds:///path`` (same-host Unix
+stream), and ``shm:///path`` (same-host shared-memory SPSC rings with
+spin-then-doorbell wakeup — zero syscalls per frame on the hot path).
+``KVServer`` listens on TCP and a Unix socket simultaneously and
+advertises every endpoint; a connection on the Unix socket that opens
+with the ring magic word upgrades to shm (the rendezvous socket then
+carries only doorbell bytes and EOF). Clients auto-select the cheapest
+reachable carrier (shm > uds > tcp) with connect-time fallback, or pin
+one via ``transport=`` for A/B runs; plain ``(host, port)`` addresses
+still mean TCP everywhere. ``RingConn`` duck-types the socket surface,
+so the framing, mux, reader, and server code paths are IDENTICAL on
+every carrier — only the bytes' vehicle changes.
 """
 
 from __future__ import annotations
@@ -134,6 +152,7 @@ from collections import deque
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from . import serialization
+from . import transport as _transport
 from .kvstore import KVStore, Pipeline, _blocks
 
 __all__ = ["KVServer", "KVClient"]
@@ -154,8 +173,21 @@ _PIPELINE_CHUNK_BYTES = 512 * 1024
 _PIPELINE_CHUNK_BYTES_LEGACY = 48 * 1024   # legacy sockets keep OS defaults
 
 
-def _tune(sock: socket.socket) -> None:
-    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+#: socket families carrying TCP underneath (the only ones where
+#: IPPROTO_TCP options are legal — AF_UNIX raises OSError on them)
+_INET_FAMILIES = tuple(
+    f for f in (socket.AF_INET, getattr(socket, "AF_INET6", None))
+    if f is not None)
+
+
+def _tune(sock: Any) -> None:
+    """Transport-aware socket tuning for the non-legacy dialects:
+    TCP_NODELAY only where there IS a TCP underneath (AF_UNIX sockets
+    raise on IPPROTO_TCP options; ring connections have no kernel socket
+    on the data path at all), deep buffers wherever the carrier accepts
+    them (rings no-op — their buffering is the ring itself)."""
+    if getattr(sock, "family", None) in _INET_FAMILIES:
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
     try:
         sock.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, _SOCK_BUF)
         sock.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, _SOCK_BUF)
@@ -274,16 +306,30 @@ class _BufferPool:
     decoded object cannot alias them (see ``_recv_frames``). Never shared
     across threads: each server handler and each client thread owns one,
     so acquire/release need no lock.
+
+    Retention is bounded on BOTH axes — at most ``_MAX_BUFS`` free
+    buffers, each at most ``_MAX_BUF_BYTES`` (oversized buffers are
+    dropped on release, so a burst of huge frames cannot pin its buffers
+    on an idle connection forever) — and audited: ``high_water`` is the
+    max total free bytes ever retained, so tests (and a curious
+    operator) can see the worst case a workload actually reached instead
+    of trusting the caps.
     """
 
-    __slots__ = ("_free",)
+    __slots__ = ("_free", "_retained", "high_water")
 
-    #: keep at most this many free buffers / bytes per connection
+    #: keep at most this many free buffers / bytes-per-buffer
     _MAX_BUFS = 8
     _MAX_BUF_BYTES = 1 << 18
 
     def __init__(self) -> None:
         self._free: List[bytearray] = []
+        self._retained = 0      # total free bytes currently held
+        self.high_water = 0     # max ever _retained (see class docstring)
+
+    @property
+    def retained_bytes(self) -> int:
+        return self._retained
 
     def acquire(self, n: int) -> bytearray:
         """A buffer with capacity >= n (possibly larger — callers slice a
@@ -295,12 +341,17 @@ class _BufferPool:
         if best >= 0 and len(self._free[best]) <= max(4 * n, 1024):
             # best fit, unless it over-allocates grossly (a segment-sized
             # buffer must not get pinned serving 4-byte headers)
-            return self._free.pop(best)
+            buf = self._free.pop(best)
+            self._retained -= len(buf)
+            return buf
         return bytearray(n)
 
     def release(self, buf: bytearray) -> None:
         if len(self._free) < self._MAX_BUFS and len(buf) <= self._MAX_BUF_BYTES:
             self._free.append(buf)
+            self._retained += len(buf)
+            if self._retained > self.high_water:
+                self.high_water = self._retained
 
 
 class _ConnReader:
@@ -601,9 +652,46 @@ class _Handler(socketserver.BaseRequestHandler):
     parked-command completions, which the v3 contract already allows;
     untagged (v1/v2) responses are never corked, and any corked output is
     flushed before an untagged response is written (those clients expect
-    strict request/response alternation)."""
+    strict request/response alternation).
+
+    **Transport upgrade (shm).** A connection arriving on the server's
+    Unix socket MAY open with the ring magic word
+    (``transport.SHM_MAGIC`` — an impossible frame header in every
+    dialect) instead of a frame: the handler peeks 4 bytes (one extra
+    syscall, paid once per UDS accept, never on TCP), attaches the
+    client's shared-memory segment, and swaps ``self.request`` for the
+    :class:`repro.core.transport.RingConn` — after which THIS EXACT LOOP
+    runs unchanged, reading frames out of shared memory. The ring is
+    tracked on the server so ``KVServer.stop()`` can wake a parked
+    handler and release the mapping."""
 
     def handle(self) -> None:
+        ring = None
+        if (getattr(self.server, "allow_shm", False)
+                and getattr(self.request, "family", None)
+                == getattr(socket, "AF_UNIX", None)):
+            try:
+                peek = self.request.recv(4, socket.MSG_PEEK
+                                         | socket.MSG_WAITALL)
+            except OSError:
+                return
+            if len(peek) < 4:
+                return  # EOF before a full header: nothing to serve
+            if peek == _transport.SHM_MAGIC:
+                try:
+                    ring = _transport.accept_ring(self.request)
+                except (OSError, ConnectionError):
+                    return  # client sees EOF = upgrade rejected
+                self.request = ring
+                self.server.track_ring(ring)  # type: ignore[attr-defined]
+        try:
+            self._serve_connection()
+        finally:
+            if ring is not None:
+                self.server.untrack_ring(ring)  # type: ignore[attr-defined]
+                ring.close()
+
+    def _serve_connection(self) -> None:
         store: KVStore = self.server.store  # type: ignore[attr-defined]
         table = getattr(self.server, "raw_dispatch", None)
         if table is None:  # bare _Server without a KVServer wrapper
@@ -774,37 +862,151 @@ def _request_blocks(request: Any) -> bool:
 class _Server(socketserver.ThreadingTCPServer):
     allow_reuse_address = True
     daemon_threads = True
+    allow_shm = False  # rings rendezvous on the Unix listener only
+
+
+if hasattr(socketserver, "ThreadingUnixStreamServer"):
+    class _UnixServer(socketserver.ThreadingUnixStreamServer):
+        """Unix-socket listener sharing :class:`_Handler` with the TCP
+        server — and the shm rendezvous listener: with ``allow_shm``,
+        magic-word connections upgrade to rings (see ``_Handler``),
+        tracked here so ``KVServer.stop()`` can wake parked handlers and
+        release the mappings."""
+
+        daemon_threads = True
+        allow_shm = False
+
+        def __init__(self, *args: Any, **kwargs: Any):
+            self._rings: set = set()
+            self._rings_lock = threading.Lock()
+            super().__init__(*args, **kwargs)
+
+        def track_ring(self, ring: Any) -> None:
+            with self._rings_lock:
+                self._rings.add(ring)
+
+        def untrack_ring(self, ring: Any) -> None:
+            with self._rings_lock:
+                self._rings.discard(ring)
+
+        def close_rings(self) -> None:
+            with self._rings_lock:
+                rings, self._rings = list(self._rings), set()
+            for r in rings:
+                r.close()
+else:  # pragma: no cover - platform without AF_UNIX
+    _UnixServer = None  # type: ignore[assignment,misc]
 
 
 class KVServer:
-    """Serve a KVStore over TCP. Use as a context manager or start()/stop()."""
+    """Serve a KVStore over every same-host carrier at once.
+
+    Listens on TCP and (where the platform supports it) a Unix-domain
+    socket simultaneously — the SAME store, dispatch table, and handler
+    behind both — with the Unix socket doubling as the shared-memory
+    ring rendezvous (``shm://``). ``endpoints`` advertises all carriers
+    as self-describing urls; ``address`` stays the ``(host, port)``
+    tuple, so existing callers (and old clients that only understand
+    tuples) keep working over TCP unchanged.
+
+    The Unix socket binds at a FRESH per-instance path under a private
+    ``tempfile.mkdtemp`` directory, unlinked on ``stop()`` — a
+    (re)spawned server never contends for a stale path, so there is no
+    EADDRINUSE analogue to race on restart. Use as a context manager or
+    ``start()``/``stop()``.
+    """
 
     def __init__(self, store: Optional[KVStore] = None,
-                 host: str = "127.0.0.1", port: int = 0):
+                 host: str = "127.0.0.1", port: int = 0,
+                 uds: bool = True, shm: bool = True):
         self.store = store or KVStore(name="kvserver")
         self._server = _Server((host, port), _Handler)
         self._server.store = self.store  # type: ignore[attr-defined]
         # v4 fast path: cid -> bound method, built once for every handler
         self._server.raw_dispatch = _build_dispatch(  # type: ignore[attr-defined]
             self.store)
+        self._uds_server: Optional[Any] = None
+        self._uds_path: Optional[str] = None
+        self._uds_dir: Optional[str] = None
+        self._shm_enabled = False
+        if uds and _UnixServer is not None:
+            import tempfile
+            self._uds_dir = tempfile.mkdtemp(prefix="repro-kv-")
+            self._uds_path = os.path.join(self._uds_dir, "kv.sock")
+            try:
+                usrv = _UnixServer(self._uds_path, _Handler)
+            except OSError:
+                self._remove_uds_path()  # pathological tmpdir: TCP-only
+            else:
+                usrv.store = self.store  # type: ignore[attr-defined]
+                usrv.raw_dispatch = (  # type: ignore[attr-defined]
+                    self._server.raw_dispatch)
+                self._shm_enabled = shm and _transport.ring_supported()
+                usrv.allow_shm = self._shm_enabled
+                self._uds_server = usrv
         self._thread: Optional[threading.Thread] = None
+        self._uds_thread: Optional[threading.Thread] = None
 
     @property
     def address(self) -> Tuple[str, int]:
         return self._server.server_address  # type: ignore[return-value]
+
+    @property
+    def endpoints(self) -> List[str]:
+        """Every carrier this server answers on, as endpoint urls in
+        advertisement order (tcp first — reachable from anywhere — then
+        the same-host carriers). Feed the whole list to ``KVClient`` to
+        let it pick; cheapest-first selection is the client's job."""
+        host, port = self.address[0], self.address[1]
+        eps = [f"tcp://{host}:{port}"]
+        if self._uds_server is not None and self._uds_path:
+            eps.append(f"uds://{self._uds_path}")
+            if self._shm_enabled:
+                eps.append(f"shm://{self._uds_path}")
+        return eps
 
     def start(self) -> "KVServer":
         self._thread = threading.Thread(
             target=self._server.serve_forever, kwargs={"poll_interval": 0.05},
             daemon=True, name="kvserver")
         self._thread.start()
+        if self._uds_server is not None:
+            self._uds_thread = threading.Thread(
+                target=self._uds_server.serve_forever,
+                kwargs={"poll_interval": 0.05},
+                daemon=True, name="kvserver-uds")
+            self._uds_thread.start()
         return self
 
     def stop(self) -> None:
         self._server.shutdown()
         self._server.server_close()
+        if self._uds_server is not None:
+            self._uds_server.shutdown()
+            self._uds_server.server_close()
+            # wake handlers parked in ring reads and release the mappings
+            self._uds_server.close_rings()
         if self._thread is not None:
             self._thread.join(timeout=5)
+        if self._uds_thread is not None:
+            self._uds_thread.join(timeout=5)
+        self._remove_uds_path()
+
+    def _remove_uds_path(self) -> None:
+        """Unlink the socket file and its private directory (idempotent;
+        also the failure-path cleanup when the Unix bind never
+        happened)."""
+        if self._uds_path is not None:
+            try:
+                os.unlink(self._uds_path)
+            except OSError:
+                pass
+        if self._uds_dir is not None:
+            try:
+                os.rmdir(self._uds_dir)
+            except OSError:
+                pass
+        self._uds_path = self._uds_dir = None
 
     def __enter__(self) -> "KVServer":
         return self.start()
@@ -952,13 +1154,22 @@ class _SockMux:
     can no longer arrive.
     """
 
-    def __init__(self, address: Tuple[str, int], name: str = "mux",
+    def __init__(self, address: Any, name: str = "mux",
                  raw: bool = True):
-        self.address = address
+        # ``address`` is anything normalize_endpoints accepts — a legacy
+        # (host, port) tuple, an endpoint url, or a PRE-ORDERED Endpoint
+        # list (what KVClient hands us): first carrier that answers wins
+        if (isinstance(address, list) and address
+                and isinstance(address[0], _transport.Endpoint)):
+            eps = address
+        else:
+            eps = _transport.order_endpoints(
+                _transport.normalize_endpoints(address))
         self.name = name
         self.raw = raw  # v4 submit-time encoding (False = pickle v3 A/B)
         self.pid = _CUR_PID  # a forked child must not share the socket
-        self.sock = socket.create_connection(address)
+        self.sock, self.endpoint = _transport.connect_endpoints(eps)
+        self.address = self.endpoint.url   # diagnostics only
         _tune(self.sock)
         self._qlock = threading.Lock()   # queue, inflight, rid, reader baton
         self._wlock = threading.Lock()   # flush leadership (held across send)
@@ -1284,12 +1495,29 @@ class KVClient:
     ``legacy_protocol=True`` speaks the seed's v1 wire dialect (one
     in-band pickled frame per command) for A/B benchmarking and implies
     ``mux=False`` and ``raw=False``.
+
+    **Transports.** ``address`` accepts the legacy ``(host, port)``
+    tuple (plain TCP, unchanged), one endpoint url, or a list of urls —
+    typically ``KVServer.endpoints`` or a cluster descriptor's per-shard
+    endpoint list. With several carriers advertised the client
+    auto-selects the cheapest reachable one per connection
+    (shm > uds > tcp, falling back down the list if a connect fails);
+    ``transport="tcp"|"uds"|"shm"`` pins one carrier for A/B runs. Lane
+    policy under auto-selection: the main lane takes the ring (it is the
+    latency-critical path), while blocking-lane connections — which park
+    server-side for long stretches — prefer kernel sockets, whose
+    sleeping is free, over dedicating a ring pair to a parked command.
     """
 
-    def __init__(self, address: Tuple[str, int],
+    def __init__(self, address: Any,
                  legacy_protocol: bool = False, mux: bool = True,
-                 raw: bool = True):
-        self.address = address
+                 raw: bool = True, transport: Optional[str] = None):
+        self.endpoints = _transport.normalize_endpoints(address)
+        self.transport = transport
+        # .address keeps its historical (host, port) meaning wherever a
+        # TCP carrier exists (old callers index into it)
+        tcp = next((e for e in self.endpoints if e.scheme == "tcp"), None)
+        self.address = (tcp.host, tcp.port) if tcp is not None else address
         self.legacy_protocol = legacy_protocol
         self.mux_enabled = mux and not legacy_protocol
         self.raw_enabled = raw and not legacy_protocol
@@ -1302,7 +1530,21 @@ class KVClient:
         self._gen = 0  # bumped by close(): invalidates thread-local socks
         self._muxes: Dict[str, _SockMux] = {}   # lane -> connection
         self._mux_lock = threading.Lock()
-        self.name = f"kvclient@{address[0]}:{address[1]}"
+        self.name = f"kvclient@{self.endpoints[0].url}"
+
+    # -- transports ----------------------------------------------------------
+
+    def _ordered_endpoints(self, lane: str = "main"
+                           ) -> List[_transport.Endpoint]:
+        """Connection-attempt order for one lane: the pinned transport,
+        or cheapest-first auto-selection — except that auto mode keeps
+        blocking lanes off the rings (see class docstring)."""
+        eps = _transport.order_endpoints(self.endpoints, self.transport)
+        if lane != "main" and self.transport is None:
+            socks = [e for e in eps if e.scheme != "shm"]
+            if socks:
+                eps = socks
+        return eps
 
     # -- mux lanes -----------------------------------------------------------
 
@@ -1319,8 +1561,8 @@ class KVClient:
                 return m
             if m is not None and m.pid == _CUR_PID:
                 m.close()
-            m = _SockMux(self.address,
-                         name=f"{lane}@{self.address[0]}:{self.address[1]}",
+            m = _SockMux(self._ordered_endpoints(lane),
+                         name=f"{lane}@{self.endpoints[0].url}",
                          raw=self.raw_enabled)
             self._muxes[lane] = m
             return m
@@ -1341,16 +1583,25 @@ class KVClient:
         sock = getattr(self._tls, "sock", None)
         if sock is not None and getattr(self._tls, "gen", -1) == self._gen:
             return sock
-        sock = socket.create_connection(self.address)
+        if self.legacy_protocol and self.transport is None:
+            # the seed client rides the seed carrier: TCP when it is
+            # advertised (A/B baselines must measure the seed transport)
+            eps = ([e for e in self.endpoints if e.scheme == "tcp"]
+                   or self._ordered_endpoints())
+        else:
+            eps = self._ordered_endpoints()
+        sock, _ = _transport.connect_endpoints(eps)
         if self.legacy_protocol:
             # seed client behavior: NODELAY only, default buffers
-            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            if getattr(sock, "family", None) in _INET_FAMILIES:
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             self._tls.chunk = _PIPELINE_CHUNK_BYTES_LEGACY
         else:
             _tune(sock)
             # The chunked-flush deadlock bound assumes the send buffer
-            # took our sizing; derive the limit from what the kernel
-            # actually granted in case the platform capped it.
+            # took our sizing; derive the limit from what the carrier
+            # actually granted in case the platform capped it (a ring
+            # answers with its capacity, which the default chunk fits).
             sndbuf = sock.getsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF)
             self._tls.chunk = max(
                 _PIPELINE_CHUNK_BYTES_LEGACY,

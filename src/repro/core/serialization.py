@@ -69,6 +69,14 @@ length-prefixed concatenations of independently encoded entries, so the
 I/O mux's group commit can merge pre-encoded submissions by byte
 concatenation (``encode_batch_entries``) without re-encoding — and
 without pickling — under the flush lock.
+
+Every dialect above is **transport-independent** (PR 6): the same v1-v4
+byte frames travel unchanged over a TCP socket, a Unix-domain socket, or
+a shared-memory SPSC ring (``repro.core.transport``). Nothing in this
+module knows which carrier moves the bytes — the framing contract is
+"a reliable ordered byte stream", and every carrier provides exactly
+that, which is what lets ``KVClient(transport=...)`` A/B carriers
+without touching the codec or the server dispatch path.
 """
 
 from __future__ import annotations

@@ -1,0 +1,896 @@
+"""Pluggable, locality-aware endpoints for the KV serving plane.
+
+The paper's transparency thesis (and Faabric's two-tier state model)
+says local and remote resources must be reachable through identical
+operations: messaging across hosts, shared memory within one. This
+module gives the wire stack that locality axis without touching the
+frame formats — every v1-v4 dialect (see ``repro.core.kvserver``) is
+byte-identical over every transport below; only the byte *carrier*
+changes.
+
+Endpoint scheme (self-describing, carried in the cluster descriptor and
+the ``KVSHARD`` spawn handshake)::
+
+    tcp://host:port        cross-host TCP (the seed transport)
+    uds:///path/to.sock    same-host Unix-domain stream socket
+    shm:///path/to.sock    same-host shared-memory rings; the path names
+                           the Unix-domain *rendezvous* socket used for
+                           the attach handshake and as the doorbell
+                           channel — the rings themselves are anonymous
+                           per-connection POSIX shared-memory segments
+                           created by the client
+
+Old ``(host, port)`` tuples keep parsing everywhere an endpoint is
+accepted (they mean ``tcp://host:port``), so pre-endpoint descriptors
+and call sites interop unchanged. Preference order for auto-selection
+is ``shm > uds > tcp`` — the cheapest transport that can possibly
+reach the server wins, with connect-time fallback down the list.
+
+Shared-memory ring transport
+----------------------------
+
+One POSIX shared-memory segment per connection holds TWO SPSC byte
+rings (client->server and server->client). Layout of the segment
+(u32 little-endian control words, each on its own 64-byte cache line so
+producer and consumer never write-share a line)::
+
+    offset   0: capacity      (per ring, power of two; set by creator)
+    offset  64: c2s tail      (free-running u32; written by client)
+    offset 128: c2s head      (free-running u32; written by server)
+    offset 192: c2s sleeping  (server parks flag; see doorbell protocol)
+    offset 256: s2c tail      (written by server)
+    offset 320: s2c head      (written by client)
+    offset 384: s2c sleeping  (client parks flag)
+    offset 512: c2s data[capacity]
+    offset 512+capacity: s2c data[capacity]
+
+Indices are free-running u32s; ``avail = (tail - head) & 0xFFFFFFFF``
+and ``pos = index % capacity`` (capacity is a power of two, so index
+wraparound at 2^32 is position-continuous). Single-producer/single-
+consumer per ring: the producer writes bytes then advances ``tail``,
+the consumer reads then advances ``head`` — aligned 4-byte stores are
+atomic on every platform this targets, and each control word has
+exactly one writer.
+
+**Spin-then-doorbell wakeup.** The hot path does ZERO syscalls per
+frame: a send is a memcpy into the ring plus one flag load, a receive
+is a bounded spin on ``tail`` plus a memcpy out. Only when a consumer
+exhausts its spin budget does it park: it stores 1 into its ``sleeping``
+word, re-checks ``tail`` (so a producer that advanced the ring before
+seeing the flag is never missed), and blocks in ``recv(1)`` on the
+rendezvous socket — the *doorbell*. A producer that observes
+``sleeping == 1`` after advancing ``tail`` clears the flag and writes
+one byte to the socket. The doorbell ``recv`` uses a short timeout and
+re-checks the ring on expiry, which converts the residual store/load
+reordering race of the flag protocol (Python has no memory fences) into
+a bounded-latency retry instead of a lost wakeup, and doubles as the
+liveness probe: a dead peer's socket EOF wakes the consumer with a
+``ConnectionError`` instead of a hang. Stale doorbell bytes (flag races
+send at most one extra per park cycle) just cause one spurious re-check.
+
+The rendezvous socket carries ONLY the attach handshake, doorbell
+bytes, and EOF — never frames — so its per-byte syscall cost is paid
+only when a side actually sleeps. Ring teardown: the client creates and
+unlinks the segment (its process-exit resource tracker covers abnormal
+death); the server attaches, unregisters the mapping from *its*
+resource tracker (attach registers too on CPython <= 3.12, which would
+otherwise unlink the live segment when a shard exits), and only closes
+its mapping.
+
+Backpressure: a producer facing a full ring spins briefly then sleeps
+in escalating microsleeps until the consumer drains (bounded by the
+consumer's progress, surfaced as ``ConnectionError`` if the connection
+is torn down mid-wait). A frame larger than the ring streams through it
+chunk-wise — the non-transactional pipeline chunk bound
+(``kvserver._PIPELINE_CHUNK_BYTES``) stays below the default capacity,
+preserving the bidirectional-bulk deadlock invariant the TCP path
+documents.
+
+``RingConn`` duck-types the small slice of the ``socket.socket``
+surface the framing layer uses (``sendmsg``/``sendall``/``recv_into``/
+``shutdown``/``close``/``getsockopt``), so ``_sendv``, ``_ConnReader``,
+the server handler, and the client mux run UNCHANGED over rings — the
+transport really is pluggable underneath the dialects. Like the mux,
+ring connections are pid-guarded: a forked child using an inherited
+ring raises ``ConnectionError`` instead of corrupting the parent's SPSC
+invariants.
+"""
+
+from __future__ import annotations
+
+import os
+import socket
+import struct
+import threading
+import time
+from typing import Any, List, Optional, Sequence, Tuple, Union
+
+try:  # POSIX shared memory (absent only on exotic builds)
+    from multiprocessing import shared_memory as _shm_mod
+except ImportError:  # pragma: no cover - platform without _posixshmem
+    _shm_mod = None
+
+__all__ = [
+    "Endpoint", "parse_endpoint", "normalize_endpoints", "order_endpoints",
+    "connect_endpoints", "RingConn", "create_ring", "accept_ring",
+    "SHM_MAGIC", "ring_supported", "uds_supported",
+]
+
+# Cached pid for the fork guards (os.getpid() is a real syscall — tens
+# of microseconds under syscall-filtering sandboxes — and the guard runs
+# per operation). register_at_fork keeps it honest in forked children.
+_CUR_PID = os.getpid()
+
+
+def _refresh_pid() -> None:
+    global _CUR_PID
+    _CUR_PID = os.getpid()
+
+
+if hasattr(os, "register_at_fork"):
+    os.register_at_fork(after_in_child=_refresh_pid)
+
+
+def uds_supported() -> bool:
+    return hasattr(socket, "AF_UNIX")
+
+
+def ring_supported() -> bool:
+    return _shm_mod is not None and uds_supported()
+
+
+# ---------------------------------------------------------------------------
+# Endpoints
+# ---------------------------------------------------------------------------
+
+#: auto-selection preference: lower sorts first (cheapest viable carrier)
+_SCHEME_PREFERENCE = {"shm": 0, "uds": 1, "tcp": 2}
+
+#: connect timeout for the shm attach handshake ack
+_HANDSHAKE_TIMEOUT_S = 10.0
+
+
+class Endpoint:
+    """One parsed transport endpoint. ``scheme`` is ``tcp``/``uds``/
+    ``shm``; ``host``/``port`` are set for tcp, ``path`` for uds/shm
+    (the rendezvous socket path — see module docstring)."""
+
+    __slots__ = ("scheme", "host", "port", "path")
+
+    def __init__(self, scheme: str, host: str = "", port: int = 0,
+                 path: str = ""):
+        if scheme not in _SCHEME_PREFERENCE:
+            raise ValueError(f"unknown endpoint scheme {scheme!r}")
+        self.scheme = scheme
+        self.host = host
+        self.port = int(port)
+        self.path = path
+
+    @property
+    def url(self) -> str:
+        if self.scheme == "tcp":
+            return f"tcp://{self.host}:{self.port}"
+        return f"{self.scheme}://{self.path}"
+
+    @property
+    def preference(self) -> int:
+        return _SCHEME_PREFERENCE[self.scheme]
+
+    def __repr__(self) -> str:
+        return f"Endpoint({self.url!r})"
+
+    def __eq__(self, other: Any) -> bool:
+        return isinstance(other, Endpoint) and self.url == other.url
+
+    def __hash__(self) -> int:
+        return hash(self.url)
+
+    # -- connection -----------------------------------------------------------
+
+    def connect(self, ring_capacity: Optional[int] = None) -> Any:
+        """Open this endpoint: a connected ``socket.socket`` for
+        tcp/uds, a :class:`RingConn` for shm."""
+        if self.scheme == "tcp":
+            return socket.create_connection((self.host, self.port))
+        if not uds_supported():  # pragma: no cover - non-POSIX
+            raise OSError(f"{self.url}: AF_UNIX unsupported on this platform")
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        try:
+            sock.connect(self.path)
+        except OSError:
+            sock.close()
+            raise
+        if self.scheme == "uds":
+            return sock
+        try:
+            return create_ring(sock, capacity=ring_capacity
+                               or _DEFAULT_RING_CAPACITY)
+        except BaseException:
+            sock.close()
+            raise
+
+
+def parse_endpoint(spec: Union[str, Endpoint, Sequence[Any]]) -> Endpoint:
+    """Parse one endpoint spec: a ``scheme://...`` string, an existing
+    :class:`Endpoint`, or a legacy ``(host, port)`` address tuple (which
+    means ``tcp://host:port`` — pre-endpoint descriptors keep working)."""
+    if isinstance(spec, Endpoint):
+        return spec
+    if isinstance(spec, (tuple, list)):
+        if len(spec) == 2 and isinstance(spec[1], int):
+            return Endpoint("tcp", host=str(spec[0]), port=spec[1])
+        raise ValueError(f"not an endpoint: {spec!r}")
+    if not isinstance(spec, str):
+        raise ValueError(f"not an endpoint: {spec!r}")
+    scheme, sep, rest = spec.partition("://")
+    if not sep:
+        raise ValueError(f"endpoint {spec!r} has no scheme:// prefix")
+    if scheme == "tcp":
+        host, sep, port = rest.rpartition(":")
+        if not sep or not port.isdigit():
+            raise ValueError(f"tcp endpoint {spec!r} is not host:port")
+        return Endpoint("tcp", host=host, port=int(port))
+    if scheme in ("uds", "shm"):
+        if not rest:
+            raise ValueError(f"{scheme} endpoint {spec!r} has no path")
+        return Endpoint(scheme, path=rest)
+    raise ValueError(f"unknown endpoint scheme {scheme!r} in {spec!r}")
+
+
+def normalize_endpoints(
+        address: Union[str, Endpoint, Sequence[Any]]) -> List[Endpoint]:
+    """Normalize every accepted address shape to an endpoint list: one
+    ``(host, port)`` tuple, one url string, one Endpoint, or a sequence
+    of any of those."""
+    if isinstance(address, (str, Endpoint)):
+        return [parse_endpoint(address)]
+    if isinstance(address, (tuple, list)):
+        if len(address) == 2 and isinstance(address[1], int):
+            return [parse_endpoint(address)]
+        eps = [parse_endpoint(a) for a in address]
+        if not eps:
+            raise ValueError("empty endpoint list")
+        return eps
+    raise ValueError(f"not an address or endpoint list: {address!r}")
+
+
+def order_endpoints(endpoints: Sequence[Endpoint],
+                    transport: Optional[str] = None) -> List[Endpoint]:
+    """Preference-order ``endpoints`` for connection attempts:
+    ``transport=None`` auto-selects (shm > uds > tcp — cheapest local
+    carrier first, callers fall back down the list on connect failure);
+    naming a scheme pins the choice for A/B runs and raises if the
+    server never advertised it. Unsupported-on-this-platform schemes are
+    dropped."""
+    eps = [e for e in endpoints
+           if (e.scheme == "tcp")
+           or (e.scheme == "uds" and uds_supported())
+           or (e.scheme == "shm" and ring_supported())]
+    if transport is not None:
+        eps = [e for e in eps if e.scheme == transport]
+        if not eps:
+            advertised = sorted({e.scheme for e in endpoints})
+            raise ValueError(
+                f"transport {transport!r} not available among advertised "
+                f"endpoints {advertised} (or unsupported on this platform)")
+    else:
+        eps = sorted(eps, key=lambda e: e.preference)
+    if not eps:
+        raise ValueError("no usable endpoint")
+    return eps
+
+
+def connect_endpoints(endpoints: Sequence[Endpoint],
+                      ring_capacity: Optional[int] = None
+                      ) -> Tuple[Any, Endpoint]:
+    """Connect to the first endpoint in (already-ordered) ``endpoints``
+    that answers, falling back down the list on OS-level failure —
+    a stale uds path or rejected shm upgrade degrades to the next
+    carrier instead of failing the client. Returns ``(conn, endpoint)``;
+    raises the last error if none answered."""
+    last: Optional[BaseException] = None
+    for ep in endpoints:
+        try:
+            return ep.connect(ring_capacity=ring_capacity), ep
+        except (OSError, ConnectionError) as exc:
+            last = exc
+    raise ConnectionError(
+        f"no reachable endpoint among {[e.url for e in endpoints]}: "
+        f"{last!r}")
+
+
+# ---------------------------------------------------------------------------
+# Shared-memory SPSC rings
+# ---------------------------------------------------------------------------
+
+_U32 = struct.Struct("<I")
+
+#: handshake word a client opens an shm upgrade with. Deliberately an
+#: IMPOSSIBLE frame header in every dialect: MSB + bit30 + bit29 set
+#: with nparts 0xBEEF01 > kvserver._MAX_PARTS, so no legal v1-v4 frame
+#: ever starts with these four bytes and the server's one-time peek can
+#: never misclassify a real client.
+SHM_MAGIC = struct.pack("!I", 0xE0BEEF01)
+
+_DEFAULT_RING_CAPACITY = 1 << 20   # per direction; power of two
+_MAX_RING_CAPACITY = 1 << 26
+_DATA_OFFSET = 512
+_OFF_CAPACITY = 0
+# (tail, head, sleeping) control-word offsets per direction
+_C2S = (64, 128, 192)
+_S2C = (256, 320, 384)
+
+#: consumer spin budget before yielding (~a hundred µs of Python-loop
+#: polling — sized to cover a same-host request/response turnaround so
+#: a tight RTT loop on PARALLEL cores never syscalls; adaptive, see
+#: RingConn)
+_SPIN_READS = 400
+#: producer spin budget before escalating to microsleeps on a full ring
+_SPIN_WRITES = 200
+#: spin budget used for the periodic concurrency probe — deliberately
+#: smaller than _SPIN_READS: a truly parallel peer answers within a few
+#: µs (well under 64 iterations), while on a timeshared core every probe
+#: iteration is pure waste, so the window is kept cheap (~17 µs)
+_SPIN_PROBE = 64
+#: sched_yield budget between spinning and parking: on a TIMESHARED
+#: core (1 vCPU, cgroup quota, loaded box) spinning only delays the
+#: peer, but a yield hands it the CPU directly — a ping-pong RTT costs
+#: ~2 yields (the cheapest syscall there is) instead of two full
+#: park/doorbell wakeups. Bounded so an idle waiter still ends up
+#: parked in a real sleep instead of burning its timeslice forever.
+_YIELD_WAITS = 64
+#: park timeout: bounds the flag-protocol race (no fences in Python) to
+#: one re-check latency, and doubles as the idle liveness poll period.
+#: Parks are OFF the hot path (spin/yield phases absorb active
+#: traffic), so this can be long; it still bounds teardown latency.
+_DOORBELL_TIMEOUT_S = 0.5
+#: how long close() waits for in-flight ring ops before leaving the
+#: mapping to process exit
+_CLOSE_LOCK_TIMEOUT_S = 0.25
+_ACK = b"\x06"
+
+_sched_yield = getattr(os, "sched_yield", None) or (lambda: time.sleep(0))
+
+
+def _load(mv: memoryview, off: int) -> int:
+    return _U32.unpack_from(mv, off)[0]
+
+
+def _store(mv: memoryview, off: int, value: int) -> None:
+    _U32.pack_into(mv, off, value & 0xFFFFFFFF)
+
+
+class RingConn:
+    """One shared-memory ring connection (one endpoint of it).
+
+    Duck-types the socket surface the framing layer uses. Single
+    producer and single consumer per direction — exactly the discipline
+    the socket paths already follow (sends serialized by the caller's
+    send lock, one reader at a time via the mux baton / handler loop).
+    ``is_client`` picks which ring this side produces into.
+    """
+
+    __slots__ = ("sock", "capacity", "is_client", "pid", "_shm", "_mv",
+                 "_owner", "_closed", "_slock", "_rlock", "_spin",
+                 "_spin_fixed", "_parks", "_probing", "_spin_prev",
+                 "_ptail_off", "_phead_off", "_psleep_off", "_pdata",
+                 "_ctail_off", "_chead_off", "_csleep_off", "_cdata",
+                 "_tail", "_head")
+
+    family = -1  # not an INET socket: kvserver._tune must skip TCP opts
+
+    def __init__(self, sock: socket.socket, shm: Any, is_client: bool,
+                 owner: bool):
+        self.sock = sock
+        self._shm = shm
+        self._mv = memoryview(shm.buf)
+        self.is_client = is_client
+        self._owner = owner
+        self._closed = False
+        self.pid = _CUR_PID
+        self._slock = threading.RLock()
+        self._rlock = threading.RLock()
+        self.capacity = _load(self._mv, _OFF_CAPACITY)
+        if not (0 < self.capacity <= _MAX_RING_CAPACITY
+                and self.capacity & (self.capacity - 1) == 0):
+            raise ConnectionError(
+                f"bad ring capacity {self.capacity} in segment")
+        produce, consume = (_C2S, _S2C) if is_client else (_S2C, _C2S)
+        self._ptail_off, self._phead_off, self._psleep_off = produce
+        self._ctail_off, self._chead_off, self._csleep_off = consume
+        p_base = _DATA_OFFSET if is_client else _DATA_OFFSET + self.capacity
+        c_base = _DATA_OFFSET + self.capacity if is_client else _DATA_OFFSET
+        self._pdata = self._mv[p_base:p_base + self.capacity]
+        self._cdata = self._mv[c_base:c_base + self.capacity]
+        self._tail = _load(self._mv, self._ptail_off)   # producer cache
+        self._head = _load(self._mv, self._chead_off)   # consumer cache
+        # Spinning pays off ONLY when the peer can actually run while we
+        # spin. Two topologies where it cannot: (a) both ends are
+        # threads of ONE process — the GIL-holding spin loop starves the
+        # peer until the interpreter's ~5 ms switch interval preempts us
+        # — detected up front via peer credentials and pinned to
+        # park-immediately; (b) the two processes timeshare one core
+        # (cgroup quota, taskset, a loaded box) — every spin iteration
+        # just delays the peer's timeslice, which measures as RTT
+        # growing LINEARLY with the spin budget. (b) is why the budget
+        # is ADAPTIVE (see ``_wait_data``): parks halve it toward 1
+        # (socket-like behavior, the best a timeshared core can do) and
+        # successful spins justify it, with a periodic full-budget probe
+        # so a ring that collapsed under contention rediscovers
+        # parallelism when cores free up.
+        self._spin_fixed = _same_process_peer(sock)
+        self._spin = 1 if self._spin_fixed else _SPIN_READS
+        self._parks = 0
+        self._probing = False
+        self._spin_prev = self._spin
+        # The rendezvous socket only ever carries doorbell bytes after
+        # the handshake: a permanent short timeout makes every park a
+        # bounded wait (see module docstring) and keeps a doorbell send
+        # against a wedged peer from blocking the producer.
+        sock.settimeout(_DOORBELL_TIMEOUT_S)
+
+    # -- shared helpers -------------------------------------------------------
+
+    def _guard(self) -> None:
+        if self.pid != _CUR_PID:
+            raise ConnectionError(
+                "shm ring used across fork: ring connections are "
+                "per-process (the SPSC indices would corrupt) — open a "
+                "new connection in the child")
+        if self._closed:
+            raise ConnectionError("shm ring is closed")
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    # -- producer side --------------------------------------------------------
+
+    def _write_some(self, src: memoryview) -> int:
+        """Copy what fits of ``src`` into the ring; returns bytes moved
+        (0 when full). Data first, then the tail advance — the consumer
+        only trusts bytes at positions below ``tail``."""
+        mv = self._mv
+        head = _load(mv, self._phead_off)
+        tail = self._tail
+        n = min(self.capacity - ((tail - head) & 0xFFFFFFFF), len(src))
+        if n <= 0:
+            return 0
+        pos = tail % self.capacity
+        first = min(n, self.capacity - pos)
+        self._pdata[pos:pos + first] = src[:first]
+        if n > first:
+            self._pdata[:n - first] = src[first:n]
+        self._tail = tail = (tail + n) & 0xFFFFFFFF
+        _store(mv, self._ptail_off, tail)
+        if _load(mv, self._psleep_off):
+            # consumer parked (or parking): one doorbell byte. Clearing
+            # the flag first bounds stale bytes to one per park cycle.
+            _store(mv, self._psleep_off, 0)
+            try:
+                self.sock.send(b"\x01")
+            except OSError:
+                pass  # peer gone — its EOF surfaces on our consumer side
+        return n
+
+    def sendall(self, data: Any) -> None:
+        src = memoryview(data)
+        if src.format != "B" or src.ndim != 1:
+            src = src.cast("B")
+        with self._slock:
+            self._guard()
+            sent = 0
+            spins = 0
+            sleep_s = 0.0
+            while sent < src.nbytes:
+                n = self._write_some(src[sent:] if sent else src)
+                if n:
+                    sent += n
+                    spins = 0
+                    sleep_s = 0.0
+                    continue
+                if self._closed:
+                    raise ConnectionError("shm ring closed mid-send")
+                spins += 1
+                if spins >= min(_SPIN_WRITES, self._spin):
+                    # full ring = consumer stalled or descheduled: back
+                    # off (escalating, capped) instead of burning a core
+                    time.sleep(sleep_s)
+                    sleep_s = min(sleep_s + 0.0002, 0.002)
+
+    def _write_gather(self, views: Sequence[memoryview], total: int) -> bool:
+        """Stage every buffer into the ring and advance the tail ONCE.
+        Returns False (nothing written) unless the whole batch fits —
+        single-publish means the consumer wakes exactly once and sees
+        the complete frame batch, instead of waking per part and paying
+        an extra wait/yield round for the remainder."""
+        mv = self._mv
+        head = _load(mv, self._phead_off)
+        tail = self._tail
+        cap = self.capacity
+        if cap - ((tail - head) & 0xFFFFFFFF) < total:
+            return False
+        pos = tail % cap
+        pdata = self._pdata
+        for v in views:
+            n = v.nbytes
+            first = cap - pos
+            if n <= first:
+                pdata[pos:pos + n] = v
+            else:
+                pdata[pos:] = v[:first]
+                pdata[:n - first] = v[first:]
+            pos = (pos + n) & (cap - 1)
+        self._tail = tail = (tail + total) & 0xFFFFFFFF
+        _store(mv, self._ptail_off, tail)
+        if _load(mv, self._psleep_off):
+            _store(mv, self._psleep_off, 0)
+            try:
+                self.sock.send(b"\x01")
+            except OSError:
+                pass
+        return True
+
+    def sendmsg(self, buffers: Sequence[Any]) -> int:
+        """Gather write; blocking-complete (returns the full byte count,
+        which terminates ``_sendv``'s partial-send loop immediately).
+        Batches that fit the ring go through the single-publish path;
+        oversized batches fall back to streaming each part."""
+        views = []
+        total = 0
+        for b in buffers:
+            v = b if isinstance(b, memoryview) else memoryview(b)
+            if v.format != "B" or v.ndim != 1:
+                v = v.cast("B")
+            views.append(v)
+            total += v.nbytes
+        with self._slock:
+            self._guard()
+            if 0 < total <= self.capacity:
+                spins = 0
+                sleep_s = 0.0
+                while not self._write_gather(views, total):
+                    if self._closed:
+                        raise ConnectionError("shm ring closed mid-send")
+                    spins += 1
+                    if spins >= _SPIN_WRITES:
+                        time.sleep(sleep_s)
+                        sleep_s = min(sleep_s + 0.0002, 0.002)
+                return total
+            for v in views:
+                self.sendall(v)
+        return total
+
+    def send(self, data: Any) -> int:
+        self.sendall(data)
+        return memoryview(data).nbytes
+
+    # -- consumer side --------------------------------------------------------
+
+    def _available(self) -> int:
+        return (_load(self._mv, self._ctail_off) - self._head) & 0xFFFFFFFF
+
+    def _adapt_down(self) -> None:
+        """The spin phase failed to observe data (it resolved via yield
+        or park): shrink the budget toward 1 = yield-immediately. Every
+        64 failures one wait probes a small spin window (_SPIN_PROBE) so
+        a collapsed ring rediscovers parallelism when cores free up; a
+        failed probe restores the previous budget at once instead of
+        re-halving its way back down (which would tax the next 6 waits
+        with stale spinning)."""
+        self._parks += 1
+        if self._probing:
+            self._probing = False
+            self._spin = self._spin_prev
+        elif self._parks & 63 == 0:
+            self._probing = True
+            self._spin_prev = self._spin
+            self._spin = _SPIN_PROBE
+        elif self._spin > 1:
+            self._spin >>= 1
+
+    def _wait_data(self) -> bool:
+        """Block until the consume ring holds bytes. False on EOF (peer
+        closed/died) or local close. Spin first; park on the doorbell
+        only when the (adaptive) spin budget runs out."""
+        mv = self._mv
+        spins = 0
+        yields = 0
+        budget = self._spin
+        while True:
+            if self._available():
+                if not self._spin_fixed:
+                    if yields:
+                        # the data arrived via a YIELD, so every spin
+                        # iteration before it only delayed the peer
+                        # (timeshared-core regime): shrink toward
+                        # yield-immediately — probing every 64 such
+                        # failures rediscovers parallelism if it returns
+                        self._adapt_down()
+                    elif spins:
+                        # a PURE spin succeeded (the peer genuinely ran
+                        # concurrently): keep twice the observed need
+                        self._probing = False
+                        self._spin = min(_SPIN_READS,
+                                         max(self._spin, 2 * spins))
+                return True
+            if self._closed:
+                return False
+            if self.pid != _CUR_PID:
+                self._guard()
+            spins += 1
+            if spins < budget:
+                continue
+            if yields < _YIELD_WAITS:
+                # Phase 2: hand the CPU (or, same-process, the GIL —
+                # sched_yield releases it) straight to the peer. On a
+                # timeshared core this IS the fast path: the peer runs,
+                # produces, and yields back.
+                yields += 1
+                _sched_yield()
+                continue
+            # Phase 3: neither spinning nor yielding produced data — the
+            # peer is idle or descheduled for real. Spin-budget verdict
+            # is the same as the yield case: it did not pay off.
+            if not self._spin_fixed:
+                self._adapt_down()
+            # Park: flag first, then one more ring check so a producer
+            # that advanced tail before our store cannot be missed; the
+            # recv timeout covers the residual reordering window.
+            _store(mv, self._csleep_off, 1)
+            if self._available():
+                _store(mv, self._csleep_off, 0)
+                return True
+            try:
+                wake = self.sock.recv(1)
+            except socket.timeout:
+                # periodic re-check (fence-free flag protocol); skip the
+                # spent spin/yield phases — this is the idle regime
+                spins = budget
+                yields = _YIELD_WAITS
+                continue
+            except OSError:
+                self._closed = True
+                return False
+            if not wake:  # EOF: peer closed or died
+                self._closed = True
+                return False
+            _store(mv, self._csleep_off, 0)
+            spins = 0
+            yields = 0
+            budget = self._spin
+
+    def _read_some(self, dst: memoryview) -> int:
+        mv = self._mv
+        head = self._head
+        n = min((_load(mv, self._ctail_off) - head) & 0xFFFFFFFF, len(dst))
+        if n <= 0:
+            return 0
+        pos = head % self.capacity
+        first = min(n, self.capacity - pos)
+        dst[:first] = self._cdata[pos:pos + first]
+        if n > first:
+            dst[first:n] = self._cdata[:n - first]
+        self._head = head = (head + n) & 0xFFFFFFFF
+        _store(mv, self._chead_off, head)
+        return n
+
+    def recv_into(self, buffer: Any, nbytes: int = 0, flags: int = 0) -> int:
+        """Socket-compatible: without ``MSG_WAITALL``, blocks for >= 1
+        byte then drains what is available; with it, fills exactly
+        ``nbytes``. Returns 0 on EOF."""
+        dst = memoryview(buffer)
+        if dst.format != "B" or dst.ndim != 1:
+            dst = dst.cast("B")
+        want = nbytes if nbytes else dst.nbytes
+        with self._rlock:
+            if self._closed or self.pid != _CUR_PID:
+                self._guard()
+            if not flags & socket.MSG_WAITALL:
+                if not self._wait_data():
+                    return 0
+                return self._read_some(
+                    dst if want == dst.nbytes else dst[:want])
+            got = 0
+            while got < want:
+                if not self._wait_data():
+                    return 0 if got == 0 else got
+                got += self._read_some(dst[got:want])
+            return got
+
+    def recv(self, bufsize: int, flags: int = 0) -> bytes:
+        buf = bytearray(bufsize)
+        n = self.recv_into(buf, bufsize, flags)
+        return bytes(buf[:n])
+
+    # -- socket-compat shims --------------------------------------------------
+
+    def getsockopt(self, level: int, optname: int, *a: Any) -> int:
+        # _sock()'s chunk sizing asks for SO_SNDBUF: the honest answer
+        # is the ring capacity (the real in-flight bound per direction)
+        if level == socket.SOL_SOCKET and optname in (socket.SO_SNDBUF,
+                                                      socket.SO_RCVBUF):
+            return self.capacity
+        return 0
+
+    def setsockopt(self, *a: Any) -> None:
+        pass  # rings have no kernel knobs
+
+    def fileno(self) -> int:
+        return self.sock.fileno()
+
+    def shutdown(self, how: int) -> None:
+        self._closed = True
+        try:
+            self.sock.shutdown(how)
+        except OSError:
+            pass
+
+    def close(self) -> None:
+        if self._closed and self._shm is None:
+            return
+        self._closed = True
+        # EOF + wake any parked peer consumer, and unblock our own
+        # parked reader (local shutdown makes its recv return EOF now)
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+        shm, self._shm = self._shm, None
+        if shm is None:
+            return
+        # The mapping can only be released once no thread is mid-memcpy
+        # on it (a view into a closed mmap is a crash, and mmap.close()
+        # refuses while views exist). Ops are bounded: the reader parks
+        # at most one doorbell timeout before noticing _closed.
+        acquired: List[threading.RLock] = []
+        try:
+            for lock in (self._slock, self._rlock):
+                if not lock.acquire(timeout=_CLOSE_LOCK_TIMEOUT_S):
+                    # a wedged thread still owns the ring: leave the
+                    # mapping for process exit rather than risk a torn
+                    # copy (blocked peers unblock via the closed flag)
+                    return
+                acquired.append(lock)
+            self._pdata.release()
+            self._cdata.release()
+            self._mv.release()
+            shm.close()
+            if self._owner:
+                try:
+                    shm.unlink()
+                except FileNotFoundError:  # pragma: no cover - double unlink
+                    pass
+        finally:
+            for lock in reversed(acquired):
+                lock.release()
+
+    def __del__(self) -> None:  # pragma: no cover - GC safety net
+        try:
+            self.close()
+        except BaseException:
+            pass
+
+
+def _same_process_peer(sock: socket.socket) -> bool:
+    """True when the Unix socket's peer is THIS process (in-process
+    server + client, the common test topology). Linux-only credential
+    query; anywhere it fails we report False, which errs toward
+    untracking (the cross-process behavior)."""
+    try:
+        creds = sock.getsockopt(socket.SOL_SOCKET,
+                                socket.SO_PEERCRED,  # type: ignore[attr-defined]
+                                struct.calcsize("3i"))
+        pid, _uid, _gid = struct.unpack("3i", creds)
+        return pid == os.getpid()
+    except (OSError, AttributeError, struct.error):
+        return False
+
+
+def _untrack(shm: Any) -> None:
+    """Detach ``shm`` from this process's resource tracker. On CPython
+    <= 3.12 *attaching* registers the segment too, so a shard process
+    exiting would unlink rings the client still maps (plus leak
+    warnings). The creating side stays tracked — abnormal client death
+    still reclaims the segment. Never called when client and server
+    share a process (they share ONE tracker there: create+attach
+    register once under set semantics, and the client's unlink must be
+    the one unregister or the tracker logs spurious KeyErrors). The same
+    hazard exists for ``multiprocessing`` *spawn* children: they inherit
+    the parent's tracker fd, so a client in the parent shares our
+    tracker — detectable as an fd with no recorded pid (a tracker we did
+    not launch ourselves), in which case we leave the registration alone
+    and the client's unlink balances it."""
+    try:  # pragma: no cover - exercised only on tracker-registering builds
+        from multiprocessing import resource_tracker
+        rt = resource_tracker._resource_tracker
+        if getattr(rt, "_fd", None) is not None and \
+                getattr(rt, "_pid", None) is None:
+            return  # inherited (shared) tracker: not ours to prune
+        resource_tracker.unregister(shm._name, "shared_memory")
+    except Exception:
+        pass
+
+
+def create_ring(sock: socket.socket,
+                capacity: int = _DEFAULT_RING_CAPACITY) -> RingConn:
+    """Client side of the shm attach: create the segment, zero the
+    control words, send the handshake over the (already connected)
+    rendezvous socket, and wait for the server's ack."""
+    if _shm_mod is None:  # pragma: no cover - platform without shm
+        raise OSError("multiprocessing.shared_memory unavailable")
+    if capacity <= 0 or capacity & (capacity - 1):
+        raise ValueError(f"ring capacity {capacity} is not a power of two")
+    if capacity > _MAX_RING_CAPACITY:
+        raise ValueError(f"ring capacity {capacity} exceeds "
+                         f"{_MAX_RING_CAPACITY}")
+    shm = _shm_mod.SharedMemory(create=True,
+                                size=_DATA_OFFSET + 2 * capacity)
+    try:
+        mv = memoryview(shm.buf)
+        mv[:_DATA_OFFSET] = bytes(_DATA_OFFSET)  # control words start at 0
+        _store(mv, _OFF_CAPACITY, capacity)
+        mv.release()
+        name = shm.name.encode()
+        sock.sendall(SHM_MAGIC + _U32.pack(capacity)
+                     + _U32.pack(len(name)) + name)
+        sock.settimeout(_HANDSHAKE_TIMEOUT_S)
+        ack = sock.recv(1)
+        if ack != _ACK:
+            raise ConnectionError(
+                "shm handshake rejected (server predates the ring "
+                "transport, or attach failed server-side)")
+        return RingConn(sock, shm, is_client=True, owner=True)
+    except BaseException:
+        shm.close()
+        try:
+            shm.unlink()
+        except FileNotFoundError:
+            pass
+        raise
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = b""
+    while len(buf) < n:
+        got = sock.recv(n - len(buf))
+        if not got:
+            raise ConnectionError("EOF during shm handshake")
+        buf += got
+    return buf
+
+
+def accept_ring(sock: socket.socket,
+                magic_consumed: bool = False) -> RingConn:
+    """Server side of the shm attach: consume the handshake (the caller
+    usually only *peeked* the magic), map the named segment, untrack it,
+    and ack. Raises on any malformed handshake — the caller closes the
+    socket, which the client sees as a rejected upgrade."""
+    if _shm_mod is None:  # pragma: no cover - platform without shm
+        raise OSError("multiprocessing.shared_memory unavailable")
+    sock.settimeout(_HANDSHAKE_TIMEOUT_S)
+    if not magic_consumed:
+        if _recv_exact(sock, 4) != SHM_MAGIC:
+            raise ConnectionError("bad shm handshake magic")
+    (capacity,) = _U32.unpack(_recv_exact(sock, 4))
+    (name_len,) = _U32.unpack(_recv_exact(sock, 4))
+    if not 0 < name_len <= 255:
+        raise ConnectionError(f"bad shm segment name length {name_len}")
+    name = _recv_exact(sock, name_len).decode()
+    if capacity <= 0 or capacity & (capacity - 1) \
+            or capacity > _MAX_RING_CAPACITY:
+        raise ConnectionError(f"bad ring capacity {capacity}")
+    shm = _shm_mod.SharedMemory(name=name)
+    if not _same_process_peer(sock):
+        _untrack(shm)
+    try:
+        conn = RingConn(sock, shm, is_client=False, owner=False)
+    except BaseException:
+        shm.close()
+        raise
+    sock.sendall(_ACK)
+    return conn

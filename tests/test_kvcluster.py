@@ -405,3 +405,86 @@ class TestBatchOrdering:
             KVCluster(shards=2).client()
         with pytest.raises(ValueError, match="at least one shard"):
             ClusterClient(shard_addresses=[])
+
+
+# ---------------------------------------------------------------------------
+# PR 6: endpoint-carrying descriptors + transports over the cluster plane
+# ---------------------------------------------------------------------------
+
+
+class TestClusterTransports:
+    def test_descriptor_v2_advertises_endpoints(self, cluster):
+        desc = cluster.describe()
+        assert desc["version"] == 2
+        assert len(desc["endpoints"]) == desc["n_shards"]
+        for shard_eps, (host, port) in zip(desc["endpoints"], desc["shards"]):
+            schemes = {u.split("://")[0] for u in shard_eps}
+            assert f"tcp://{host}:{port}" in shard_eps
+            assert "tcp" in schemes          # uds/shm presence is platform-
+                                             # dependent; tcp never optional
+
+    def test_v1_descriptor_still_bootstraps(self, cluster):
+        """A pre-endpoint descriptor (bare host/port pairs) keeps
+        working: version-2 parsing is additive."""
+        c = ClusterClient(shard_addresses=cluster.shard_addresses)
+        c.set("v1desc", 1)
+        assert c.get("v1desc") == 1
+        c.close()
+
+    @pytest.mark.parametrize("transport", ["tcp", "uds", "shm"])
+    def test_pinned_transport_end_to_end(self, cluster, transport):
+        c = ClusterClient(address=cluster.address, transport=transport)
+        c.flushall()
+        for i in range(8):
+            c.set(f"tk{i}", i)
+        assert [c.get(f"tk{i}") for i in range(8)] == list(range(8))
+        with c.pipeline() as p:
+            for i in range(8):
+                p.incr(f"tk{i}")
+        for shard in {id(s): s for s in c.shards}.values():
+            assert shard._mux("main").endpoint.scheme == transport
+        c.close()
+
+    def test_kill_then_restart_cycle_no_stale_paths(self):
+        """SIGKILL a shard (no orderly cleanup), restart it, and use
+        every carrier against the respawn: the parent removed the
+        corpse's uds path, so nothing trips over a stale socket file."""
+        import os
+        import signal
+        with KVCluster(shards=2) as cl:
+            c = cl.client()
+            c.set("pre", b"1")
+            victim = cl._procs[0]
+            old_uds = [u for u in victim.endpoints if u.startswith("uds://")]
+            victim.proc.send_signal(signal.SIGKILL)
+            victim.proc.wait()
+            cl.restart_shard(0)
+            for u in old_uds:
+                assert not os.path.exists(u[len("uds://"):])
+            for transport in ("tcp", "uds", "shm"):
+                c2 = ClusterClient(address=cl.address, transport=transport)
+                c2.set(f"post:{transport}", b"2")
+                assert c2.get(f"post:{transport}") == b"2"
+                c2.close()
+            c.close()
+
+    def test_restarted_shard_advertises_fresh_endpoints(self):
+        with KVCluster(shards=1) as cl:
+            before = cl.describe()["endpoints"][0]
+            cl._procs[0].proc.kill()
+            cl._procs[0].proc.wait()
+            cl.restart_shard(0)
+            after = cl.describe()["endpoints"][0]
+            assert after != before
+            boot = KVClient(cl.address)
+            desc = boot.get(DESCRIPTOR_KEY)
+            boot.close()
+            assert desc["endpoints"][0] == after
+
+    def test_connect_passes_transport_through(self, cluster):
+        c = connect(cluster.address, transport="uds")
+        assert isinstance(c, ClusterClient)
+        c.set("ct", 3)
+        assert c.get("ct") == 3
+        assert c.shards[0]._mux("main").endpoint.scheme == "uds"
+        c.close()

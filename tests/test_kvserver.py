@@ -386,6 +386,27 @@ class TestBufferPool:
         pool.release(huge)
         assert pool._free == []
 
+    def test_retention_count_capped(self):
+        from repro.core.kvserver import _BufferPool
+        pool = _BufferPool()
+        bufs = [pool.acquire(4096) for _ in range(2 * _BufferPool._MAX_BUFS)]
+        for b in bufs:
+            pool.release(b)
+        assert len(pool._free) <= _BufferPool._MAX_BUFS
+
+    def test_high_water_mark_bounded_by_caps(self):
+        """The audited worst case never exceeds what the two caps allow,
+        no matter the release pattern."""
+        from repro.core.kvserver import _BufferPool
+        pool = _BufferPool()
+        for n in (100, 5_000, 60_000, _BufferPool._MAX_BUF_BYTES,
+                  _BufferPool._MAX_BUF_BYTES + 1, 999, 12_345):
+            for b in [pool.acquire(n) for _ in range(12)]:
+                pool.release(b)
+        cap = _BufferPool._MAX_BUFS * _BufferPool._MAX_BUF_BYTES
+        assert 0 < pool.high_water <= cap
+        assert pool.retained_bytes <= pool.high_water
+
     def test_pooled_small_frames_roundtrip_correct_values(self, server):
         """Recycled receive buffers never corrupt decoded values: distinct
         payloads over one connection (same pooled buffers) stay distinct."""
@@ -696,3 +717,130 @@ class TestTransactionKeyHintOverTCP:
         sem.release()
         with pytest.raises(ValueError):
             sem.release()
+
+
+# ---------------------------------------------------------------------------
+# PR 6: pluggable same-host transports (tcp / uds / shm rings)
+# ---------------------------------------------------------------------------
+
+
+TRANSPORTS = ["tcp", "uds", "shm"]
+
+
+class TestTransports:
+    """The full client surface over every carrier: the same frames must
+    behave identically whether they cross a TCP socket, a Unix-domain
+    socket, or a shared-memory ring."""
+
+    @pytest.mark.parametrize("transport", TRANSPORTS)
+    def test_basic_commands(self, server, transport):
+        c = KVClient(server.endpoints, transport=transport)
+        c.set("k", b"v")
+        assert c.get("k") == b"v"
+        c.rpush("l", b"1", b"2")
+        assert c.lrange("l", 0, -1) == [b"1", b"2"]
+        assert c.incr("n") == 1
+        assert c._mux("main").endpoint.scheme == transport
+        c.close()
+
+    @pytest.mark.parametrize("transport", TRANSPORTS)
+    def test_large_payload_oob(self, server, transport):
+        c = KVClient(server.endpoints, transport=transport)
+        blob = bytes(range(256)) * 4096   # 1 MiB: OOB + ring wraparound
+        c.set("big", blob)
+        assert c.get("big") == blob
+        c.close()
+
+    @pytest.mark.parametrize("transport", TRANSPORTS)
+    def test_pipeline_both_modes(self, server, transport):
+        c = KVClient(server.endpoints, transport=transport)
+        for transactional in (True, False):
+            p = c.pipeline(transactional=transactional)
+            p.set("pk", 1)
+            p.incr("pk")
+            p.get("pk")
+            assert p.execute()[-1] == 2
+            c.delete("pk")
+        c.close()
+
+    @pytest.mark.parametrize("transport", TRANSPORTS)
+    def test_blocking_across_connections(self, server, transport):
+        c1 = KVClient(server.endpoints, transport=transport)
+        c2 = KVClient(server.endpoints, transport=transport)
+        got = []
+        t = threading.Thread(
+            target=lambda: got.append(c1.blpop("bq", timeout=10)))
+        t.start()
+        time.sleep(0.1)
+        c2.rpush("bq", b"x")
+        t.join(10)
+        assert got == [("bq", b"x")]
+        c1.close()
+        c2.close()
+
+    @pytest.mark.parametrize("transport", TRANSPORTS)
+    def test_per_thread_sockets_mode(self, server, transport):
+        c = KVClient(server.endpoints, transport=transport, mux=False)
+        c.set("s", 41)
+        assert c.incr("s") == 42
+        c.close()
+
+    def test_auto_selection_prefers_shm_same_host(self, server):
+        from repro.core import transport as T
+        c = KVClient(server.endpoints)
+        c.set("a", 1)
+        want = "shm" if T.ring_supported() else (
+            "uds" if T.uds_supported() else "tcp")
+        assert c._mux("main").endpoint.scheme == want
+        c.close()
+
+    def test_blocking_lane_avoids_shm_in_auto_mode(self, server):
+        """A parked BLPOP must sleep in the kernel, not spin/yield on a
+        ring: the blocking lane auto-selects a socket carrier."""
+        c = KVClient(server.endpoints)
+        got = []
+        t = threading.Thread(
+            target=lambda: got.append(c.blpop("lane:q", timeout=10)))
+        t.start()
+        time.sleep(0.1)
+        lane = c._mux("blocking")
+        assert lane.endpoint.scheme != "shm"
+        c.rpush("lane:q", b"y")
+        t.join(10)
+        assert got == [("lane:q", b"y")]
+        c.close()
+
+    def test_tuple_address_still_works(self, server):
+        c = KVClient(server.address)        # legacy (host, port) shape
+        c.set("t", 7)
+        assert c.get("t") == 7
+        c.close()
+
+    def test_unknown_transport_rejected(self, server):
+        with pytest.raises(ValueError):
+            KVClient(server.endpoints, transport="carrier-pigeon").incr("x")
+
+    def test_server_stop_removes_uds_path(self):
+        import glob
+        import os
+        srv = KVServer()
+        srv.start()
+        uds = [e for e in srv.endpoints if e.startswith("uds://")]
+        assert uds, srv.endpoints
+        path = uds[0][len("uds://"):]
+        assert os.path.exists(path)
+        srv.stop()
+        assert not os.path.exists(path)
+        assert not os.path.exists(os.path.dirname(path))
+
+    def test_stop_closes_live_rings(self, server):
+        """Server stop tears down accepted rings so client ops fail fast
+        instead of spinning against a dead peer."""
+        c = KVClient(server.endpoints, transport="shm")
+        c.set("k", 1)
+        server.stop()
+        with pytest.raises(Exception):
+            for _ in range(3):
+                c.get("k")
+                time.sleep(0.2)
+        c.close()

@@ -191,15 +191,17 @@ def server():
         yield srv
 
 
-def _dialect_clients(address):
+def _dialect_clients(address, transport=None):
     """One client per wire dialect: v1 legacy pickle, v2 per-thread
-    pickle, v3 multiplexed pickle, v4 raw (mux and per-thread)."""
+    pickle, v3 multiplexed pickle, v4 raw (mux and per-thread).
+    ``transport`` pins all of them to one carrier (PR 6)."""
+    kw = {"transport": transport}
     return {
-        "v1": KVClient(address, legacy_protocol=True),
-        "v2": KVClient(address, mux=False, raw=False),
-        "v3": KVClient(address, mux=True, raw=False),
-        "v4": KVClient(address, mux=True, raw=True),
-        "v4-sockets": KVClient(address, mux=False, raw=True),
+        "v1": KVClient(address, legacy_protocol=True, **kw),
+        "v2": KVClient(address, mux=False, raw=False, **kw),
+        "v3": KVClient(address, mux=True, raw=False, **kw),
+        "v4": KVClient(address, mux=True, raw=True, **kw),
+        "v4-sockets": KVClient(address, mux=False, raw=True, **kw),
     }
 
 
@@ -401,4 +403,65 @@ class TestDispatchTable:
             got = p.blpop("never:filled", 30)
         assert got.get() is None
         assert time.monotonic() - t0 < 5
+        c.close()
+
+
+# ---------------------------------------------------------------------------
+# PR 6: the dialect grid crossed with the transport dimension — identical
+# frames over tcp / uds / shm rings, mixed dialects on one ring
+# ---------------------------------------------------------------------------
+
+
+class TestInteropOverTransports:
+    @pytest.mark.parametrize("transport", ["uds", "shm"])  # tcp: TestInterop
+    def test_dialect_grid(self, server, transport):
+        """Every (writer, reader) dialect pair agrees on store state when
+        ALL of them ride the pinned carrier: framing is carrier-blind."""
+        clients = _dialect_clients(server.endpoints, transport=transport)
+        try:
+            for wname, w in clients.items():
+                w.set(f"g:{transport}:{wname}", wname.encode())
+                w.incr(f"g:{transport}:n")
+            for rname, r in clients.items():
+                for wname in clients:
+                    assert r.get(f"g:{transport}:{wname}") == wname.encode(), \
+                        f"{rname} reading {wname} over {transport}"
+            assert clients["v1"].get(f"g:{transport}:n") == len(clients)
+        finally:
+            for c in clients.values():
+                c.close()
+
+    def test_mixed_dialects_on_one_ring(self, server):
+        """One shm ring carries raw v4 frames, pickle-fallback frames and
+        OOB multi-part payloads interleaved — every frame self-describes,
+        so the ring never desyncs."""
+        c = KVClient(server.endpoints, transport="shm")
+        assert c._mux("main").endpoint.scheme == "shm"
+        big = b"r" * (1 << 20)
+        for i in range(3):
+            assert c.incr("ring:n") == i + 1          # raw v4
+            c.hset("ring:h", f"f{i}", b"x")           # pickle fallback
+            c.rpush("ring:big", big)                  # pickle + OOB parts
+            assert c.lpop("ring:big") == big
+        assert c.hgetall("ring:h") == {f"f{i}": b"x" for i in range(3)}
+        c.close()
+
+    @pytest.mark.parametrize("transport", ["uds", "shm"])
+    def test_cross_transport_visibility(self, server, transport):
+        """A write over one carrier is read back over another: transports
+        are connection plumbing, the store is one."""
+        w = KVClient(server.endpoints, transport=transport)
+        r = KVClient(server.endpoints, transport="tcp")
+        w.set("xt:k", b"via-" + transport.encode())
+        assert r.get("xt:k") == b"via-" + transport.encode()
+        w.close()
+        r.close()
+
+    @pytest.mark.parametrize("transport", ["uds", "shm"])
+    def test_raw_error_reply_keeps_carrier_synced(self, server, transport):
+        c = KVClient(server.endpoints, transport=transport)
+        c.set("e:k", b"v")
+        with pytest.raises(TypeError):
+            c.rpush("e:k", b"x")
+        assert c.incr("e:n") == 1    # connection still framed correctly
         c.close()

@@ -1,0 +1,322 @@
+"""Unit tests for ``repro.core.transport``: endpoint scheme parsing and
+preference ordering, and the shared-memory SPSC ring transport (framing
+integrity, wraparound, blocking semantics, doorbell park/wake, fork
+guard, teardown)."""
+
+import os
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.core import transport as T
+
+
+# ---------------------------------------------------------------------------
+# Endpoint scheme
+# ---------------------------------------------------------------------------
+
+
+class TestEndpointParsing:
+    def test_tcp_url(self):
+        ep = T.parse_endpoint("tcp://127.0.0.1:6379")
+        assert (ep.scheme, ep.host, ep.port) == ("tcp", "127.0.0.1", 6379)
+        assert ep.url == "tcp://127.0.0.1:6379"
+
+    def test_uds_and_shm_urls(self):
+        for scheme in ("uds", "shm"):
+            ep = T.parse_endpoint(f"{scheme}:///tmp/x/kv.sock")
+            assert ep.scheme == scheme and ep.path == "/tmp/x/kv.sock"
+            assert ep.url == f"{scheme}:///tmp/x/kv.sock"
+
+    def test_legacy_tuple_is_tcp(self):
+        ep = T.parse_endpoint(("localhost", 1234))
+        assert ep.url == "tcp://localhost:1234"
+
+    @pytest.mark.parametrize("bad", [
+        "127.0.0.1:6379",        # no scheme
+        "tcp://nohost",          # no port
+        "uds://",                # no path
+        "ftp://x:1",             # unknown scheme
+        ("host",),               # not (host, port)
+        42,
+    ])
+    def test_rejects_malformed(self, bad):
+        with pytest.raises(ValueError):
+            T.parse_endpoint(bad)
+
+    def test_normalize_shapes(self):
+        one = T.normalize_endpoints(("h", 1))
+        assert [e.url for e in one] == ["tcp://h:1"]
+        many = T.normalize_endpoints(
+            ["tcp://h:1", "uds:///s", ("h2", 2)])
+        assert [e.url for e in many] == ["tcp://h:1", "uds:///s",
+                                         "tcp://h2:2"]
+        with pytest.raises(ValueError):
+            T.normalize_endpoints([])
+
+
+class TestEndpointOrdering:
+    EPS = [T.parse_endpoint(u) for u in
+           ("tcp://h:1", "uds:///s", "shm:///s")]
+
+    def test_auto_prefers_cheapest_carrier(self):
+        got = [e.scheme for e in T.order_endpoints(self.EPS)]
+        want = [s for s in ("shm", "uds", "tcp")
+                if s == "tcp"
+                or (s == "uds" and T.uds_supported())
+                or (s == "shm" and T.ring_supported())]
+        assert got == want
+
+    def test_pin_selects_only_that_scheme(self):
+        got = T.order_endpoints(self.EPS, transport="tcp")
+        assert [e.scheme for e in got] == ["tcp"]
+
+    def test_pin_unadvertised_scheme_raises(self):
+        with pytest.raises(ValueError):
+            T.order_endpoints([self.EPS[0]], transport="shm")
+
+    def test_pin_unknown_scheme_raises(self):
+        with pytest.raises(ValueError):
+            T.order_endpoints(self.EPS, transport="rfc1149")
+
+
+# ---------------------------------------------------------------------------
+# Shared-memory rings
+# ---------------------------------------------------------------------------
+
+
+needs_rings = pytest.mark.skipif(not T.ring_supported(),
+                                 reason="shm rings unsupported here")
+
+
+@pytest.fixture
+def ring_pair():
+    """A connected (client RingConn, server RingConn) pair over a
+    socketpair rendezvous, torn down afterwards."""
+    a, b = socket.socketpair(socket.AF_UNIX, socket.SOCK_STREAM)
+    out = {}
+
+    def accept():
+        out["server"] = T.accept_ring(b)
+
+    t = threading.Thread(target=accept, daemon=True)
+    t.start()
+    client = T.create_ring(a, capacity=1 << 16)
+    t.join(10)
+    server = out["server"]
+    yield client, server
+    client.close()
+    server.close()
+
+
+@needs_rings
+class TestRingConn:
+    def test_roundtrip_small(self, ring_pair):
+        client, server = ring_pair
+        client.sendall(b"hello")
+        buf = bytearray(16)
+        n = server.recv_into(buf)
+        assert bytes(buf[:n]) == b"hello"
+        server.sendall(b"world")
+        assert client.recv(5, socket.MSG_WAITALL) == b"world"
+
+    def test_capacity_reported_as_buffer_size(self, ring_pair):
+        client, _ = ring_pair
+        assert client.getsockopt(
+            socket.SOL_SOCKET, socket.SO_SNDBUF) == 1 << 16
+
+    def test_wraparound_integrity(self, ring_pair):
+        """Many odd-sized records crossing the ring boundary repeatedly
+        arrive byte-identical and in order."""
+        client, server = ring_pair
+        records = [bytes([i & 0xFF]) * (977 + 64 * i) for i in range(96)]
+        total = sum(len(r) for r in records)
+        assert total > 3 * (1 << 16)   # guarantees several wraps
+
+        def produce():
+            for r in records:
+                client.sendall(r)
+
+        t = threading.Thread(target=produce, daemon=True)
+        t.start()
+        got = bytearray()
+        buf = bytearray(8192)
+        mv = memoryview(buf)
+        while len(got) < total:
+            n = server.recv_into(mv)
+            assert n > 0
+            got += buf[:n]
+        t.join(10)
+        assert bytes(got) == b"".join(records)
+
+    def test_send_larger_than_capacity_streams(self, ring_pair):
+        client, server = ring_pair
+        blob = os.urandom(5 * (1 << 16))   # 5x the ring capacity
+        got = bytearray(len(blob))
+
+        def consume():
+            server.recv_into(memoryview(got), len(blob), socket.MSG_WAITALL)
+
+        t = threading.Thread(target=consume, daemon=True)
+        t.start()
+        client.sendall(blob)
+        t.join(10)
+        assert bytes(got) == blob
+
+    def test_sendmsg_gather_single_publish(self, ring_pair):
+        client, server = ring_pair
+        parts = [b"\x00\x00\x00\x0a", b"0123456789"]
+        assert client.sendmsg(parts) == 14
+        buf = bytearray(14)
+        server.recv_into(buf, 14, socket.MSG_WAITALL)
+        assert bytes(buf) == b"".join(parts)
+
+    def test_msg_waitall_blocks_for_exact_count(self, ring_pair):
+        client, server = ring_pair
+        out = {}
+
+        def consume():
+            buf = bytearray(8)
+            server.recv_into(buf, 8, socket.MSG_WAITALL)
+            out["got"] = bytes(buf)
+
+        t = threading.Thread(target=consume, daemon=True)
+        t.start()
+        client.sendall(b"1234")
+        time.sleep(0.05)
+        assert "got" not in out          # only half arrived: still blocked
+        client.sendall(b"5678")
+        t.join(10)
+        assert out["got"] == b"12345678"
+
+    def test_close_gives_peer_eof(self, ring_pair):
+        client, server = ring_pair
+        client.sendall(b"bye")
+        client.close()
+        buf = bytearray(8)
+        assert server.recv_into(buf) == 3      # drains buffered bytes...
+        assert server.recv_into(buf) == 0      # ...then clean EOF
+
+    def test_doorbell_park_and_wake(self, ring_pair, monkeypatch):
+        """With no spin/yield budget the consumer parks on the doorbell
+        socket; a produce must set it running again."""
+        client, server = ring_pair
+        monkeypatch.setattr(T, "_YIELD_WAITS", 0)
+        server._spin = 1
+        server._spin_fixed = True   # keep adaptation out of the way
+        out = {}
+
+        def consume():
+            buf = bytearray(4)
+            server.recv_into(buf, 4, socket.MSG_WAITALL)
+            out["got"] = bytes(buf)
+
+        t = threading.Thread(target=consume, daemon=True)
+        t.start()
+        deadline = time.time() + 5
+        while not T._load(server._mv, server._csleep_off):
+            assert time.time() < deadline, "consumer never parked"
+            time.sleep(0.01)
+        client.sendall(b"ding")       # sleeping flag set -> doorbell byte
+        t.join(10)
+        assert out["got"] == b"ding"
+
+    def test_fork_guard(self, ring_pair):
+        """A ring used from a different process than the one that opened
+        it must refuse to run (SPSC indices would corrupt) — same
+        contract as the client mux's pid guard."""
+        client, _ = ring_pair
+        client.pid -= 1   # simulate: ring opened by the parent pre-fork
+        with pytest.raises(ConnectionError, match="fork"):
+            client.sendall(b"x")
+        with pytest.raises(ConnectionError, match="fork"):
+            client.recv(1)
+
+    def test_threaded_stress_bidirectional(self, ring_pair):
+        """Concurrent request/response traffic with varying sizes stays
+        framed and ordered in both directions."""
+        client, server = ring_pair
+        N = 300
+
+        def echo():
+            buf = bytearray(1 << 15)
+            mv = memoryview(buf)
+            for _ in range(N):
+                server.recv_into(mv, 4, socket.MSG_WAITALL)
+                n = int.from_bytes(buf[:4], "big")
+                server.recv_into(mv, n, socket.MSG_WAITALL)
+                server.sendmsg([bytes(buf[:4]), bytes(buf[:n])])
+
+        t = threading.Thread(target=echo, daemon=True)
+        t.start()
+        buf = bytearray(1 << 15)
+        for i in range(N):
+            payload = bytes([i & 0xFF]) * (1 + (i * 37) % 9000)
+            client.sendmsg([len(payload).to_bytes(4, "big"), payload])
+            client.recv_into(memoryview(buf), 4 + len(payload),
+                             socket.MSG_WAITALL)
+            assert bytes(buf[4:4 + len(payload)]) == payload
+        t.join(10)
+
+    def test_close_unlinks_segment(self):
+        a, b = socket.socketpair(socket.AF_UNIX, socket.SOCK_STREAM)
+        out = {}
+        t = threading.Thread(
+            target=lambda: out.update(s=T.accept_ring(b)), daemon=True)
+        t.start()
+        client = T.create_ring(a, capacity=1 << 16)
+        t.join(10)
+        name = client._shm.name
+        out["s"].close()
+        client.close()
+        from multiprocessing import shared_memory
+        with pytest.raises(FileNotFoundError):
+            shared_memory.SharedMemory(name=name)
+
+
+# ---------------------------------------------------------------------------
+# Socket tuning regression (satellite: _tune vs AF_UNIX)
+# ---------------------------------------------------------------------------
+
+
+class TestTuneGuards:
+    def test_tune_skips_nodelay_on_af_unix(self):
+        from repro.core.kvserver import _tune
+        a, b = socket.socketpair(socket.AF_UNIX, socket.SOCK_STREAM)
+        try:
+            _tune(a)   # must not raise (TCP_NODELAY is an AF_INET option)
+        finally:
+            a.close()
+            b.close()
+
+    def test_tune_still_sets_nodelay_on_tcp(self):
+        from repro.core.kvserver import _tune
+        ls = socket.socket()
+        ls.bind(("127.0.0.1", 0))
+        ls.listen(1)
+        c = socket.create_connection(ls.getsockname())
+        s, _ = ls.accept()
+        try:
+            _tune(s)
+            assert s.getsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY)
+        finally:
+            c.close()
+            s.close()
+            ls.close()
+
+    def test_tune_accepts_ring(self):
+        """Rings advertise family == -1; _tune must treat them as
+        non-INET — SOL_SOCKET sizing is a harmless no-op on a ring, but
+        TCP options must never be attempted."""
+        from repro.core.kvserver import _tune
+
+        class FakeRing:
+            family = -1
+
+            def setsockopt(self, level, *a):
+                assert level == socket.SOL_SOCKET, \
+                    f"non-INET conn got level {level} option"
+
+        _tune(FakeRing())
