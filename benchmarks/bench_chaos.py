@@ -1,0 +1,92 @@
+"""Chaos gate (PR 7): seeded fault injection against the replicated
+cluster, reporting failover latency and asserting zero lost acks.
+
+Wraps ``tests/chaos.py`` (the harness proper) in the benchmark-row API so
+the numbers ride the same CI artifact as the perf trajectory:
+
+- ``chaos/failover`` — mean watchdog-failover latency in us (the
+  ``us_per_call`` column), with per-kill latencies, ack audit counts and
+  injected-fault counts in the derived string. One row per seed.
+
+Run directly for the CI gate::
+
+    PYTHONPATH=src python -m benchmarks.bench_chaos --seed 7 --quick \
+        --assert-zero-lost-acks
+    PYTHONPATH=src python -m benchmarks.bench_chaos --seed 7,11,13
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List, Tuple
+
+# the harness lives with the tests; make it importable regardless of cwd
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _REPO_ROOT not in sys.path:  # pragma: no cover - import plumbing
+    sys.path.insert(0, _REPO_ROOT)
+
+from tests.chaos import run_chaos  # noqa: E402
+
+DEFAULT_SEEDS = (7, 11, 13)
+
+
+def _row(res: Dict[str, Any]) -> Tuple[str, float, str]:
+    fo = res["failover_ms"]
+    mean_us = (sum(fo) / len(fo)) * 1e3 if fo else 0.0
+    derived = (f"lost={res['lost_acked_writes']}/"
+               f"{res['acked_sets'] + res['acked_pushes']} acks "
+               f"failovers={['%.0fms' % f for f in fo]} "
+               f"dup_pushes={res['dup_pushes']} "
+               f"severs={res['client_severs']} "
+               f"typed_errors={res['typed_errors']} "
+               f"seed={res['seed']}")
+    return (f"chaos/failover/seed{res['seed']}", mean_us, derived)
+
+
+def run(quick: bool = False, seeds=None) -> List[Tuple[str, float, str]]:
+    """Benchmark-harness entry point (``benchmarks.run`` MODULES API)."""
+    seeds = list(seeds) if seeds else ([7] if quick else list(DEFAULT_SEEDS))
+    return [_row(run_chaos(seed=s, quick=quick)) for s in seeds]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", default="7",
+                    help="comma-separated seeds (one run per seed)")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--assert-zero-lost-acks", action="store_true",
+                    help="exit 1 if any run lost an acknowledged write "
+                         "(run_chaos also raises internally)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write full per-seed audit dicts to PATH")
+    args = ap.parse_args(argv)
+    seeds = [int(s) for s in args.seed.split(",")]
+    results = []
+    failed = False
+    for s in seeds:
+        try:
+            res = run_chaos(seed=s, quick=args.quick)
+        except AssertionError as exc:
+            print(f"seed {s}: LOST ACKED WRITES: {exc}", file=sys.stderr)
+            failed = True
+            continue
+        results.append(res)
+        name, us, derived = _row(res)
+        print(f"{name},{us:.1f},\"{derived}\"")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema": 1, "results": results}, f, indent=2,
+                      sort_keys=True)
+    if args.assert_zero_lost_acks and (
+            failed or any(r["lost_acked_writes"] for r in results)):
+        print("chaos gate FAILED: acknowledged writes were lost",
+              file=sys.stderr)
+        return 1
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,6 +29,7 @@ MODULES = [
     ("sort", "benchmarks.bench_sort"),              # Table 3
     ("apps", "benchmarks.bench_apps"),              # Figs 9-12 + Table 5
     ("compression", "benchmarks.bench_compression"),  # beyond-paper
+    ("chaos", "benchmarks.bench_chaos"),            # PR 7 robustness gate
     ("roofline", "benchmarks.roofline"),            # dry-run report
 ]
 

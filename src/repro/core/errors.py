@@ -1,0 +1,71 @@
+"""Typed error hierarchy for the replicated KV serving plane.
+
+Both exceptions subclass :class:`ConnectionError` so existing callers that
+catch ``ConnectionError`` keep working; new callers can match on the typed
+subclasses to drive failover-aware behaviour (descriptor refresh, retry,
+re-park).
+
+The classes live in their own leaf module because they are raised by the
+server (``kvserver``), encoded by the wire codec (``serialization``) and
+consumed by the cluster client (``kvcluster``) — importing them from any of
+those modules would create a cycle.
+"""
+
+from __future__ import annotations
+
+
+class ShardUnavailableError(ConnectionError):
+    """A shard could not serve a request and the command was not retried.
+
+    Raised by ``ClusterClient`` when a shard connection dies (or redirects)
+    and the in-flight command is not safe to retry automatically, or when the
+    bounded retry budget is exhausted.  Carries enough context for the caller
+    to decide what to do next:
+
+    - ``shard``: index of the shard that failed (``None`` if unknown).
+    - ``descriptor_version``: the cluster-descriptor epoch the client had
+      last observed when it gave up (``None`` if the client was built from a
+      static shard list and has no descriptor).
+    """
+
+    def __init__(self, message="shard unavailable", shard=None,
+                 descriptor_version=None):
+        super().__init__(message)
+        self.shard = shard
+        self.descriptor_version = descriptor_version
+
+    def __reduce__(self):
+        msg = self.args[0] if self.args else "shard unavailable"
+        return (type(self), (msg, self.shard, self.descriptor_version))
+
+
+class EndpointConnectError(ConnectionError):
+    """Connection ESTABLISHMENT to every advertised endpoint failed.
+
+    Distinct from a mid-stream connection death: no byte of the command
+    ever reached a server, so retrying — after a descriptor refresh — is
+    safe regardless of the command's idempotence. ``ClusterClient``
+    relies on this distinction to retry non-idempotent commands whose
+    shard died *before* the attempt (the common case right after a
+    failover, when the old primary's endpoints are still cached)."""
+
+
+class ShardRedirectError(ConnectionError):
+    """A replica refused to execute a command meant for its primary.
+
+    Replica-mode servers answer mutating commands with this error instead of
+    executing them; the payload tells the client which topology epoch the
+    replica believes is current so the client can refetch the cluster
+    descriptor and re-route.  A redirected command was **never executed**, so
+    it is always safe to retry after a refresh, regardless of idempotence.
+    """
+
+    def __init__(self, message="replica cannot serve this command", epoch=0,
+                 shard=-1):
+        super().__init__(message)
+        self.epoch = epoch
+        self.shard = shard
+
+    def __reduce__(self):
+        msg = self.args[0] if self.args else "replica cannot serve this command"
+        return (type(self), (msg, self.epoch, self.shard))

@@ -35,9 +35,17 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tupl
 
 from . import serialization
 from . import session as _session
+from .errors import ShardUnavailableError
 from .reference import fresh_uid
 
 __all__ = ["FunctionExecutor", "TaskFuture", "RemoteError", "FunctionTimeoutError"]
+
+# Collector re-park budget after a result-list shard failure: each
+# attempt refreshes the cluster descriptor and backs off, so the window
+# covered (~max * (backoff + failover_timeout)) comfortably spans a
+# watchdog promotion; a permanently-lost shard still fails the job.
+_COLLECT_UNAVAILABLE_MAX = 8
+_COLLECT_UNAVAILABLE_BACKOFF_S = 0.25
 
 
 class RemoteError(Exception):
@@ -339,9 +347,37 @@ class FunctionExecutor:
         # dedicated BLOCKING lane: the collector parking here between
         # results can never head-of-line block the submission threads'
         # fast commands on the shared main-lane socket (see kvserver).
+        unavailable = 0
         while True:
             try:
                 got = self._store.blpop(self._result_list, timeout=0.5)
+                unavailable = 0
+            except ShardUnavailableError as exc:
+                # The shard holding the result list died mid-park. Against
+                # a replicated cluster the supervisor promotes a replica
+                # and republishes the descriptor: refresh our view and
+                # RE-PARK on the promoted shard instead of failing the
+                # whole job. Bounded: a shard that stays down (no replica,
+                # or replication disabled) settles pending with the error
+                # after _COLLECT_UNAVAILABLE_MAX consecutive failures.
+                unavailable += 1
+                if unavailable < _COLLECT_UNAVAILABLE_MAX:
+                    refresh = getattr(self._store, "refresh", None)
+                    if callable(refresh):
+                        try:
+                            refresh()
+                        except Exception:
+                            pass
+                    time.sleep(_COLLECT_UNAVAILABLE_BACKOFF_S)
+                    continue
+                with self._lock:
+                    pending = list(self._pending.keys())
+                for task_id in pending:
+                    self._settle(task_id, "error",
+                                 (f"{type(exc).__name__}: {exc}",
+                                  "result-list shard unavailable and "
+                                  "failover did not complete"), {})
+                return
             except (ConnectionError, OSError) as exc:
                 # store connection closed under us (session teardown /
                 # server gone): no result can arrive on this list anymore.

@@ -79,13 +79,68 @@ outlive their supervisor, even if it is SIGKILLed.
 Transports (PR 6): each shard serves every carrier its ``KVServer``
 supports (TCP + Unix-domain + shm rings, see ``repro.core.transport``)
 and advertises the full endpoint list in the spawn handshake; the
-descriptor is version 2 with an ``"endpoints"`` key (one url list per
-shard) alongside the legacy ``"shards"`` host/port pairs, so old
+descriptor carries an ``"endpoints"`` key (one url list per shard)
+alongside the legacy ``"shards"`` host/port pairs, so old
 clients keep bootstrapping. ``ClusterClient(transport=...)`` pins one
 carrier for A/B runs; the default auto-selects per shard (shm > uds >
 tcp same-host, falling back down the list on connect failure). The
 parent removes a dead shard's stale uds rendezvous path on terminate,
 so ``restart_shard`` never trips over the corpse's socket file.
+
+Replication & the consistency model (PR 7)
+------------------------------------------
+
+``KVCluster(replicas=N)`` gives every shard N replica processes. The
+primary executes mutating commands under one replication lock (so log
+order == execution order), appends each realized effect to a command
+log, and a streamer thread per replica ships the log as
+``repl_apply(first_seq, entries)`` batches over a plain ``KVClient`` —
+replication rides the same wire dialects (v4 raw for small scalar
+entries, pickle + out-of-band zero-copy for everything else) and the
+same pluggable transports as client traffic. Blocking pops are logged
+as their realized non-blocking effect (a ``blpop`` that popped key ``k``
+replays as ``lpop(k)``), so replicas never park. Replicas deduplicate by
+sequence number, which makes duplicate deliveries (retries, chaos
+injection) harmless, and answer any mutating client command with a typed
+``ShardRedirectError`` instead of executing it.
+
+What "acknowledged" guarantees, per ack policy:
+
+``ack="primary"`` (default)
+    A write is acknowledged once the PRIMARY applied it; replication is
+    asynchronous. Latency is within noise of an unreplicated shard, but
+    a primary failure may lose the tail of acknowledged writes that had
+    not yet streamed (the replication lag, typically well under a
+    millisecond on one host). This is Redis-style async replication.
+
+``ack="quorum"``
+    A write is acknowledged only after a MAJORITY of the shard's node
+    set (primary + replicas) holds it — e.g. primary + 1 of 1, or
+    primary + 1 of 2 replicas. An acknowledged write then survives any
+    minority of node failures: whichever freshest replica the
+    supervisor promotes is guaranteed to hold every acknowledged write.
+    The cost is one replication round trip inside every mutating
+    command (reads stay un-acked and fast). A double failure that
+    removes a majority (e.g. primary + the acking replica of 3 nodes)
+    may lose acknowledged writes — quorum tolerates minority failure
+    only. If the quorum cannot be reached within ``quorum_timeout``,
+    the client gets ``ShardUnavailableError`` for a write that IS
+    applied locally but unacknowledged (at-least-once semantics; the
+    supervisor's watchdog detaches dead replicas so later writes
+    degrade to the surviving majority instead of wedging).
+
+Failover window semantics: when a primary dies, the watchdog (or an
+explicit ``promote_shard``) picks the replica with the highest applied
+sequence, flips it to primary via ``repl_promote`` (it adopts its apply
+history as the new command log and streams to the surviving peers),
+bumps the descriptor ``epoch``, and republishes. Clients that hit the
+dead primary refetch the descriptor (``ClusterClient.refresh()``) and
+retry idempotent commands with bounded exponential backoff; in-flight
+non-idempotent commands surface ``ShardUnavailableError`` (ambiguous:
+the dead primary may or may not have applied them — exactly the
+at-least-once window every primary-failover system has). During the
+window between death and promotion, affected commands retry or fail
+typed; commands on other shards proceed untouched.
 """
 
 from __future__ import annotations
@@ -94,20 +149,51 @@ import os
 import subprocess
 import sys
 import threading
+import time
 from collections import deque
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from . import transport as _transport
+from .errors import (EndpointConnectError, ShardRedirectError,
+                     ShardUnavailableError)
 from .kvserver import KVClient, KVServer, _sendv
 from .kvstore import KVStore, Metrics, _ShardRouter, _debatch
 
-__all__ = ["KVCluster", "ClusterClient", "connect", "DESCRIPTOR_KEY"]
+__all__ = ["KVCluster", "ClusterClient", "connect", "DESCRIPTOR_KEY",
+           "ShardRedirectError", "ShardUnavailableError"]
 
 #: Well-known control-store key holding the cluster descriptor.
 DESCRIPTOR_KEY = "__cluster__"
 
 #: Seconds to wait for a shard child to report its bound address.
 _SPAWN_TIMEOUT_S = 30.0
+
+#: Client-side failover retry tuning (see ``ClusterClient._shard_call``).
+_RETRY_MIN_BACKOFF_S = 0.05
+_RETRY_MAX_BACKOFF_S = 0.8
+
+#: Commands safe to retry transparently after a shard connection dies:
+#: pure reads plus idempotent writes (replaying the same absolute write
+#: converges to the same state). Counters, pushes, pops, getset and
+#: transactions are NOT here — a lost reply makes their effect
+#: ambiguous, so they surface ``ShardUnavailableError`` instead.
+_RETRY_SAFE = frozenset({
+    "get", "mget", "exists", "ttl", "type_of", "keys", "dbsize", "info",
+    "getrange", "strlen", "llen", "lindex", "lrange",
+    "hget", "hmget", "hgetall", "hlen", "hkeys", "hvals", "hexists",
+    "smembers", "scard", "sismember", "bllen",
+    "set", "mset", "setrange", "msetrange", "delete", "expire", "persist",
+    "lset", "ltrim", "hset", "hdel", "sadd", "srem", "flushall",
+})
+
+
+def _retry_safe(cmd: str, args: tuple, kwargs: dict) -> bool:
+    if cmd not in _RETRY_SAFE:
+        return False
+    if cmd == "set" and (kwargs.get("nx")
+                         or (len(args) > 3 and args[3])):
+        return False  # nx: a lost reply flips the answer on retry
+    return True
 
 
 # ---------------------------------------------------------------------------
@@ -116,10 +202,19 @@ _SPAWN_TIMEOUT_S = 30.0
 
 
 class _ShardProc:
-    """One supervised shard process: handshake, stderr tail, liveness."""
+    """One supervised shard process: handshake, stderr tail, liveness.
 
-    def __init__(self, index: int, host: str, port: int):
+    ``role`` is ``"primary"`` or ``"replica"``; a primary spawned with
+    ``replicate_to`` (one endpoint-url list per replica) starts
+    streaming its command log to those replicas immediately."""
+
+    def __init__(self, index: int, host: str, port: int,
+                 name: Optional[str] = None, role: str = "primary",
+                 replicate_to: Sequence[Sequence[str]] = (),
+                 ack: str = "primary", quorum_timeout: float = 5.0):
         self.index = index
+        self.role = role
+        self.name = name or f"shard{index}"
         self.proc: Optional[subprocess.Popen] = None
         self.address: Optional[Tuple[str, int]] = None
         #: every carrier the shard serves, as endpoint urls (PR 6); a
@@ -127,19 +222,27 @@ class _ShardProc:
         #: its tcp url, so mixed-version supervision keeps working
         self.endpoints: List[str] = []
         self._stderr_tail: deque = deque(maxlen=200)
-        self._spawn(host, port)
+        self._spawn(host, port, replicate_to, ack, quorum_timeout)
 
-    def _spawn(self, host: str, port: int) -> None:
+    def _spawn(self, host: str, port: int,
+               replicate_to: Sequence[Sequence[str]], ack: str,
+               quorum_timeout: float) -> None:
         env = os.environ.copy()
         # children must import repro even when the parent runs from an
         # uninstalled checkout
         src_root = os.path.dirname(os.path.dirname(
             os.path.dirname(os.path.abspath(__file__))))
         env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+        argv = [sys.executable, "-m", "repro.core.kvcluster",
+                "--serve-shard", "--host", host, "--port", str(port),
+                "--name", self.name, "--shard-index", str(self.index),
+                "--ack", ack, "--quorum-timeout", str(quorum_timeout)]
+        if self.role == "replica":
+            argv.append("--replica")
+        for urls in replicate_to:
+            argv += ["--replicate-to", ",".join(urls)]
         self.proc = subprocess.Popen(
-            [sys.executable, "-m", "repro.core.kvcluster", "--serve-shard",
-             "--host", host, "--port", str(port),
-             "--name", f"shard{self.index}"],
+            argv,
             stdin=subprocess.PIPE, stdout=subprocess.PIPE,
             stderr=subprocess.PIPE, env=env, text=True)
         threading.Thread(target=self._drain_stderr, daemon=True,
@@ -180,6 +283,23 @@ class _ShardProc:
 
     def alive(self) -> bool:
         return self.proc is not None and self.proc.poll() is None
+
+    def kill(self) -> None:
+        """SIGKILL the child (the chaos harness's primary weapon): no
+        orderly shutdown, no uds unlink by the child — exactly a crash.
+        Stale rendezvous paths are removed here in the parent."""
+        proc = self.proc
+        if proc is None:
+            return
+        try:
+            proc.kill()
+        except OSError:
+            pass
+        try:
+            proc.wait(timeout=5)
+        except subprocess.TimeoutExpired:  # pragma: no cover
+            pass
+        self._remove_stale_paths()
 
     def terminate(self, grace_s: float = 5.0) -> None:
         proc = self.proc
@@ -240,14 +360,31 @@ class KVCluster:
     """
 
     def __init__(self, shards: int = 2, host: str = "127.0.0.1",
-                 control_port: int = 0, hash_seed: int = 0):
+                 control_port: int = 0, hash_seed: int = 0,
+                 replicas: int = 0, ack: str = "primary",
+                 watchdog: bool = False, heartbeat_s: float = 0.5,
+                 quorum_timeout: float = 5.0):
         if shards < 1:
             raise ValueError("need at least one shard")
+        if replicas < 0:
+            raise ValueError("replicas must be >= 0")
+        if ack not in ("primary", "quorum"):
+            raise ValueError(f"unknown ack policy {ack!r}")
         self.n_shards = int(shards)
         self.host = host
         self.hash_seed = hash_seed
+        self.replicas = int(replicas)
+        self.ack = ack
+        self.watchdog = bool(watchdog)
+        self.heartbeat_s = float(heartbeat_s)
+        self.quorum_timeout = float(quorum_timeout)
         self._control_port = control_port
         self._procs: List[_ShardProc] = []
+        self._replicas: List[List[_ShardProc]] = []
+        self._epoch = 1
+        self._topo_lock = threading.RLock()
+        self._watchdog_thread: Optional[threading.Thread] = None
+        self._watchdog_stop = threading.Event()
         self._control: Optional[KVServer] = None
         self._started = False
 
@@ -259,8 +396,18 @@ class KVCluster:
         try:
             for i in range(self.n_shards):
                 # append as we go: if a later spawn fails, _teardown must
-                # reach the shards already running
-                self._procs.append(_ShardProc(i, self.host, 0))
+                # reach the shards already running. Replicas spawn first
+                # (the primary needs their endpoints to start streaming).
+                reps: List[_ShardProc] = []
+                self._replicas.append(reps)
+                for j in range(self.replicas):
+                    reps.append(_ShardProc(i, self.host, 0,
+                                           name=f"shard{i}r{j}",
+                                           role="replica"))
+                self._procs.append(_ShardProc(
+                    i, self.host, 0, name=f"shard{i}",
+                    replicate_to=[r.endpoints for r in reps],
+                    ack=self.ack, quorum_timeout=self.quorum_timeout))
             store = KVStore(name="cluster-control")
             store.set(DESCRIPTOR_KEY, self.describe())
             self._control = KVServer(store, host=self.host,
@@ -269,10 +416,19 @@ class KVCluster:
             self._teardown()
             raise
         self._started = True
+        if self.watchdog:
+            self._watchdog_stop.clear()
+            self._watchdog_thread = threading.Thread(
+                target=self._watch, daemon=True, name="kvcluster-watchdog")
+            self._watchdog_thread.start()
         return self
 
     def stop(self) -> None:
         self._started = False
+        self._watchdog_stop.set()
+        if self._watchdog_thread is not None:
+            self._watchdog_thread.join(timeout=2 * self.heartbeat_s + 5)
+            self._watchdog_thread = None
         self._teardown()
 
     def _teardown(self) -> None:
@@ -282,6 +438,10 @@ class KVCluster:
         for p in self._procs:
             p.terminate()
         self._procs = []
+        for reps in self._replicas:
+            for r in reps:
+                r.terminate()
+        self._replicas = []
 
     def __enter__(self) -> "KVCluster":
         return self.start()
@@ -310,22 +470,41 @@ class KVCluster:
     def describe(self) -> Dict[str, Any]:
         """The cluster descriptor served under :data:`DESCRIPTOR_KEY`.
 
-        Version 2 (PR 6): ``"endpoints"`` carries one url list per shard
-        (tcp/uds/shm); ``"shards"`` keeps the bare host/port pairs so
-        pre-endpoint clients bootstrap unchanged."""
-        return {
-            "version": 2,
-            "shards": [list(p.address) for p in self._procs],
-            "endpoints": self.shard_endpoints,
-            "n_shards": len(self._procs),
-            "hash": "fnv1a-hashtag",
-            "hash_seed": self.hash_seed,
-        }
+        Version 3 (PR 7): ``"epoch"`` is a monotonically increasing
+        topology version bumped on every promotion or restart — clients
+        compare it to decide whether a refetch changed anything;
+        ``"replicas"`` carries one endpoint-url list per replica per
+        shard and ``"ack"`` names the acknowledgement policy. Version 2
+        (PR 6) added ``"endpoints"`` (one url list per shard, tcp/uds/
+        shm); ``"shards"`` keeps the bare host/port pairs so pre-endpoint
+        clients bootstrap unchanged."""
+        with self._topo_lock:
+            return {
+                "version": 3,
+                "epoch": self._epoch,
+                "shards": [list(p.address) for p in self._procs],
+                "endpoints": self.shard_endpoints,
+                "replicas": [[list(r.endpoints) for r in reps]
+                             for reps in self._replicas],
+                "ack": self.ack,
+                "n_shards": len(self._procs),
+                "hash": "fnv1a-hashtag",
+                "hash_seed": self.hash_seed,
+            }
+
+    def _republish(self) -> None:
+        """Push the current descriptor to the control store (clients
+        refetch it on redirect or connection death)."""
+        if self._control is not None:
+            self._control.store.set(DESCRIPTOR_KEY, self.describe())
 
     def client(self, **kwargs: Any) -> "ClusterClient":
         if not self._started:
             raise RuntimeError("cluster is not started")
-        return ClusterClient(shard_addresses=self.shard_endpoints,
+        # hand the control address too so the client can refresh its
+        # view of the topology after a promotion or restart
+        return ClusterClient(address=self.address,
+                             shard_addresses=self.shard_endpoints,
                              hash_seed=self.hash_seed, **kwargs)
 
     # -- supervision ---------------------------------------------------------
@@ -345,6 +524,117 @@ class KVCluster:
             raise RuntimeError(f"kv cluster degraded: {detail}"
                                + (f"\n{tails}" if tails else ""))
 
+    def kill_shard(self, index: int) -> None:
+        """SIGKILL shard ``index``'s primary (chaos-harness hook). The
+        watchdog — or an explicit ``promote_shard``/``supervise_once`` —
+        is responsible for recovery."""
+        self._procs[index].kill()
+
+    def kill_replica(self, index: int, replica: int = 0) -> None:
+        """SIGKILL one replica of shard ``index`` (chaos-harness hook)."""
+        self._replicas[index][replica].kill()
+
+    def promote_shard(self, index: int) -> Tuple[str, int]:
+        """Fail shard ``index`` over to its freshest live replica.
+
+        Picks the replica with the highest applied sequence (ties broken
+        by replica order), tells it to become a primary (it seeds its
+        replication log from its retained entries and attaches the
+        surviving peers, which catch up from their own positions), bumps
+        the topology epoch and republishes the descriptor. Returns the
+        new primary's address. Raises RuntimeError when no live replica
+        exists — that shard's partition is lost and only an explicit
+        ``restart_shard`` (empty store) can bring it back."""
+        with self._topo_lock:
+            old = self._procs[index]
+            old.kill()  # no-op on a corpse, but always clears stale paths
+            reps = self._replicas[index]
+            infos = []
+            for r in reps:
+                if not r.alive():
+                    continue
+                try:
+                    c = KVClient(r.endpoints)
+                    try:
+                        info = c.repl_info()
+                    finally:
+                        c.close()
+                except Exception:
+                    continue
+                infos.append((int(info.get("seq", 0)), r))
+            if not infos:
+                raise RuntimeError(
+                    f"shard {index}: no live replica to promote "
+                    f"(primary stderr: {old.stderr_tail()!r})")
+            # freshest replica wins; key= because _ShardProc is unorderable
+            infos.sort(key=lambda t: t[0], reverse=True)
+            _, winner = infos[0]
+            reps.remove(winner)
+            peers = [list(r.endpoints) for r in reps if r.alive()]
+            self._epoch += 1
+            c = KVClient(winner.endpoints)
+            try:
+                c.repl_promote(peers=peers, ack=self.ack,
+                               quorum_timeout=self.quorum_timeout,
+                               epoch=self._epoch)
+            finally:
+                c.close()
+            winner.role = "primary"
+            self._procs[index] = winner
+            self._republish()
+            return winner.address
+
+    def supervise_once(self) -> bool:
+        """One supervision pass: promote any dead primary, detach any
+        dead replica from its primary's streamer set. Returns True when
+        the pass changed the topology (and republished)."""
+        changed = False
+        with self._topo_lock:
+            for i, p in enumerate(self._procs):
+                if not p.alive():
+                    try:
+                        self.promote_shard(i)
+                        changed = True
+                    except RuntimeError:
+                        sys.stderr.write(
+                            f"[kvcluster] shard {i} is down and has no "
+                            "promotable replica\n")
+            for i, reps in enumerate(self._replicas):
+                dead = [r for r in reps if not r.alive()]
+                for r in dead:
+                    reps.remove(r)
+                    self._detach_replica(i, r)
+                    changed = True
+            if changed:
+                self._republish()
+        return changed
+
+    def _detach_replica(self, index: int, rep: "_ShardProc") -> None:
+        """Tell shard ``index``'s primary to stop streaming to a dead
+        replica (under quorum ack this shrinks the vote set — a degraded
+        primary keeps accepting writes rather than stalling forever)."""
+        primary = self._procs[index]
+        if not primary.alive():
+            return
+        try:
+            c = KVClient(primary.endpoints)
+            try:
+                c.repl_detach(list(rep.endpoints))
+            finally:
+                c.close()
+        except Exception:
+            pass  # primary died between the liveness check and the call
+
+    def _watch(self) -> None:
+        """Watchdog loop (``watchdog=True``): heartbeat liveness checks
+        every ``heartbeat_s`` seconds, promoting/detaching as needed."""
+        while not self._watchdog_stop.wait(self.heartbeat_s):
+            try:
+                self.supervise_once()
+            except Exception as exc:  # pragma: no cover - defensive
+                sys.stderr.write(f"[kvcluster] watchdog pass failed: "
+                                 f"{exc!r}\n")
+
     def restart_shard(self, index: int) -> Tuple[str, int]:
         """Respawn shard ``index`` on a FRESH ephemeral OS-assigned port
         and republish the descriptor. Rebinding the previous fixed port
@@ -355,20 +645,70 @@ class KVCluster:
         already-bootstrapped clients must re-bootstrap from the control
         endpoint (which always serves the current descriptor). The
         shard's partition restarts EMPTY — callers own the data-loss
-        consequences, which is why restart is explicit. Returns the
-        shard's new address."""
-        old = self._procs[index]
-        host = old.address[0] if old.address else self.host
-        old.terminate()
-        self._procs[index] = _ShardProc(index, host, 0)
-        if self._control is not None:
-            self._control.store.set(DESCRIPTOR_KEY, self.describe())
-        return self._procs[index].address
+        consequences, which is why restart is explicit. When the cluster
+        runs with replicas the old replica set is torn down and a fresh
+        one spawned (their logs describe the dead primary's history —
+        useless to the empty respawn). Bumps the topology epoch and
+        republishes; returns the shard's new address."""
+        with self._topo_lock:
+            old = self._procs[index]
+            host = old.address[0] if old.address else self.host
+            old.terminate()
+            for r in self._replicas[index]:
+                r.terminate()
+            reps: List[_ShardProc] = []
+            for j in range(self.replicas):
+                reps.append(_ShardProc(index, host, 0,
+                                       name=f"shard{index}r{j}",
+                                       role="replica"))
+            self._replicas[index] = reps
+            self._procs[index] = _ShardProc(
+                index, host, 0, name=f"shard{index}",
+                replicate_to=[r.endpoints for r in reps],
+                ack=self.ack, quorum_timeout=self.quorum_timeout)
+            self._epoch += 1
+            self._republish()
+            return self._procs[index].address
 
 
 # ---------------------------------------------------------------------------
 # Cluster client
 # ---------------------------------------------------------------------------
+
+
+class _FailoverShard:
+    """Stable per-index shard handle held in ``ClusterClient.shards``.
+
+    The router (``_ShardRouter``) keeps references to ``self.shards[i]``
+    across calls — including inside a parked blocking pop — so the entry
+    for shard ``i`` must survive a failover. The proxy is that stable
+    identity: it looks up the CURRENT ``KVClient`` for its index on every
+    command (``owner._clients[index]``, rebound by ``refresh``) and
+    routes through ``owner._shard_call``, which owns redirect handling,
+    refresh-on-disconnect and the bounded retry policy."""
+
+    __slots__ = ("_owner", "index")
+
+    def __init__(self, owner: "ClusterClient", index: int):
+        self._owner = owner
+        self.index = index
+
+    @property
+    def mux_enabled(self) -> bool:
+        return self._owner._clients[self.index].mux_enabled
+
+    def __getattr__(self, cmd: str):
+        if cmd.startswith("_"):
+            raise AttributeError(cmd)
+        owner, index = self._owner, self.index
+
+        def call(*args: Any, **kwargs: Any) -> Any:
+            return owner._shard_call(index, cmd, args, kwargs)
+        call.__name__ = cmd
+        return call
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"_FailoverShard({self.index})"
 
 
 class ClusterClient(_ShardRouter):
@@ -379,56 +719,187 @@ class ClusterClient(_ShardRouter):
     command on one shard; multi-key commands split per shard; pipeline
     batches flush as concurrent per-shard ``execute_batch`` frames
     (scatter/gather — see ``execute_batch``). The ``shards`` attribute
-    holds one ``KVClient`` per shard, which is also what the IPC layer's
-    ``hasattr(store, "shards")`` probes key on to pass transaction key
-    hints.
+    holds one ``_FailoverShard`` handle per shard, which is also what the
+    IPC layer's ``hasattr(store, "shards")`` probes key on to pass
+    transaction key hints.
+
+    Failover (PR 7): when a command hits a replica redirect or the shard
+    connection dies, the client refetches the cluster descriptor from
+    the control ``address`` and rebinds the affected shard's connection.
+    Redirected commands were never executed and always retry; commands
+    that may have executed retry only when idempotent (``_RETRY_SAFE``),
+    with exponential backoff bounded by ``failover_timeout_s``.
+    Everything else surfaces as :class:`ShardUnavailableError` carrying
+    the shard index and last-seen descriptor epoch, so callers (e.g. the
+    executor's collector) can refresh and re-issue deliberately. A
+    client built from a bare ``shard_addresses`` list has no control
+    endpoint to refresh from and fails fast with the typed error.
     """
 
     def __init__(self, address: Any = None,
                  shard_addresses: Optional[Sequence[Any]] = None,
                  legacy_protocol: bool = False, hash_seed: int = 0,
                  mux: bool = True, raw: bool = True,
-                 transport: Optional[str] = None):
+                 transport: Optional[str] = None,
+                 failover_timeout_s: float = 10.0):
+        self._control_address = address
+        self._legacy = legacy_protocol
+        self._mux_opt = mux
+        self._raw_opt = raw
+        self.transport = transport
+        self.failover_timeout_s = float(failover_timeout_s)
+        self._desc_epoch = 0
+        self._refresh_lock = threading.Lock()
+        self._clients: List[KVClient] = []
+        self._client_keys: List[Tuple[str, ...]] = []
         if shard_addresses is None:
             if address is None:
                 raise ValueError("need a control address or shard addresses")
-            boot = KVClient(address)
-            try:
-                desc = boot.get(DESCRIPTOR_KEY)
-            finally:
-                boot.close()
-            if not isinstance(desc, dict) or "shards" not in desc:
-                raise ConnectionError(
-                    f"{address!r} is not a cluster control endpoint (no "
-                    "descriptor; use KVClient for a plain KVServer)")
-            # v2 descriptors advertise per-shard endpoint url lists;
-            # v1 only has host/port pairs (tcp)
+            desc = self._fetch_descriptor()
             shard_addresses = (desc.get("endpoints")
                                or [tuple(a) for a in desc["shards"]])
             hash_seed = desc.get("hash_seed", hash_seed)
+            self._desc_epoch = desc.get("epoch", 0)
         if not shard_addresses:
             raise ValueError("need at least one shard address")
         self.hash_seed = hash_seed
-        self.transport = transport
-        # shards at the same address share ONE KVClient (hence one mux
-        # connection): their scatter sub-batches coalesce into one
-        # frame. Co-residency is keyed on the NORMALIZED endpoint set,
-        # so two entries naming the same server through any address
-        # shape still share a client.
-        by_addr: Dict[Tuple[str, ...], KVClient] = {}
-        self.shards = []
-        for a in shard_addresses:
-            eps = _transport.normalize_endpoints(a)
-            key = tuple(sorted(e.url for e in eps))
-            if key not in by_addr:
-                by_addr[key] = KVClient(eps, legacy_protocol=legacy_protocol,
-                                        mux=mux, raw=raw, transport=transport)
-            self.shards.append(by_addr[key])
+        self._bind(shard_addresses)
+        self.shards = [_FailoverShard(self, i)
+                       for i in range(len(self._clients))]
         # client-side counters only (server-side metrics live per shard and
         # are readable via info()): fanout records scatter widths, which no
         # single shard can observe
         self.metrics = Metrics()
         self.name = f"cluster[{len(self.shards)}]"
+
+    # -- topology refresh ----------------------------------------------------
+
+    def _fetch_descriptor(self) -> Dict[str, Any]:
+        boot = KVClient(self._control_address)
+        try:
+            desc = boot.get(DESCRIPTOR_KEY)
+        finally:
+            boot.close()
+        if not isinstance(desc, dict) or "shards" not in desc:
+            raise ConnectionError(
+                f"{self._control_address!r} is not a cluster control "
+                "endpoint (no descriptor; use KVClient for a plain "
+                "KVServer)")
+        return desc
+
+    def _bind(self, shard_addresses: Sequence[Any]) -> None:
+        """(Re)bind per-shard ``KVClient`` connections.
+
+        Shards at the same address share ONE KVClient (hence one mux
+        connection): their scatter sub-batches coalesce into one frame.
+        Co-residency is keyed on the NORMALIZED endpoint set, so two
+        entries naming the same server through any address shape still
+        share a client. On a rebind, shards whose endpoint set did not
+        change KEEP their existing client — a parked blocking pop on a
+        healthy shard must survive another shard's failover — and
+        clients whose endpoints vanished from the topology are closed
+        (resolving their pending futures with ``ConnectionError``)."""
+        by_key: Dict[Tuple[str, ...], KVClient] = {}
+        for key, cl in zip(self._client_keys, self._clients):
+            by_key.setdefault(key, cl)
+        new_clients: List[KVClient] = []
+        new_keys: List[Tuple[str, ...]] = []
+        for a in shard_addresses:
+            eps = _transport.normalize_endpoints(a)
+            key = tuple(sorted(e.url for e in eps))
+            if key not in by_key:
+                by_key[key] = KVClient(eps, legacy_protocol=self._legacy,
+                                       mux=self._mux_opt, raw=self._raw_opt,
+                                       transport=self.transport)
+            new_clients.append(by_key[key])
+            new_keys.append(key)
+        live = set(new_keys)
+        stale = {id(cl): cl
+                 for key, cl in zip(self._client_keys, self._clients)
+                 if key not in live}
+        self._clients, self._client_keys = new_clients, new_keys
+        for cl in stale.values():
+            try:
+                cl.close()
+            except Exception:
+                pass
+
+    def refresh(self, force: bool = False) -> bool:
+        """Refetch the cluster descriptor and rebind changed shards.
+
+        Returns True when the topology changed (the descriptor epoch
+        moved, or ``force`` re-applied it). No-op (returns False) for
+        clients built from a bare shard list — they have no control
+        endpoint to ask."""
+        if self._control_address is None:
+            return False
+        with self._refresh_lock:
+            desc = self._fetch_descriptor()
+            epoch = desc.get("epoch", 0)
+            if not force and epoch == self._desc_epoch:
+                return False
+            shard_addresses = (desc.get("endpoints")
+                               or [tuple(a) for a in desc["shards"]])
+            self._bind(shard_addresses)
+            self.hash_seed = desc.get("hash_seed", self.hash_seed)
+            self._desc_epoch = epoch
+            if len(self.shards) != len(self._clients):
+                self.shards = [_FailoverShard(self, i)
+                               for i in range(len(self._clients))]
+            return True
+
+    def _try_refresh(self, force: bool = False) -> bool:
+        """Best-effort refresh: a briefly unreachable control endpoint
+        must not mask the original shard failure."""
+        try:
+            return self.refresh(force=force)
+        except Exception:
+            return False
+
+    # -- per-command failover ------------------------------------------------
+
+    def _shard_call(self, index: int, cmd: str, args: tuple,
+                    kwargs: dict) -> Any:
+        deadline = time.monotonic() + self.failover_timeout_s
+        delay = _RETRY_MIN_BACKOFF_S
+        while True:
+            client = self._clients[index]
+            try:
+                return client._call(cmd, *args, **kwargs)
+            except ShardRedirectError:
+                # the replica refused without executing: always safe to
+                # retry once the descriptor names the new primary
+                self._try_refresh(force=True)
+            except ShardUnavailableError:
+                raise  # server-side quorum verdict; not ours to retry
+            except EndpointConnectError as exc:
+                # no byte left the client: retry regardless of
+                # idempotence once the descriptor names a live primary —
+                # unless there is no control endpoint to refresh from
+                if self._control_address is None:
+                    raise ShardUnavailableError(
+                        f"shard {index}: {cmd} failed ({exc!r}) and this "
+                        "client has no control endpoint to refresh from",
+                        shard=index,
+                        descriptor_version=self._desc_epoch) from exc
+                self._try_refresh(force=True)
+            except (ConnectionError, OSError) as exc:
+                if (self._control_address is None
+                        or not _retry_safe(cmd, args, kwargs)):
+                    self._try_refresh(force=True)  # help the NEXT call
+                    raise ShardUnavailableError(
+                        f"shard {index}: {cmd} failed ({exc!r}) and is "
+                        "not safe to retry automatically",
+                        shard=index,
+                        descriptor_version=self._desc_epoch) from exc
+                self._try_refresh(force=True)
+            if time.monotonic() >= deadline:
+                raise ShardUnavailableError(
+                    f"shard {index}: {cmd} retries exhausted after "
+                    f"{self.failover_timeout_s:.1f}s",
+                    shard=index, descriptor_version=self._desc_epoch)
+            time.sleep(delay)
+            delay = min(delay * 2, _RETRY_MAX_BACKOFF_S)
 
     def execute_batch(self, commands: List[Tuple[str, tuple, dict]]
                       ) -> List[Tuple[bool, Any]]:
@@ -447,13 +918,42 @@ class ClusterClient(_ShardRouter):
         when another shard fails, so no connection is left holding an
         uncorrelated response; a connection that dies is torn down by its
         mux (every pending future resolves with the error) and is
-        re-established on next use."""
-        return self._route_batch([_debatch(c) for c in commands],
-                                 self._scatter_groups)
+        re-established on next use.
+
+        Failover: a scatter that hits a replica redirect or a dead
+        connection retries the WHOLE batch (after a descriptor refresh)
+        only when every command in it is idempotent — a partial scatter
+        may already have executed some shards' sub-batches, so a batch
+        containing a non-idempotent command surfaces
+        :class:`ShardUnavailableError` instead."""
+        cmds = [_debatch(c) for c in commands]
+        retryable = (self._control_address is not None
+                     and all(_retry_safe(c, a, k) for c, a, k in cmds))
+        deadline = time.monotonic() + self.failover_timeout_s
+        delay = _RETRY_MIN_BACKOFF_S
+        while True:
+            try:
+                return self._route_batch(cmds, self._scatter_groups)
+            except ShardUnavailableError:
+                raise
+            except (ShardRedirectError, ConnectionError, OSError) as exc:
+                self._try_refresh(force=True)
+                if not retryable:
+                    raise ShardUnavailableError(
+                        f"batch of {len(cmds)} failed ({exc!r}) and "
+                        "contains non-idempotent commands",
+                        descriptor_version=self._desc_epoch) from exc
+            if time.monotonic() >= deadline:
+                raise ShardUnavailableError(
+                    f"batch retries exhausted after "
+                    f"{self.failover_timeout_s:.1f}s",
+                    descriptor_version=self._desc_epoch)
+            time.sleep(delay)
+            delay = min(delay * 2, _RETRY_MAX_BACKOFF_S)
 
     def _scatter_groups(self, groups, out) -> None:
         self.metrics.record_fanout(len(groups))
-        if not all(self.shards[idx].mux_enabled for idx in groups):
+        if not all(self._clients[idx].mux_enabled for idx in groups):
             return self._scatter_groups_sockets(groups, out)
         first_err: Optional[BaseException] = None
         pending = []
@@ -463,9 +963,9 @@ class ClusterClient(_ShardRouter):
         # enqueue each connection's batch without flushing yet.
         by_mux: Dict[int, List[int]] = {}
         for idx in sorted(groups):
-            by_mux.setdefault(id(self.shards[idx]), []).append(idx)
+            by_mux.setdefault(id(self._clients[idx]), []).append(idx)
         for idxs in by_mux.values():
-            client = self.shards[idxs[0]]
+            client = self._clients[idxs[0]]
             numbered = [nc for idx in idxs for nc in groups[idx]]
             cmds = [c for _, c in numbered]
             try:
@@ -508,7 +1008,7 @@ class ClusterClient(_ShardRouter):
         first_err: Optional[BaseException] = None
         pending = []
         for idx in sorted(groups):
-            client = self.shards[idx]
+            client = self._clients[idx]
             try:
                 sock = client._sock()
                 _sendv(sock, client._request_frames(
@@ -540,7 +1040,7 @@ class ClusterClient(_ShardRouter):
 
     def close(self) -> None:
         seen = set()
-        for c in self.shards:
+        for c in self._clients:
             if id(c) not in seen:  # co-resident shards share one client
                 seen.add(id(c))
                 c.close()
@@ -565,7 +1065,10 @@ def connect(address: Any, legacy_protocol: bool = False,
         raise
     if isinstance(desc, dict) and "shards" in desc:
         client.close()
+        # the control address rides along so the client can refetch the
+        # descriptor after a failover
         return ClusterClient(
+            address=address,
             shard_addresses=(desc.get("endpoints")
                              or [tuple(a) for a in desc["shards"]]),
             legacy_protocol=legacy_protocol,
@@ -584,9 +1087,16 @@ def connect(address: Any, legacy_protocol: bool = False,
 # ---------------------------------------------------------------------------
 
 
-def _serve_shard(host: str, port: int, name: str) -> int:
-    server = KVServer(KVStore(name=name), host=host, port=port)
+def _serve_shard(host: str, port: int, name: str, replica: bool = False,
+                 replicate_to: Sequence[Sequence[str]] = (),
+                 ack: str = "primary", quorum_timeout: float = 5.0,
+                 shard_index: int = -1) -> int:
+    server = KVServer(KVStore(name=name), host=host, port=port,
+                      replica=replica, shard_index=shard_index)
     server.start()
+    for urls in replicate_to:
+        server.attach_replica(list(urls), ack=ack,
+                              quorum_timeout=quorum_timeout)
     # host/port first (pre-endpoint parents read exactly those), then
     # every endpoint url the server actually serves
     sys.stdout.write(f"KVSHARD {server.address[0]} {server.address[1]} "
@@ -608,8 +1118,22 @@ def _main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=0)
     ap.add_argument("--name", default="shard")
+    ap.add_argument("--shard-index", type=int, default=-1)
+    ap.add_argument("--replica", action="store_true",
+                    help="start in replica mode (mutators redirect)")
+    ap.add_argument("--replicate-to", action="append", default=[],
+                    metavar="URLS",
+                    help="comma-joined endpoint urls of one replica; "
+                         "repeat per replica")
+    ap.add_argument("--ack", default="primary",
+                    choices=("primary", "quorum"))
+    ap.add_argument("--quorum-timeout", type=float, default=5.0)
     args = ap.parse_args(argv)
-    return _serve_shard(args.host, args.port, args.name)
+    return _serve_shard(
+        args.host, args.port, args.name, replica=args.replica,
+        replicate_to=[u.split(",") for u in args.replicate_to],
+        ack=args.ack, quorum_timeout=args.quorum_timeout,
+        shard_index=args.shard_index)
 
 
 if __name__ == "__main__":

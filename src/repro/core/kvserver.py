@@ -147,12 +147,16 @@ import queue as _stdqueue
 import socket
 import socketserver
 import struct
+import sys
 import threading
+import time
 from collections import deque
+from itertools import islice as _islice
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from . import serialization
 from . import transport as _transport
+from .errors import ShardRedirectError, ShardUnavailableError
 from .kvstore import KVStore, Pipeline, _blocks
 
 __all__ = ["KVServer", "KVClient"]
@@ -696,6 +700,7 @@ class _Handler(socketserver.BaseRequestHandler):
         table = getattr(self.server, "raw_dispatch", None)
         if table is None:  # bare _Server without a KVServer wrapper
             table = _build_dispatch(store)
+        kv = getattr(self.server, "kv", None)  # replication-aware wrapper
         tuned = False
         reader = _ConnReader(self.request)  # connection-private: no lock
         pool = reader.pool
@@ -760,10 +765,13 @@ class _Handler(socketserver.BaseRequestHandler):
                     if workers is None:
                         workers = _BlockingWorkers(self._serve_one)
                     workers.dispatch((store, table, request, legacy, raw,
-                                      rid, send_lock))
+                                      rid, send_lock, kv))
                     continue
-                resp = (self._execute_raw(store, table, request) if raw
-                        else self._execute(store, request))
+                if kv is not None and kv._augmented:
+                    resp = kv.execute_request(store, table, request, raw)
+                else:
+                    resp = (self._execute_raw(store, table, request) if raw
+                            else self._execute(store, request))
             if rid is not None:
                 try:
                     frames = _encode_reply_frames(resp, rid, raw)
@@ -829,9 +837,13 @@ class _Handler(socketserver.BaseRequestHandler):
 
     def _serve_one(self, store: KVStore, table: Tuple[Any, ...],
                    request: Any, legacy: bool, raw: bool,
-                   rid: Optional[int], send_lock: threading.Lock) -> bool:
-        resp = (self._execute_raw(store, table, request) if raw
-                else self._execute(store, request))
+                   rid: Optional[int], send_lock: threading.Lock,
+                   kv: Any = None) -> bool:
+        if kv is not None and kv._augmented:
+            resp = kv.execute_request(store, table, request, raw)
+        else:
+            resp = (self._execute_raw(store, table, request) if raw
+                    else self._execute(store, request))
         return self._respond(resp, legacy, raw, rid, send_lock)
 
     def _respond(self, resp: Tuple[bool, Any], legacy: bool, raw: bool,
@@ -898,6 +910,387 @@ else:  # pragma: no cover - platform without AF_UNIX
     _UnixServer = None  # type: ignore[assignment,misc]
 
 
+# ---------------------------------------------------------------------------
+# Replication (PR 7): command-log streaming from a primary to replicas
+# ---------------------------------------------------------------------------
+
+#: every store command that mutates state — the replication predicate
+#: (logged on a primary, redirected on a replica). Read-only commands
+#: never enter the replicated path and keep the striped fast path even
+#: when replication is attached.
+_MUTATING_COMMANDS = frozenset({
+    "set", "setnx", "getset", "incr", "incrby", "decr",
+    "mset", "setrange", "msetrange",
+    "lpush", "rpush", "lpop", "rpop", "rpoplpush", "lset", "ltrim",
+    "blpop", "brpop", "blpop_rpush",
+    "hset", "hsetnx", "hdel", "hincrby",
+    "sadd", "srem",
+    "delete", "expire", "persist", "flushall",
+    "execute_batch", "transaction",
+})
+
+#: blocking mutators need the park-then-log treatment (see
+#: ``_Replicator._run_blocking``): the realized EFFECT is what gets
+#: logged, as its non-blocking equivalent, so replicas never park.
+_REPL_BLOCKING = frozenset({"blpop", "brpop", "blpop_rpush"})
+
+#: the realized-effect rewrite for blocking pops: a blpop that popped
+#: key k replays on replicas as lpop(k) — per-key log order makes it
+#: pop the same element.
+_REPL_POP_EFFECT = {"blpop": "lpop", "brpop": "rpop"}
+
+_REPL_CHUNK = 256            # max log entries per repl_apply delivery
+_REPL_LOG_CAP = 1 << 16      # primary log entries retained for laggards
+_REPL_LOG_TAIL = 1024        # entries always kept for late (re)attaches
+_REPL_RETAIN = 1 << 16       # replica-side retention (promotion catch-up)
+_REPL_BLOCK_SLICE_S = 0.05   # parked-primary poll slice under replication
+_REPL_RECONNECT_MIN_S = 0.05
+_REPL_RECONNECT_MAX_S = 1.0
+
+
+class _ReplicaLink:
+    """One replica's streamer: a daemon thread that tails the primary's
+    command log and ships it as ``repl_apply(first_seq, entries)``
+    batches over a normal :class:`KVClient` — replication rides the
+    same wire dialects (v4 raw for scalar entries, pickle + OOB for
+    everything else) and the same pluggable transports as client
+    traffic. ``acked`` is the highest sequence the replica confirmed
+    applied; quorum waiters read it under the replicator's lock."""
+
+    def __init__(self, rep: "_Replicator", urls: Sequence[str]):
+        self.rep = rep
+        self.urls = [str(u) for u in urls]
+        self.key = frozenset(self.urls)
+        self.acked = 0
+        self._stop = False
+        self._thread = threading.Thread(
+            target=self._run, daemon=True, name="kv-repl-stream")
+
+    def start(self) -> None:
+        self._thread.start()
+
+    def _close(self, client: Any) -> None:
+        if client is not None:
+            try:
+                client.close()
+            except Exception:
+                pass
+
+    def _run(self) -> None:
+        rep = self.rep
+        client: Optional["KVClient"] = None
+        backoff = _REPL_RECONNECT_MIN_S
+        # chaos knob: duplicate every Nth delivery (cross-process — the
+        # harness sets this in the supervisor's environment and shard
+        # children inherit it); replicas dedup by sequence number.
+        try:
+            dup_every = int(os.environ.get("REPRO_REPL_DUP_EVERY", "0") or 0)
+        except ValueError:
+            dup_every = 0
+        nsent = 0
+        while not (self._stop or rep._stopped):
+            if client is None:
+                try:
+                    client = KVClient(self.urls)
+                    info = client.repl_info()
+                    with rep._cond:
+                        self.acked = max(self.acked,
+                                         int(info.get("seq", 0) or 0))
+                        rep._cond.notify_all()
+                    backoff = _REPL_RECONNECT_MIN_S
+                except (ConnectionError, OSError, ValueError, EOFError):
+                    self._close(client)
+                    client = None
+                    time.sleep(backoff)
+                    backoff = min(backoff * 2, _REPL_RECONNECT_MAX_S)
+                    continue
+            with rep._cond:
+                while not (self._stop or rep._stopped) \
+                        and rep._seq <= self.acked:
+                    rep._cond.wait(0.5)
+                if self._stop or rep._stopped:
+                    break
+                first = self.acked + 1
+                if first < rep._base:
+                    chunk = None  # truncated past us: cannot catch up
+                else:
+                    i0 = first - rep._base
+                    chunk = list(_islice(rep._log, i0, i0 + _REPL_CHUNK))
+            if chunk is None:
+                sys.stderr.write(
+                    f"[kv-repl] replica {self.urls[0]} lags behind the "
+                    f"log retention window; detaching\n")
+                rep.detach_link(self)
+                break
+            if not chunk:
+                continue
+            try:
+                newseq = client.repl_apply(first, chunk)
+                nsent += 1
+                fi = _transport.get_fault_injector()
+                if ((fi is not None and fi.should_duplicate())
+                        or (dup_every and nsent % dup_every == 0)):
+                    # duplicate delivery: replicas ignore seq <= applied
+                    client.repl_apply(first, chunk)
+            except (ConnectionError, OSError, EOFError):
+                self._close(client)
+                client = None
+                continue
+            except Exception:
+                # e.g. a gap error after a missed ack: resync from the
+                # replica's authoritative applied sequence
+                try:
+                    info = client.repl_info()
+                    newseq = int(info.get("seq", 0) or 0)
+                except Exception:
+                    self._close(client)
+                    client = None
+                    continue
+            with rep._cond:
+                if int(newseq) > self.acked:
+                    self.acked = int(newseq)
+                rep._cond.notify_all()
+            rep.truncate()
+        self._close(client)
+
+
+class _Replicator:
+    """The primary half of shard replication.
+
+    Owns the command log (a bounded deque of ``(cmd, args, kwargs)``
+    name-form entries), one :class:`_ReplicaLink` streamer per attached
+    replica, and the ack policy. Mutating commands execute under ONE
+    ``_exec_lock`` so the log order equals the execution order — the
+    invariant replicas rely on to converge by pure replay. That global
+    ordering is the throughput price of replication; it is only paid
+    when a replicator is attached (``replicas=0`` keeps the striped
+    lock-free-reader fast path untouched).
+
+    Lock order: ``_exec_lock`` (execution serialization, outermost) may
+    take ``_cond``'s lock (log/links/acks, innermost); streamer threads
+    and ack waiters only ever take ``_cond``'s lock. Quorum waits happen
+    OUTSIDE ``_exec_lock`` so replication latency pipelines across
+    connections instead of serializing them."""
+
+    def __init__(self, kv: "KVServer", ack: str = "primary",
+                 quorum_timeout: float = 5.0):
+        if ack not in ("primary", "quorum"):
+            raise ValueError(f"unknown ack policy {ack!r}")
+        self.kv = kv
+        self.ack = ack
+        self.quorum_timeout = float(quorum_timeout)
+        self._exec_lock = threading.Lock()
+        self._cond = threading.Condition(threading.Lock())
+        self._log: deque = deque()
+        self._base = 1           # seq of _log[0]
+        self._seq = 0            # last appended seq
+        self._links: List[_ReplicaLink] = []
+        self._stopped = False
+
+    # -- log ----------------------------------------------------------------
+
+    def seed(self, applied_seq: int, retained: Sequence[Tuple[int, Any]]
+             ) -> None:
+        """Adopt a promoted replica's applied history as this log, so
+        surviving peers can catch up from their own acked position."""
+        with self._cond:
+            ents = [e for s, e in retained if s <= applied_seq]
+            self._seq = int(applied_seq)
+            self._log = deque(ents)
+            self._base = self._seq - len(ents) + 1
+
+    def append(self, entry: Tuple[str, tuple, dict]) -> int:
+        with self._cond:
+            self._seq += 1
+            self._log.append(entry)
+            drop = len(self._log) - _REPL_LOG_CAP
+            for _ in range(max(0, drop)):
+                self._log.popleft()
+                self._base += 1
+            self._cond.notify_all()
+            return self._seq
+
+    def truncate(self) -> None:
+        """Drop entries every live replica has acked (keeping a fixed
+        tail for late re-attaches)."""
+        with self._cond:
+            if not self._links:
+                return
+            floor = min(l.acked for l in self._links)
+            drop = min(floor - self._base + 1,
+                       len(self._log) - _REPL_LOG_TAIL)
+            for _ in range(max(0, drop)):
+                self._log.popleft()
+                self._base += 1
+
+    def head_seq(self) -> int:
+        return self._seq
+
+    # -- membership ---------------------------------------------------------
+
+    def attach(self, urls: Sequence[str]) -> bool:
+        key = frozenset(str(u) for u in urls)
+        with self._cond:
+            if self._stopped or any(l.key == key for l in self._links):
+                return False
+            link = _ReplicaLink(self, urls)
+            self._links.append(link)
+        link.start()
+        return True
+
+    def detach(self, urls: Sequence[str]) -> bool:
+        key = frozenset(str(u) for u in urls)
+        with self._cond:
+            found = [l for l in self._links if l.key == key]
+            for l in found:
+                self._links.remove(l)
+                l._stop = True
+            self._cond.notify_all()
+        return bool(found)
+
+    def detach_link(self, link: _ReplicaLink) -> None:
+        with self._cond:
+            if link in self._links:
+                self._links.remove(link)
+            link._stop = True
+            self._cond.notify_all()
+
+    def n_links(self) -> int:
+        with self._cond:
+            return len(self._links)
+
+    def stop(self) -> None:
+        with self._cond:
+            self._stopped = True
+            for l in self._links:
+                l._stop = True
+            self._links = []
+            self._cond.notify_all()
+
+    # -- ack policy ---------------------------------------------------------
+
+    def wait_ack(self, seq: int) -> bool:
+        """``ack="primary"``: return immediately (async replication).
+        ``ack="quorum"``: block until a majority of the replica set
+        (primary included) holds the entry, so an acknowledged write
+        survives any minority of failures."""
+        if self.ack != "quorum":
+            return True
+        deadline = time.monotonic() + self.quorum_timeout
+        with self._cond:
+            while True:
+                need = (len(self._links) + 1) // 2  # replica acks needed
+                have = sum(1 for l in self._links if l.acked >= seq)
+                if have >= need:
+                    return True
+                left = deadline - time.monotonic()
+                if left <= 0 or self._stopped:
+                    return False
+                self._cond.wait(min(left, 0.5))
+
+    # -- replicated execution ----------------------------------------------
+
+    def run(self, store: KVStore, name: str, args: tuple, kwargs: dict,
+            raw: bool) -> Tuple[bool, Any]:
+        if name in _REPL_BLOCKING and _blocks(name, args, kwargs):
+            return self._run_blocking(store, name, args, kwargs)
+        with self._exec_lock:
+            try:
+                if name == "execute_batch":
+                    entries = args[0]
+                    if raw:
+                        entries = [(serialization.RAW_COMMANDS[ecid], ea, ek)
+                                   for ecid, ea, ek in entries]
+                    value = store.execute_batch(entries)
+                    sub = [e for e, (ok, _v) in zip(entries, value)
+                           if ok and e[0] in _MUTATING_COMMANDS]
+                    entry = ("execute_batch", (sub,), {}) if sub else None
+                elif name == "transaction":
+                    value = store.transaction(*args, **kwargs)
+                    # the fn crossed the wire to us, so it crosses to
+                    # replicas the same way (pickle dialect)
+                    entry = ("transaction", args, kwargs)
+                elif name in _REPL_BLOCKING:
+                    # non-blocking form (timeout<=0) of a blocking pop
+                    value = getattr(store, name)(*args, **kwargs)
+                    entry = self._pop_effect(name, args, value)
+                else:
+                    value = getattr(store, name)(*args, **kwargs)
+                    entry = (name, args, kwargs)
+            except Exception as exc:
+                return False, exc
+            seq = self.append(entry) if entry is not None else 0
+        if seq and not self.wait_ack(seq):
+            return False, ShardUnavailableError(
+                f"write applied on primary but {self.ack!r} ack not "
+                f"reached within {self.quorum_timeout}s",
+                shard=self.kv.shard_index)
+        return True, value
+
+    @staticmethod
+    def _pop_effect(name: str, args: tuple, value: Any
+                    ) -> Optional[Tuple[str, tuple, dict]]:
+        """Log a blocking pop as its realized non-blocking effect."""
+        if value is None:
+            return None  # timed out: nothing mutated, nothing to log
+        if name == "blpop_rpush":
+            return ("blpop_rpush", (args[0], args[1], args[2], 0.0), {})
+        return (_REPL_POP_EFFECT[name], (value[0],), {})
+
+    def _run_blocking(self, store: KVStore, name: str, args: tuple,
+                      kwargs: dict) -> Tuple[bool, Any]:
+        """Primary-side parked pops under replication: attempt the
+        non-blocking form under ``_exec_lock`` (so a successful pop and
+        its log entry are atomic), park on ``bllen`` between attempts
+        (wakeup-driven, read-only, no lock held), repeat until the
+        deadline. Replicas therefore only ever see the realized effect
+        and never park themselves."""
+        if name == "blpop_rpush":
+            wait_key = args[0]
+            timeout = args[3] if len(args) > 3 else kwargs.get("timeout")
+            attempt_args = (args[0], args[1], args[2], 0.0)
+
+            def attempt() -> Any:
+                return store.blpop_rpush(*attempt_args)
+        else:
+            keys = [args[0]] if isinstance(args[0], str) else list(args[0])
+            wait_key = keys[0]
+            timeout = args[1] if len(args) > 1 else kwargs.get("timeout")
+
+            def attempt() -> Any:
+                return getattr(store, name)(keys, 0.0)
+        deadline = (None if timeout is None
+                    else time.monotonic() + float(timeout))
+        while True:
+            with self._exec_lock:
+                try:
+                    value = attempt()
+                except Exception as exc:
+                    return False, exc
+                seq = 0
+                if value is not None:
+                    entry = self._pop_effect(name, args, value)
+                    if entry is not None:
+                        seq = self.append(entry)
+            if value is not None:
+                if seq and not self.wait_ack(seq):
+                    return False, ShardUnavailableError(
+                        f"pop applied on primary but {self.ack!r} ack "
+                        f"not reached within {self.quorum_timeout}s",
+                        shard=self.kv.shard_index)
+                return True, value
+            left = (None if deadline is None
+                    else deadline - time.monotonic())
+            if left is not None and left <= 0:
+                return True, None
+            park = _REPL_BLOCK_SLICE_S if left is None \
+                else min(_REPL_BLOCK_SLICE_S, left)
+            try:
+                store.bllen(wait_key, park)
+            except Exception:
+                time.sleep(park)
+
+
 class KVServer:
     """Serve a KVStore over every same-host carrier at once.
 
@@ -918,10 +1311,34 @@ class KVServer:
 
     def __init__(self, store: Optional[KVStore] = None,
                  host: str = "127.0.0.1", port: int = 0,
-                 uds: bool = True, shm: bool = True):
+                 uds: bool = True, shm: bool = True,
+                 replica: bool = False, shard_index: int = -1):
         self.store = store or KVStore(name="kvserver")
+        # -- replication state (PR 7) --------------------------------------
+        # A server is always repl-capable: the repl_* admin commands are
+        # installed on the store (so both dispatch paths see them) BEFORE
+        # the dispatch table is built. ``_augmented`` gates the per-request
+        # replication/redirect check — False (one attribute read) unless
+        # this server is a replica or has a replicator attached.
+        self.shard_index = int(shard_index)
+        self._epoch = 0
+        self._replica_mode = bool(replica)
+        self.replicator: Optional[_Replicator] = None
+        self._augmented = self._replica_mode
+        self._role_lock = threading.Lock()
+        self._applied_seq = 0
+        self._retained: deque = deque(maxlen=_REPL_RETAIN)
+        self._repl_ack = "primary"
+        self._repl_quorum_timeout = 5.0
+        st = self.store
+        st.repl_apply = self.repl_apply        # replica apply loop
+        st.repl_info = self.repl_info          # freshness/role probe
+        st.repl_attach = self.repl_attach      # wire (re)attach
+        st.repl_detach = self.repl_detach      # wire detach (watchdog)
+        st.repl_promote = self.repl_promote    # replica -> primary flip
         self._server = _Server((host, port), _Handler)
         self._server.store = self.store  # type: ignore[attr-defined]
+        self._server.kv = self  # type: ignore[attr-defined]
         # v4 fast path: cid -> bound method, built once for every handler
         self._server.raw_dispatch = _build_dispatch(  # type: ignore[attr-defined]
             self.store)
@@ -939,6 +1356,7 @@ class KVServer:
                 self._remove_uds_path()  # pathological tmpdir: TCP-only
             else:
                 usrv.store = self.store  # type: ignore[attr-defined]
+                usrv.kv = self  # type: ignore[attr-defined]
                 usrv.raw_dispatch = (  # type: ignore[attr-defined]
                     self._server.raw_dispatch)
                 self._shm_enabled = shm and _transport.ring_supported()
@@ -965,6 +1383,131 @@ class KVServer:
                 eps.append(f"shm://{self._uds_path}")
         return eps
 
+    # -- replication (PR 7) -------------------------------------------------
+
+    def execute_request(self, store: KVStore, table: Tuple[Any, ...],
+                        request: Any, raw: bool) -> Tuple[bool, Any]:
+        """Replication-aware execution, entered only when ``_augmented``:
+        replicas redirect mutating commands (typed, epoch-carrying
+        refusal — the client's cue to refetch the descriptor); a primary
+        with a replicator routes mutators through the log. Everything
+        else falls through to the exact non-replicated dispatch."""
+        try:
+            name = (serialization.RAW_COMMANDS[request[0]] if raw
+                    else request[0])
+        except Exception:
+            name = ""
+        if isinstance(name, str) and name in _MUTATING_COMMANDS:
+            if self._replica_mode:
+                return False, ShardRedirectError(
+                    f"replica cannot serve {name!r}; refetch the cluster "
+                    f"descriptor", self._epoch, self.shard_index)
+            rep = self.replicator
+            if rep is not None:
+                return rep.run(store, name, request[1], request[2], raw)
+        return (_Handler._execute_raw(store, table, request) if raw
+                else _Handler._execute(store, request))
+
+    def attach_replica(self, urls: Sequence[str],
+                       ack: Optional[str] = None,
+                       quorum_timeout: Optional[float] = None) -> bool:
+        """Attach one replica (endpoint url list) and start streaming
+        the command log to it. Creates the replicator on first use."""
+        with self._role_lock:
+            if ack is not None:
+                self._repl_ack = ack
+            if quorum_timeout is not None:
+                self._repl_quorum_timeout = float(quorum_timeout)
+            rep = self.replicator
+            if rep is None:
+                rep = _Replicator(self, ack=self._repl_ack,
+                                  quorum_timeout=self._repl_quorum_timeout)
+                self.replicator = rep
+                self._augmented = True
+            else:
+                rep.ack = self._repl_ack
+                rep.quorum_timeout = self._repl_quorum_timeout
+        return rep.attach(urls)
+
+    # wire admin commands (installed as store attributes so both the
+    # pickle path's getattr dispatch and the v4 table reach them)
+
+    def repl_apply(self, first_seq: int, entries: Sequence[Any]) -> int:
+        """Replica apply loop: replay ``entries`` (seq ``first_seq``..)
+        in order, ignoring already-applied sequences — duplicate
+        deliveries (retries, chaos injection) are harmless — and
+        raising on a gap so the streamer resyncs from ``repl_info``."""
+        store = self.store
+        with self._role_lock:
+            seq = self._applied_seq
+            for i, ent in enumerate(entries):
+                s = first_seq + i
+                if s <= seq:
+                    continue  # duplicate delivery: already applied
+                if s != seq + 1:
+                    raise ValueError(
+                        f"replication gap: applied {seq}, got {s}")
+                cmd, cargs, ckwargs = ent
+                if (type(cmd) is not str or cmd.startswith("_")
+                        or cmd.startswith("repl_")):
+                    raise ValueError(f"illegal replicated command {cmd!r}")
+                try:
+                    getattr(store, cmd)(*cargs, **(ckwargs or {}))
+                except Exception as exc:
+                    # replay of a command that succeeded on the primary
+                    # is deterministic; a failure here means state has
+                    # diverged — surface it, but keep the stream moving
+                    sys.stderr.write(
+                        f"[kv-repl] apply {cmd!r} at seq {s} failed: "
+                        f"{exc!r}\n")
+                self._retained.append((s, ent))
+                seq = s
+            self._applied_seq = seq
+            return seq
+
+    def repl_info(self) -> Dict[str, Any]:
+        rep = self.replicator
+        if rep is not None:
+            return {"seq": rep.head_seq(), "role": "primary",
+                    "epoch": self._epoch, "replicas": rep.n_links()}
+        role = "replica" if self._replica_mode else "primary"
+        return {"seq": self._applied_seq, "role": role,
+                "epoch": self._epoch, "replicas": 0}
+
+    def repl_attach(self, urls: Sequence[str],
+                     ack: Optional[str] = None,
+                     quorum_timeout: Optional[float] = None) -> bool:
+        return self.attach_replica(urls, ack=ack,
+                                   quorum_timeout=quorum_timeout)
+
+    def repl_detach(self, urls: Sequence[str]) -> bool:
+        rep = self.replicator
+        return rep.detach(urls) if rep is not None else False
+
+    def repl_promote(self, peers: Sequence[Sequence[str]] = (),
+                      ack: str = "primary", quorum_timeout: float = 5.0,
+                      epoch: int = 0) -> Dict[str, Any]:
+        """Flip this replica into a primary: stop redirecting, adopt the
+        retained apply history as the new command log, and start
+        streaming to the surviving ``peers`` (each an endpoint url
+        list), which catch up from their own acked positions."""
+        with self._role_lock:
+            self._replica_mode = False
+            self._epoch = int(epoch)
+            self._repl_ack = ack
+            self._repl_quorum_timeout = float(quorum_timeout)
+            rep = self.replicator
+            if rep is None:
+                rep = _Replicator(self, ack=ack,
+                                  quorum_timeout=float(quorum_timeout))
+                rep.seed(self._applied_seq, list(self._retained))
+                self.replicator = rep
+            self._augmented = True
+        for urls in peers:
+            rep.attach(urls)
+        return {"seq": self._applied_seq, "role": "primary",
+                "epoch": self._epoch}
+
     def start(self) -> "KVServer":
         self._thread = threading.Thread(
             target=self._server.serve_forever, kwargs={"poll_interval": 0.05},
@@ -979,6 +1522,9 @@ class KVServer:
         return self
 
     def stop(self) -> None:
+        rep = self.replicator
+        if rep is not None:
+            rep.stop()
         self._server.shutdown()
         self._server.server_close()
         if self._uds_server is not None:

@@ -89,6 +89,8 @@ import struct
 import types
 from typing import Any, Dict, List, Optional, Set, Tuple
 
+from .errors import ShardRedirectError
+
 __all__ = ["dumps", "loads", "dumps_oob", "loads_oob", "payload_size",
            "OOB_THRESHOLD", "FRAME_TAG", "MAX_FRAME_TAG",
            "RAW_COMMANDS", "RAW_COMMAND_IDS", "RAW_EXEC_ID", "Prepickled",
@@ -371,6 +373,12 @@ RAW_COMMANDS: Tuple[str, ...] = (
     "getrange", "setrange", "msetrange", "strlen",
     "expire", "persist", "ttl", "exists", "delete",
     "execute_batch",
+    # PR 7: replication plane. A primary streams its command log to
+    # replicas as repl_apply(first_seq, [(cmd, args, kwargs), ...])
+    # batches, riding the same v4 dialect as client traffic (entries
+    # with OOB-sized or exotic args fall back to the pickle dialect,
+    # exactly like any other command).
+    "repl_apply",
 )
 RAW_COMMAND_IDS: Dict[str, int] = {c: i for i, c in enumerate(RAW_COMMANDS)}
 #: Dispatch id of ``execute_batch`` — its body nests whole sub-commands.
@@ -391,6 +399,10 @@ _TAG_NONE, _TAG_TRUE, _TAG_FALSE = ord("N"), ord("T"), ord("F")
 _TAG_I64, _TAG_BIG, _TAG_F64 = ord("i"), ord("I"), ord("f")
 _TAG_BYTES, _TAG_STR = ord("B"), ord("S")
 _TAG_TUPLE, _TAG_LIST, _TAG_DICT = ord("U"), ord("L"), ord("D")
+#: PR 7 redirect frame: a replica answering a mutating command encodes a
+#: ShardRedirectError (message, epoch, shard) so the refusal stays in the
+#: raw dialect instead of forcing a pickle fallback on the redirect path.
+_TAG_REDIR = ord("R")
 
 
 class _NotRaw(Exception):
@@ -453,6 +465,15 @@ def _enc_value(out: bytearray, v: Any, depth: int = _RAW_DEPTH,
             out += _u32(len(kb))
             out += kb
             _enc_value(out, x, depth - 1)
+    elif t is ShardRedirectError:
+        # cold branch: only replica-mode servers emit redirects
+        msg = str(v.args[0]) if v.args else ""
+        mb = msg.encode("utf-8", "surrogatepass")
+        out.append(_TAG_REDIR)
+        out += _u32(len(mb))
+        out += mb
+        out += _i64(int(v.epoch))
+        out += _i64(int(v.shard))
     else:
         # bytearray/memoryview included: decoding would narrow them to
         # bytes, so mutable buffers keep pickle's round-trip fidelity
@@ -513,6 +534,14 @@ def _dec_value(buf: bytes, off: int, depth: int = _RAW_DEPTH,
         off += 4
         end = off + n
         return int.from_bytes(buf[off:end], "big", signed=True), end
+    if tag == _TAG_REDIR:
+        (n,) = _u32(buf, off)
+        off += 4
+        end = off + n
+        msg = buf[off:end].decode("utf-8", "surrogatepass")
+        epoch = _i64(buf, end)[0]
+        shard = _i64(buf, end + 8)[0]
+        return ShardRedirectError(msg, epoch, shard), end + 16
     raise ValueError(f"unknown raw value tag {tag:#x}")
 
 

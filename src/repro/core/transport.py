@@ -105,6 +105,8 @@ import threading
 import time
 from typing import Any, List, Optional, Sequence, Tuple, Union
 
+from .errors import EndpointConnectError
+
 try:  # POSIX shared memory (absent only on exotic builds)
     from multiprocessing import shared_memory as _shm_mod
 except ImportError:  # pragma: no cover - platform without _posixshmem
@@ -189,7 +191,18 @@ class Endpoint:
 
     def connect(self, ring_capacity: Optional[int] = None) -> Any:
         """Open this endpoint: a connected ``socket.socket`` for
-        tcp/uds, a :class:`RingConn` for shm."""
+        tcp/uds, a :class:`RingConn` for shm. When a fault injector is
+        installed (chaos harness), the dial is vetoable and the returned
+        conn is wrapped with the injector's delay/sever hooks."""
+        fi = _fault_injector
+        if fi is not None:
+            fi.on_connect(self)
+        conn = self._connect_raw(ring_capacity)
+        if fi is not None:
+            conn = FaultConn(conn, self, fi)
+        return conn
+
+    def _connect_raw(self, ring_capacity: Optional[int] = None) -> Any:
         if self.scheme == "tcp":
             return socket.create_connection((self.host, self.port))
         if not uds_supported():  # pragma: no cover - non-POSIX
@@ -294,9 +307,109 @@ def connect_endpoints(endpoints: Sequence[Endpoint],
             return ep.connect(ring_capacity=ring_capacity), ep
         except (OSError, ConnectionError) as exc:
             last = exc
-    raise ConnectionError(
+    # typed: establishment failure means no command byte ever left the
+    # client, so cluster-level retry is safe regardless of idempotence
+    raise EndpointConnectError(
         f"no reachable endpoint among {[e.url for e in endpoints]}: "
         f"{last!r}")
+
+
+# ---------------------------------------------------------------------------
+# Fault injection (PR 7 chaos harness)
+# ---------------------------------------------------------------------------
+
+class FaultInjector:
+    """Base fault injector: every hook is a no-op. The chaos harness
+    (``tests/chaos.py``) subclasses this with a seeded RNG; production
+    code never installs one, so the only cost when chaos is off is a
+    single ``is None`` check per connect.
+
+    Hooks:
+
+    - ``on_connect(endpoint)``: called before dialing; raise ``OSError``
+      to refuse the dial (a severed transport).
+    - ``send_delay(endpoint, nbytes)``: seconds to sleep before a send
+      (simulates a slow link).
+    - ``should_sever(endpoint)``: return True to kill the connection
+      mid-send — the wrapper closes the carrier and raises
+      ``ConnectionError``, exactly what a dead peer produces.
+    - ``should_duplicate(endpoint)``: delivery-level duplication,
+      consumed by the replication streamer (``kvserver._Replicator``)
+      which re-sends an already-acked chunk; replicas deduplicate by
+      sequence number, so this probes the exactly-once apply logic
+      rather than corrupting byte framing.
+    """
+
+    def on_connect(self, endpoint: "Endpoint") -> None:
+        pass
+
+    def send_delay(self, endpoint: Optional["Endpoint"], nbytes: int) -> float:
+        return 0.0
+
+    def should_sever(self, endpoint: Optional["Endpoint"]) -> bool:
+        return False
+
+    def should_duplicate(self, endpoint: Optional["Endpoint"] = None) -> bool:
+        return False
+
+
+_fault_injector: Optional[FaultInjector] = None
+
+
+def set_fault_injector(injector: Optional[FaultInjector]
+                       ) -> Optional[FaultInjector]:
+    """Install (or, with None, clear) the process-wide fault injector.
+    Returns the previous injector so tests can restore it."""
+    global _fault_injector
+    prev = _fault_injector
+    _fault_injector = injector
+    return prev
+
+
+def get_fault_injector() -> Optional[FaultInjector]:
+    return _fault_injector
+
+
+class FaultConn:
+    """Transparent conn wrapper that consults a :class:`FaultInjector`
+    on every send. Wraps any carrier (socket or RingConn): only the
+    send/recv surface is intercepted, everything else delegates."""
+
+    def __init__(self, conn: Any, endpoint: "Endpoint",
+                 injector: FaultInjector):
+        self._conn = conn
+        self._endpoint = endpoint
+        self._fi = injector
+
+    def _pre_send(self, nbytes: int) -> None:
+        d = self._fi.send_delay(self._endpoint, nbytes)
+        if d > 0:
+            time.sleep(d)
+        if self._fi.should_sever(self._endpoint):
+            try:
+                self._conn.close()
+            except OSError:
+                pass
+            raise ConnectionError(
+                f"fault injector severed {self._endpoint.url}")
+
+    def sendall(self, data: Any) -> None:
+        self._pre_send(len(data))
+        return self._conn.sendall(data)
+
+    def sendmsg(self, buffers: Any) -> int:
+        bufs = list(buffers)
+        self._pre_send(sum(len(b) for b in bufs))
+        return self._conn.sendmsg(bufs)
+
+    def recv(self, bufsize: int, flags: int = 0) -> bytes:
+        return self._conn.recv(bufsize, flags)
+
+    def recv_into(self, buffer: Any, nbytes: int = 0, flags: int = 0) -> int:
+        return self._conn.recv_into(buffer, nbytes, flags)
+
+    def __getattr__(self, name: str) -> Any:
+        return getattr(self._conn, name)
 
 
 # ---------------------------------------------------------------------------

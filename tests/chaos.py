@@ -1,0 +1,234 @@
+"""Chaos-injection harness for the replicated KV serving plane (PR 7).
+
+Drives a seeded, reproducible fault schedule against a live
+``KVCluster(replicas=1, ack="quorum", watchdog=True)`` while writer
+threads hammer it, then audits the damage:
+
+- **SIGKILL primaries** mid-workload: the watchdog must promote the
+  freshest replica and clients must resume through the promotion; the
+  harness measures each failover's latency as the wall-clock stall of an
+  idempotent write issued the instant the primary dies.
+- **SIGKILL a replica**: the primary's streamer must detach and the
+  (now-degraded) shard must keep acking writes.
+- **Delay / sever transports**: a seeded :class:`ChaosInjector`
+  installed in the client process randomly slows sends and kills
+  connections mid-stream; idempotent commands must retry transparently,
+  non-idempotent ones must surface typed ``ShardUnavailableError``.
+- **Duplicate deliveries**: ``REPRO_REPL_DUP_EVERY`` makes every shard's
+  replication streamer re-send already-acked log chunks; replicas must
+  deduplicate by sequence number (the audit would see doubled list
+  entries otherwise).
+
+The invariant asserted is the acceptance criterion: **zero lost
+acknowledged writes**. A ``set`` that returned is checked key-by-key
+after the storm; a ``rpush`` that returned must appear in its list (a
+``rpush`` that raised may legitimately appear too — the reply was lost
+after the write applied, at-least-once — counted as ``dup_pushes``,
+never as lost).
+
+Not collected by pytest (no ``test_`` prefix): this is a harness, run
+via ``benchmarks/bench_chaos.py`` or directly::
+
+    PYTHONPATH=src python tests/chaos.py --seed 7 --quick
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import random
+import sys
+import threading
+import time
+from typing import Any, Dict, List
+
+from repro.core import transport as _transport
+from repro.core.errors import ShardUnavailableError
+from repro.core.kvcluster import KVCluster
+
+__all__ = ["ChaosInjector", "run_chaos"]
+
+
+class ChaosInjector(_transport.FaultInjector):
+    """Seeded random faults on the calling process's transports.
+
+    All probabilities are per-send; the RNG is private to the injector
+    so a given seed replays the same fault schedule (modulo thread
+    interleaving, which only shifts WHICH command eats each fault)."""
+
+    def __init__(self, seed: int, delay_p: float = 0.02,
+                 max_delay_s: float = 0.002, sever_p: float = 0.004,
+                 dup_p: float = 0.05):
+        self.rng = random.Random(seed)
+        self.delay_p = delay_p
+        self.max_delay_s = max_delay_s
+        self.sever_p = sever_p
+        self.dup_p = dup_p
+        self.delays = 0
+        self.severs = 0
+        self._lock = threading.Lock()
+
+    def send_delay(self, endpoint, nbytes) -> float:
+        with self._lock:
+            if self.rng.random() < self.delay_p:
+                self.delays += 1
+                return self.rng.uniform(0.0, self.max_delay_s)
+        return 0.0
+
+    def should_sever(self, endpoint) -> bool:
+        with self._lock:
+            if self.rng.random() < self.sever_p:
+                self.severs += 1
+                return True
+        return False
+
+    def should_duplicate(self, endpoint=None) -> bool:
+        with self._lock:
+            return self.rng.random() < self.dup_p
+
+
+def _key_on_shard(client, shard: int, prefix: str) -> str:
+    return next(f"{prefix}{i}" for i in range(10000)
+                if client._hash(f"{prefix}{i}") % len(client.shards) == shard)
+
+
+def _writer(cluster, wid: int, n_ops: int, out: Dict[str, Any]) -> None:
+    c = cluster.client(failover_timeout_s=30.0)
+    acked_sets: Dict[str, int] = {}
+    acked_pushes: Dict[str, int] = {}
+    typed_errors = 0
+    try:
+        for i in range(n_ops):
+            k = f"c:{wid}:{i}"
+            try:
+                c.set(k, i)
+                acked_sets[k] = i
+            except ShardUnavailableError:
+                typed_errors += 1
+            if i % 4 == 0:
+                lk = f"log:{wid}:{i % 8}"
+                try:
+                    c.rpush(lk, i)
+                    acked_pushes[lk] = acked_pushes.get(lk, 0) + 1
+                except ShardUnavailableError:
+                    typed_errors += 1
+    finally:
+        c.close()
+    out["sets"] = acked_sets
+    out["pushes"] = acked_pushes
+    out["typed_errors"] = typed_errors
+
+
+def run_chaos(seed: int = 7, quick: bool = False) -> Dict[str, Any]:
+    """One seeded chaos run. Returns the audit as a dict (see keys
+    below); raises AssertionError on any lost acknowledged write."""
+    n_shards = 2 if quick else 3
+    n_writers = 2 if quick else 4
+    n_ops = 150 if quick else 500
+
+    # delivery-level duplication inside the shard children (inherited
+    # via environ): every 5th replication chunk is sent twice
+    os.environ["REPRO_REPL_DUP_EVERY"] = "5"
+    cluster = KVCluster(shards=n_shards, replicas=1, ack="quorum",
+                        watchdog=True, heartbeat_s=0.2)
+    cluster.start()
+    injector = ChaosInjector(seed)
+    prev = _transport.set_fault_injector(injector)
+    failovers_ms: List[float] = []
+    try:
+        writer_out: List[Dict[str, Any]] = [{} for _ in range(n_writers)]
+        threads = [threading.Thread(target=_writer,
+                                    args=(cluster, w, n_ops, writer_out[w]),
+                                    name=f"chaos-writer-{w}")
+                   for w in range(n_writers)]
+        for t in threads:
+            t.start()
+
+        # the fault schedule: with replicas=1 each shard absorbs exactly
+        # one primary kill, so kill primaries of shards 0..n-2 and a
+        # REPLICA of the last shard (streamer detach, degraded quorum)
+        probe = cluster.client(failover_timeout_s=30.0)
+        rng = random.Random(seed ^ 0x5EED)
+        time.sleep(0.3)
+        for s in range(n_shards - 1):
+            time.sleep(rng.uniform(0.1, 0.4))
+            pk = _key_on_shard(probe, s, f"probe:{s}:")
+            cluster.kill_shard(s)
+            t0 = time.monotonic()
+            probe.set(pk, t0)  # idempotent: blocks across the promotion
+            failovers_ms.append((time.monotonic() - t0) * 1e3)
+        time.sleep(rng.uniform(0.1, 0.4))
+        cluster.kill_replica(n_shards - 1, 0)
+        probe.close()
+
+        for t in threads:
+            t.join(120)
+            assert not t.is_alive(), "writer wedged"
+    finally:
+        _transport.set_fault_injector(prev)
+        os.environ.pop("REPRO_REPL_DUP_EVERY", None)
+
+    # -- audit: every acked write must be readable -------------------------
+    try:
+        audit = cluster.client(failover_timeout_s=30.0)
+        lost: List[str] = []
+        acked_sets = 0
+        for out in writer_out:
+            for k, v in out["sets"].items():
+                acked_sets += 1
+                if audit.get(k) != v:
+                    lost.append(k)
+        acked_pushes = 0
+        dup_pushes = 0
+        lost_pushes = 0
+        merged: Dict[str, int] = {}
+        for out in writer_out:
+            for lk, n in out["pushes"].items():
+                merged[lk] = merged.get(lk, 0) + n
+                acked_pushes += n
+        for lk, n in merged.items():
+            have = audit.llen(lk)
+            if have < n:
+                lost_pushes += n - have
+            else:
+                dup_pushes += have - n  # reply lost after apply, or a
+                # retried-at-least-once delivery: never a LOST ack
+        audit.close()
+    finally:
+        cluster.stop()
+
+    result = {
+        "seed": seed,
+        "quick": quick,
+        "shards": n_shards,
+        "writers": n_writers,
+        "acked_sets": acked_sets,
+        "acked_pushes": acked_pushes,
+        "lost_acked_writes": len(lost) + lost_pushes,
+        "lost_keys": lost[:10],
+        "dup_pushes": dup_pushes,
+        "typed_errors": sum(o["typed_errors"] for o in writer_out),
+        "client_severs": injector.severs,
+        "client_delays": injector.delays,
+        "kills_primary": n_shards - 1,
+        "kills_replica": 1,
+        "failover_ms": [round(f, 2) for f in failovers_ms],
+    }
+    assert result["lost_acked_writes"] == 0, (
+        f"lost acknowledged writes under chaos: {result}")
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    res = run_chaos(seed=args.seed, quick=args.quick)
+    for k, v in sorted(res.items()):
+        print(f"{k}: {v}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -104,3 +104,64 @@ class TestExecutor:
             ex.shutdown()
         finally:
             ser._Pickler._reduce_function = orig
+
+
+class TestCollectorFailover:
+    def test_collector_reparks_after_shard_unavailable(self):
+        """PR 7: a ShardUnavailableError under the collector's parked
+        BLPOP triggers descriptor refresh + re-park (bounded), not
+        job failure — the path a shard failover exercises."""
+        from repro.core.errors import ShardUnavailableError
+
+        ex = FunctionExecutor()
+        real = ex._store
+        calls = {"fail": 3, "refresh": 0}
+
+        class FlakyStore:
+            def __getattr__(self, name):
+                return getattr(real, name)
+
+            def blpop(self, *a, **k):
+                if calls["fail"] > 0:
+                    calls["fail"] -= 1
+                    raise ShardUnavailableError("injected failover",
+                                                shard=0)
+                return real.blpop(*a, **k)
+
+            def refresh(self, force=False):
+                calls["refresh"] += 1
+                return True
+
+        ex._store = FlakyStore()
+        try:
+            fut = ex.call_async(lambda: 42, ())
+            assert fut.result(20) == 42
+            assert calls["fail"] == 0, "collector gave up before retrying"
+            assert calls["refresh"] >= 1, "collector never refreshed"
+        finally:
+            ex._store = real
+            ex.shutdown()
+
+    def test_collector_settles_when_shard_stays_down(self):
+        """A permanently unavailable result-list shard must settle
+        pending futures with the typed error, not hang."""
+        from repro.core.errors import ShardUnavailableError
+
+        ex = FunctionExecutor()
+        real = ex._store
+
+        class DeadStore:
+            def __getattr__(self, name):
+                return getattr(real, name)
+
+            def blpop(self, *a, **k):
+                raise ShardUnavailableError("shard stayed down", shard=1)
+
+        ex._store = DeadStore()
+        try:
+            fut = ex.call_async(lambda: 1, ())
+            with pytest.raises(RemoteError, match="unavailable|stayed down"):
+                fut.result(30)
+        finally:
+            ex._store = real
+            ex.shutdown()

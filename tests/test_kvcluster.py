@@ -337,7 +337,7 @@ class TestScatterOverMux:
         [t.join(60) for t in threads]
         assert errors == []
         # one shared main-lane mux per shard client, regardless of threads
-        for shard in client.shards:
+        for shard in client._clients:
             assert set(shard._muxes) == {"main"}
         client.close()
 
@@ -347,7 +347,7 @@ class TestScatterOverMux:
         server-side EVAL), not two."""
         with KVServer() as srv:
             client = ClusterClient(shard_addresses=[srv.address, srv.address])
-            assert client.shards[0] is client.shards[1]
+            assert client._clients[0] is client._clients[1]
             # find keys routing to each shard index
             k0 = next(f"a{i}" for i in range(100)
                       if client._hash(f"a{i}") % 2 == 0)
@@ -413,9 +413,10 @@ class TestBatchOrdering:
 
 
 class TestClusterTransports:
-    def test_descriptor_v2_advertises_endpoints(self, cluster):
+    def test_descriptor_advertises_endpoints(self, cluster):
         desc = cluster.describe()
-        assert desc["version"] == 2
+        assert desc["version"] == 3
+        assert desc["epoch"] >= 1
         assert len(desc["endpoints"]) == desc["n_shards"]
         for shard_eps, (host, port) in zip(desc["endpoints"], desc["shards"]):
             schemes = {u.split("://")[0] for u in shard_eps}
@@ -441,7 +442,7 @@ class TestClusterTransports:
         with c.pipeline() as p:
             for i in range(8):
                 p.incr(f"tk{i}")
-        for shard in {id(s): s for s in c.shards}.values():
+        for shard in {id(s): s for s in c._clients}.values():
             assert shard._mux("main").endpoint.scheme == transport
         c.close()
 
@@ -486,5 +487,217 @@ class TestClusterTransports:
         assert isinstance(c, ClusterClient)
         c.set("ct", 3)
         assert c.get("ct") == 3
-        assert c.shards[0]._mux("main").endpoint.scheme == "uds"
+        assert c._clients[0]._mux("main").endpoint.scheme == "uds"
         c.close()
+
+
+# ---------------------------------------------------------------------------
+# PR 7: replicated shards, automatic failover, typed unavailability
+# ---------------------------------------------------------------------------
+
+
+from repro.core.errors import ShardRedirectError, ShardUnavailableError  # noqa: E402
+
+
+def _replicated(**kw):
+    defaults = dict(shards=2, replicas=1, ack="quorum")
+    defaults.update(kw)
+    return KVCluster(**defaults)
+
+
+def _key_on_shard(client, shard, prefix="rk"):
+    return next(f"{prefix}{i}" for i in range(1000)
+                if client._hash(f"{prefix}{i}") % len(client.shards) == shard)
+
+
+class TestReplicationFailover:
+    def test_descriptor_v3_carries_replication_topology(self):
+        with _replicated() as cl:
+            desc = cl.describe()
+            assert desc["version"] == 3
+            assert desc["epoch"] == 1
+            assert desc["ack"] == "quorum"
+            assert len(desc["replicas"]) == 2
+            assert all(len(reps) == 1 for reps in desc["replicas"])
+
+    def test_replica_redirects_mutators_serves_reads(self):
+        with _replicated(shards=1) as cl:
+            c = cl.client()
+            c.set("seen", 41)
+            rep_urls = cl.describe()["replicas"][0][0]
+            rc = KVClient(rep_urls)
+            try:
+                with pytest.raises(ShardRedirectError):
+                    rc.set("x", 1)
+                # replicas serve (possibly stale) reads; the streamed write
+                # arrives promptly
+                deadline = time.monotonic() + 5
+                while rc.get("seen") != 41:
+                    assert time.monotonic() < deadline, "write never replicated"
+                    time.sleep(0.01)
+            finally:
+                rc.close()
+                c.close()
+
+    def test_kill_primary_mid_pipeline_no_acked_write_lost(self):
+        """Quorum-acked writes survive SIGKILL of their primary; the next
+        pipeline retries transparently onto the promoted replica."""
+        with _replicated() as cl:
+            c = cl.client()
+            acked = []
+            with c.pipeline() as p:
+                for i in range(100):
+                    p.set(f"k{i}", i)
+            acked.extend(range(100))  # batch returned => all acked
+            cl.kill_shard(0)
+            promoter = threading.Timer(0.4, cl.promote_shard, args=(0,))
+            promoter.start()
+            try:
+                # issued while shard 0 is DOWN: retry loop must carry the
+                # scatter across the promotion (sets are idempotent)
+                with c.pipeline() as p:
+                    for i in range(100, 140):
+                        p.set(f"k{i}", i)
+                acked.extend(range(100, 140))
+            finally:
+                promoter.join()
+            assert c.mget([f"k{i}" for i in acked]) == acked
+            c.close()
+
+    def test_kill_during_blpop_typed_error_then_repark(self):
+        with _replicated() as cl:
+            c = cl.client()
+            dq = _key_on_shard(c, 1, "dq")
+            out = []
+
+            def park():
+                try:
+                    out.append(c.blpop(dq, timeout=30))
+                except ShardUnavailableError as exc:
+                    out.append(exc)
+
+            th = threading.Thread(target=park)
+            th.start()
+            time.sleep(0.3)
+            cl.kill_shard(1)
+            th.join(20)
+            assert out and isinstance(out[0], ShardUnavailableError)
+            assert out[0].shard == 1
+            cl.promote_shard(1)
+            # re-park lands on the promoted replica and completes
+            got = []
+            th2 = threading.Thread(
+                target=lambda: got.append(c.blpop(dq, timeout=10)))
+            th2.start()
+            time.sleep(0.2)
+            c.rpush(dq, "after-failover")
+            th2.join(15)
+            assert got and got[0][1] == "after-failover"
+            c.close()
+
+    def test_parked_blpop_on_healthy_shard_survives_other_failover(self):
+        with _replicated() as cl:
+            c = cl.client()
+            qk = _key_on_shard(c, 0, "q")
+            got = []
+            th = threading.Thread(
+                target=lambda: got.append(c.blpop(qk, timeout=20)))
+            th.start()
+            time.sleep(0.3)
+            cl.kill_shard(1)
+            cl.promote_shard(1)
+            c.rpush(qk, "payload")
+            th.join(10)
+            assert got and got[0][1] == "payload"
+            c.close()
+
+    def test_kill_during_execute_batch_scatter(self):
+        """A scatter issued while one shard is down retries whole-batch
+        (all-idempotent) and completes after promotion."""
+        with _replicated() as cl:
+            c = cl.client()
+            cl.kill_shard(0)
+            promoter = threading.Timer(0.4, cl.promote_shard, args=(0,))
+            promoter.start()
+            try:
+                res = c.execute_batch(
+                    [("set", (f"s{i}", i), {}) for i in range(64)])
+            finally:
+                promoter.join()
+            assert all(ok for ok, _ in res)
+            assert c.mget([f"s{i}" for i in range(64)]) == list(range(64))
+            # a batch with a non-idempotent command fails typed instead
+            cl.kill_shard(1)
+            c2 = cl.client(failover_timeout_s=1.5)
+            k1 = _key_on_shard(c2, 1, "nb")
+            with pytest.raises(ShardUnavailableError):
+                c2.execute_batch([("rpush", (k1, "x"), {})])
+            c2.close()
+            c.close()
+
+    def test_double_failure_is_a_typed_loss(self):
+        """replicas=1 survives exactly one failure per shard: the second
+        kill has no promotable replica and surfaces as bounded typed
+        errors, not hangs."""
+        with _replicated() as cl:
+            c = cl.client(failover_timeout_s=1.5)
+            cl.kill_shard(0)
+            cl.promote_shard(0)
+            c.set("ok", 1)
+            assert c.get("ok") == 1
+            cl.kill_shard(0)
+            with pytest.raises(RuntimeError, match="no live replica"):
+                cl.promote_shard(0)
+            k0 = _key_on_shard(c, 0, "dead")
+            with pytest.raises(ShardUnavailableError) as ei:
+                c.get(k0)  # retry-safe, but retries exhaust
+            assert ei.value.shard == 0
+            c.close()
+
+    def test_watchdog_promotes_automatically(self):
+        with _replicated(watchdog=True, heartbeat_s=0.2) as cl:
+            c = cl.client()
+            c.set("w", 1)
+            cl.kill_shard(0)
+            t0 = time.monotonic()
+            deadline = t0 + 15
+            while time.monotonic() < deadline:
+                try:
+                    if c.get("w") == 1 and cl._epoch > 1:
+                        break
+                except ConnectionError:
+                    pass
+                time.sleep(0.05)
+            assert cl._epoch == 2, "watchdog never promoted"
+            c.set("w2", 2)
+            assert c.get("w2") == 2
+            c.close()
+
+    def test_refresh_detects_epoch_change_after_restart(self):
+        with KVCluster(shards=2) as cl:  # replicas=0: restart, not promote
+            c = cl.client()
+            c.set("r", 1)
+            assert c.refresh() in (True, False)  # first fetch may rebind
+            epoch0 = c._desc_epoch
+            cl.restart_shard(0)
+            assert c.refresh() is True
+            assert c._desc_epoch == epoch0 + 1
+            # restarted shard is empty but serving
+            k0 = _key_on_shard(c, 0, "fresh")
+            c.set(k0, "v")
+            assert c.get(k0) == "v"
+            c.close()
+
+    def test_static_shard_list_fails_fast_with_typed_error(self):
+        """No control endpoint => nothing to refresh from: connection
+        death surfaces immediately as ShardUnavailableError."""
+        with KVCluster(shards=1) as cl:
+            c = ClusterClient(shard_addresses=cl.shard_endpoints)
+            c.set("s", 1)
+            cl._procs[0].kill()
+            with pytest.raises(ShardUnavailableError) as ei:
+                c.get("s")
+            assert ei.value.shard == 0
+            assert ei.value.descriptor_version == 0
+            c.close()
+            cl.restart_shard(0)  # leave the fixture cluster healthy

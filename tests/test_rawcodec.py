@@ -465,3 +465,73 @@ class TestInteropOverTransports:
             c.rpush("e:k", b"x")
         assert c.incr("e:n") == 1    # connection still framed correctly
         c.close()
+
+
+# ---------------------------------------------------------------------------
+# PR 7: replication frames + redirect errors on the raw dialect
+# ---------------------------------------------------------------------------
+
+
+class TestReplicationCodec:
+    def test_repl_apply_is_a_raw_command(self):
+        assert "repl_apply" in ser.RAW_COMMANDS
+
+    def test_repl_apply_entry_batch_roundtrips_raw(self):
+        """The streamer's bread and butter: a chunk of log entries
+        (cmd, args, kwargs-as-None) stays on the zero-pickle dialect."""
+        entries = [
+            ("set", ("k1", 7), None),
+            ("rpush", ("q", b"payload"), None),
+            ("lpop", ("q",), None),
+            ("hset", ("h", "f", 3.25), None),
+            ("delete", ("k1",), None),
+        ]
+        body = ser.encode_command("repl_apply", (42, entries), {})
+        assert body is not None, "repl_apply chunk fell off the raw dialect"
+        cmd, args, kwargs = ser.decode_command(body)
+        assert cmd == "repl_apply" and kwargs == {}
+        assert args[0] == 42
+        assert [tuple(e) for e in args[1]] == entries
+
+    def test_repl_apply_exotic_entries_fall_back_to_pickle(self):
+        """Entries whose args the raw codec cannot carry (sets, custom
+        types) must return None => the client transparently pickles."""
+        entries = [("sadd", ("s", {"a", "b"}), None)]
+        assert ser.encode_command("repl_apply", (1, entries), {}) is None
+
+    def test_shard_redirect_error_roundtrips_raw(self):
+        from repro.core.errors import ShardRedirectError
+        exc = ShardRedirectError("replica cannot serve this command",
+                                 epoch=9, shard=3)
+        body = ser.encode_reply(False, exc)
+        assert body is not None, "redirect fell off the raw dialect"
+        ok, got = ser.decode_reply(body)
+        assert ok is False
+        assert isinstance(got, ShardRedirectError)
+        assert got.epoch == 9 and got.shard == 3
+        assert "replica cannot serve" in str(got)
+
+    def test_shard_redirect_error_survives_pickle_dialect(self):
+        """v1/v2 clients get the same typed error via pickle: __reduce__
+        must preserve epoch/shard."""
+        import pickle
+        from repro.core.errors import ShardRedirectError, ShardUnavailableError
+        r = pickle.loads(pickle.dumps(ShardRedirectError("m", epoch=4, shard=1)))
+        assert isinstance(r, ShardRedirectError)
+        assert r.epoch == 4 and r.shard == 1
+        u = pickle.loads(pickle.dumps(
+            ShardUnavailableError("m", shard=2, descriptor_version=7)))
+        assert u.shard == 2 and u.descriptor_version == 7
+
+    def test_live_redirect_over_raw_dialect(self):
+        """A raw-dialect client talking to a replica-mode server gets the
+        typed redirect end to end."""
+        from repro.core.errors import ShardRedirectError
+        from repro.core.kvstore import KVStore
+        with KVServer(KVStore(name="rep"), replica=True, shard_index=5) as srv:
+            c = KVClient(srv.endpoints, raw=True)
+            with pytest.raises(ShardRedirectError) as ei:
+                c.set("k", 1)
+            assert ei.value.shard == 5
+            assert c.get("k") is None  # reads still served
+            c.close()

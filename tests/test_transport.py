@@ -320,3 +320,113 @@ class TestTuneGuards:
                     f"non-INET conn got level {level} option"
 
         _tune(FakeRing())
+
+
+# ---------------------------------------------------------------------------
+# PR 7: fault injection + replication interop across dialects/transports
+# ---------------------------------------------------------------------------
+
+
+class _DelayInjector(T.FaultInjector):
+    def __init__(self, delay_s):
+        self.delay_s = delay_s
+        self.calls = 0
+
+    def send_delay(self, endpoint, nbytes):
+        self.calls += 1
+        return self.delay_s
+
+
+class _SeverInjector(T.FaultInjector):
+    def __init__(self, after):
+        self.after = after
+        self.sends = 0
+
+    def should_sever(self, endpoint):
+        self.sends += 1
+        return self.sends > self.after
+
+
+class TestFaultInjection:
+    def teardown_method(self):
+        T.set_fault_injector(None)
+
+    @pytest.mark.parametrize("transport", ["tcp", "uds", "shm"])
+    def test_send_delay_applies_per_transport(self, transport):
+        from repro.core import KVClient, KVServer
+        with KVServer() as srv:
+            inj = _DelayInjector(0.05)
+            T.set_fault_injector(inj)
+            try:
+                c = KVClient(srv.endpoints, transport=transport)
+                t0 = time.monotonic()
+                c.set("d", 1)
+                assert c.get("d") == 1
+                elapsed = time.monotonic() - t0
+                c.close()
+            finally:
+                T.set_fault_injector(None)
+            assert inj.calls > 0
+            assert elapsed >= 0.05  # at least one delayed send
+
+    @pytest.mark.parametrize("transport", ["tcp", "uds", "shm"])
+    def test_sever_mid_stream_raises_connection_error(self, transport):
+        from repro.core import KVClient, KVServer
+        with KVServer() as srv:
+            inj = _SeverInjector(after=2)
+            T.set_fault_injector(inj)
+            try:
+                c = KVClient(srv.endpoints, transport=transport)
+                with pytest.raises((ConnectionError, OSError)):
+                    for i in range(50):
+                        c.set(f"s{i}", i)
+            finally:
+                T.set_fault_injector(None)
+                c.close()
+
+    def test_injector_swap_returns_previous(self):
+        a, b = _DelayInjector(0), _DelayInjector(0)
+        assert T.set_fault_injector(a) is None
+        assert T.set_fault_injector(b) is a
+        assert T.set_fault_injector(None) is b
+        assert T.get_fault_injector() is None
+
+
+class TestReplicationInterop:
+    """The replication stream rides the SAME wire as clients: every
+    dialect (v1 pickle .. v4 raw) and every carrier must deliver the
+    admin commands and the log chunks."""
+
+    @pytest.mark.parametrize("transport", ["tcp", "uds", "shm"])
+    @pytest.mark.parametrize("legacy,mux,raw", [
+        (True, False, False),   # v1: legacy pickle, one socket
+        (False, False, False),  # v2: multi-part OOB, per-thread sockets
+        (False, True, False),   # v3: tagged mux
+        (False, True, True),    # v4: raw struct-packed fast path
+    ], ids=["v1", "v2", "v3", "v4"])
+    def test_repl_admin_commands_all_dialects(self, transport, legacy,
+                                              mux, raw):
+        from repro.core import KVClient, KVServer
+        from repro.core.kvstore import KVStore
+        with KVServer(KVStore(name="pri")) as pri, \
+                KVServer(KVStore(name="rep"), replica=True) as rep:
+            c = KVClient(pri.endpoints, legacy_protocol=legacy, mux=mux,
+                         raw=raw, transport=transport)
+            rc = KVClient(rep.endpoints, legacy_protocol=legacy, mux=mux,
+                          raw=raw, transport=transport)
+            try:
+                info = rc.repl_info()
+                assert info["role"] == "replica" and info["seq"] == 0
+                assert c.repl_attach(list(rep.endpoints)) is True
+                c.set("ri:k", 11)
+                c.rpush("ri:q", b"x")
+                deadline = time.monotonic() + 5
+                while rc.repl_info()["seq"] < 2:
+                    assert time.monotonic() < deadline, "stream stalled"
+                    time.sleep(0.01)
+                assert rc.get("ri:k") == 11
+                assert rc.lrange("ri:q", 0, -1) == [b"x"]
+                assert c.repl_detach(list(rep.endpoints)) is True
+            finally:
+                c.close()
+                rc.close()
