@@ -1,18 +1,26 @@
-"""Chaos gate (PR 7): seeded fault injection against the replicated
-cluster, reporting failover latency and asserting zero lost acks.
+"""Chaos gates: seeded fault injection, reporting recovery latency and
+asserting the delivery invariants.
 
-Wraps ``tests/chaos.py`` (the harness proper) in the benchmark-row API so
-the numbers ride the same CI artifact as the perf trajectory:
+Two planes, wrapping ``tests/chaos.py`` (the harness proper) in the
+benchmark-row API so the numbers ride the same CI artifact as the perf
+trajectory:
 
-- ``chaos/failover`` — mean watchdog-failover latency in us (the
-  ``us_per_call`` column), with per-kill latencies, ack audit counts and
-  injected-fault counts in the derived string. One row per seed.
+- ``chaos/failover`` (PR 7, storage plane) — SIGKILL shard primaries
+  under client-side fault injection; mean watchdog-failover latency in
+  us (the ``us_per_call`` column); gate: **zero lost acknowledged
+  writes**.
+- ``chaos/worker_kill`` (PR 8, task plane) — SIGKILL real pool worker
+  processes mid-``map``/mid-``imap`` (plus a scripted pre-first-
+  heartbeat suicide and a zombie late-settle); mean kill-to-respawn
+  latency in us; gate: **zero lost tasks, zero duplicate-visible
+  results** (every task settles exactly once).
 
-Run directly for the CI gate::
+Run directly for the CI gates::
 
     PYTHONPATH=src python -m benchmarks.bench_chaos --seed 7 --quick \
         --assert-zero-lost-acks
-    PYTHONPATH=src python -m benchmarks.bench_chaos --seed 7,11,13
+    PYTHONPATH=src python -m benchmarks.bench_chaos --kill-workers \
+        --seed 7,11,13 --assert-zero-lost-tasks
 """
 
 from __future__ import annotations
@@ -28,7 +36,7 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 if _REPO_ROOT not in sys.path:  # pragma: no cover - import plumbing
     sys.path.insert(0, _REPO_ROOT)
 
-from tests.chaos import run_chaos  # noqa: E402
+from tests.chaos import run_chaos, run_pool_chaos  # noqa: E402
 
 DEFAULT_SEEDS = (7, 11, 13)
 
@@ -46,10 +54,26 @@ def _row(res: Dict[str, Any]) -> Tuple[str, float, str]:
     return (f"chaos/failover/seed{res['seed']}", mean_us, derived)
 
 
+def _pool_row(res: Dict[str, Any]) -> Tuple[str, float, str]:
+    lats = [l["respawn_ms"] for l in res["kill_latency_ms"]
+            if l["respawn_ms"] >= 0]
+    mean_us = (sum(lats) / len(lats)) * 1e3 if lats else 0.0
+    derived = (f"lost={res['lost_tasks']}/{res['tasks']} tasks "
+               f"kills={res['kills_external']}+{res['kills_scripted']} "
+               f"reexec={res['re_executions']} "
+               f"dups_fenced={res['duplicate_results_discarded']} "
+               f"requeued={res['leases_requeued']} "
+               f"respawn={['%.0fms' % l for l in lats]} "
+               f"seed={res['seed']}")
+    return (f"chaos/worker_kill/seed{res['seed']}", mean_us, derived)
+
+
 def run(quick: bool = False, seeds=None) -> List[Tuple[str, float, str]]:
     """Benchmark-harness entry point (``benchmarks.run`` MODULES API)."""
     seeds = list(seeds) if seeds else ([7] if quick else list(DEFAULT_SEEDS))
-    return [_row(run_chaos(seed=s, quick=quick)) for s in seeds]
+    rows = [_row(run_chaos(seed=s, quick=quick)) for s in seeds]
+    rows += [_pool_row(run_pool_chaos(seed=s, quick=quick)) for s in seeds]
+    return rows
 
 
 def main(argv=None) -> int:
@@ -57,32 +81,45 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", default="7",
                     help="comma-separated seeds (one run per seed)")
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--kill-workers", action="store_true",
+                    help="run the task-plane (Pool worker-kill) chaos "
+                         "instead of the storage-plane chaos")
     ap.add_argument("--assert-zero-lost-acks", action="store_true",
-                    help="exit 1 if any run lost an acknowledged write "
-                         "(run_chaos also raises internally)")
+                    help="exit 1 if any storage run lost an acknowledged "
+                         "write (run_chaos also raises internally)")
+    ap.add_argument("--assert-zero-lost-tasks", action="store_true",
+                    help="exit 1 if any pool run lost a task or delivered "
+                         "a duplicate (run_pool_chaos also raises)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write full per-seed audit dicts to PATH")
     args = ap.parse_args(argv)
     seeds = [int(s) for s in args.seed.split(",")]
+    runner = run_pool_chaos if args.kill_workers else run_chaos
+    rower = _pool_row if args.kill_workers else _row
     results = []
     failed = False
     for s in seeds:
         try:
-            res = run_chaos(seed=s, quick=args.quick)
+            res = runner(seed=s, quick=args.quick)
         except AssertionError as exc:
-            print(f"seed {s}: LOST ACKED WRITES: {exc}", file=sys.stderr)
+            print(f"seed {s}: INVARIANT VIOLATED: {exc}", file=sys.stderr)
             failed = True
             continue
         results.append(res)
-        name, us, derived = _row(res)
+        name, us, derived = rower(res)
         print(f"{name},{us:.1f},\"{derived}\"")
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"schema": 1, "results": results}, f, indent=2,
                       sort_keys=True)
-    if args.assert_zero_lost_acks and (
+    if args.assert_zero_lost_acks and not args.kill_workers and (
             failed or any(r["lost_acked_writes"] for r in results)):
         print("chaos gate FAILED: acknowledged writes were lost",
+              file=sys.stderr)
+        return 1
+    if args.assert_zero_lost_tasks and args.kill_workers and (
+            failed or any(r["lost_tasks"] for r in results)):
+        print("chaos gate FAILED: tasks were lost or double-delivered",
               file=sys.stderr)
         return 1
     return 1 if failed else 0

@@ -1,17 +1,57 @@
-"""Typed error hierarchy for the replicated KV serving plane.
+"""Typed error hierarchy for the KV serving plane and the task plane.
 
-Both exceptions subclass :class:`ConnectionError` so existing callers that
-catch ``ConnectionError`` keep working; new callers can match on the typed
-subclasses to drive failover-aware behaviour (descriptor refresh, retry,
-re-park).
+The serving-plane exceptions subclass :class:`ConnectionError` so existing
+callers that catch ``ConnectionError`` keep working; new callers can match
+on the typed subclasses to drive failover-aware behaviour (descriptor
+refresh, retry, re-park).
 
 The classes live in their own leaf module because they are raised by the
 server (``kvserver``), encoded by the wire codec (``serialization``) and
 consumed by the cluster client (``kvcluster``) — importing them from any of
-those modules would create a cycle.
+those modules would create a cycle. The task-plane exceptions
+(:class:`ProcessError`, :class:`WorkerLostError`) live here for the same
+reason: ``pool.py`` raises them, the chaos harness and ``mp.py`` catch
+them, and ``kvcluster``'s lease sweep must not import ``pool``.
 """
 
 from __future__ import annotations
+
+
+class ProcessError(Exception):
+    """Base of repro.core.mp exceptions (multiprocessing.ProcessError).
+
+    Defined here (re-exported by ``repro.core.pool`` for compatibility)
+    so the typed worker-loss error below can subclass it without pulling
+    the whole pool machinery into leaf modules."""
+
+
+class WorkerLostError(ProcessError):
+    """Every attempt of a task died with its worker.
+
+    Raised from ``AsyncResult.get`` / delivered through ``imap`` when a
+    task's lease was reclaimed more than ``max_retries`` times (each
+    reclaim means the holding worker died or stalled past its lease TTL),
+    or when the pool has no live worker left to run pending tasks.
+    Carries enough context to decide whether to resubmit:
+
+    - ``task_id``: the stable task key (``"j<job>.<chunk>"`` for pool
+      chunks), identical across attempts.
+    - ``attempts``: how many executions were started before giving up.
+    - ``last_worker``: id of the worker holding the final lease
+      (``None`` when the task never reached a worker).
+    """
+
+    def __init__(self, message="worker lost", task_id=None, attempts=0,
+                 last_worker=None):
+        super().__init__(message)
+        self.task_id = task_id
+        self.attempts = attempts
+        self.last_worker = last_worker
+
+    def __reduce__(self):
+        msg = self.args[0] if self.args else "worker lost"
+        return (type(self), (msg, self.task_id, self.attempts,
+                             self.last_worker))
 
 
 class ShardUnavailableError(ConnectionError):

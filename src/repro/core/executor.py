@@ -133,6 +133,10 @@ class FunctionExecutor:
         self._containers_created = len(self._warm)
         self._invoker_lock = threading.Lock()  # sequential async invocation
         self._pending: Dict[str, TaskFuture] = {}
+        #: live subprocess workers by task id (``backend="subprocess"``
+        #: only) — the chaos harness SIGKILLs these to model a serverless
+        #: runtime reclaiming a function mid-execution
+        self._procs: Dict[str, Any] = {}
         self._result_list = f"{{{self.name}}}:results"
         self._collector: Optional[threading.Thread] = None
         self._shutdown = False
@@ -167,7 +171,20 @@ class FunctionExecutor:
     @staticmethod
     def get_result(futures: Sequence[TaskFuture],
                    timeout: Optional[float] = None) -> List[Any]:
-        return [f.result(timeout) for f in futures]
+        """Gather results in submission order.
+
+        ``timeout`` bounds the TOTAL wall-clock of the gather: one shared
+        deadline is computed up front and each future waits only for the
+        time remaining (a per-future timeout would let N futures cost up
+        to ``N x timeout``). ``None`` waits forever."""
+        deadline = (None if timeout is None
+                    else time.monotonic() + float(timeout))
+        out = []
+        for f in futures:
+            remaining = (None if deadline is None
+                         else max(0.0, deadline - time.monotonic()))
+            out.append(f.result(remaining))
+        return out
 
     def shutdown(self, wait: bool = True) -> None:
         self._shutdown = True
@@ -311,10 +328,33 @@ class FunctionExecutor:
         src_root = os.path.dirname(os.path.dirname(os.path.dirname(
             os.path.abspath(__file__))))
         env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
-        subprocess.run(
+        proc = subprocess.Popen(
             [sys.executable, "-m", "repro.core.worker_main", task_id,
              self.monitoring, self._result_list],
-            env=env, check=False, timeout=self.time_limit_s or 600)
+            env=env)
+        with self._lock:
+            self._procs[task_id] = proc
+        try:
+            proc.wait(timeout=self.time_limit_s or 600)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+            proc.wait()
+            self._settle(task_id, "timeout", (
+                f"subprocess worker exceeded time limit of "
+                f"{self.time_limit_s or 600}s and was killed", ""), {})
+        finally:
+            with self._lock:
+                self._procs.pop(task_id, None)
+
+    def worker_pids(self) -> Dict[str, int]:
+        """PIDs of live subprocess workers, keyed by task id.
+
+        ``backend="subprocess"`` only (empty otherwise). The chaos
+        harness uses this to SIGKILL real worker processes mid-task;
+        supervisors can use it for waitpid-style liveness checks."""
+        with self._lock:
+            return {tid: p.pid for tid, p in self._procs.items()
+                    if p.poll() is None}
 
     # (5) join
     def _ensure_collector(self) -> None:

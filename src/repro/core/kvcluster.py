@@ -157,7 +157,8 @@ from . import transport as _transport
 from .errors import (EndpointConnectError, ShardRedirectError,
                      ShardUnavailableError)
 from .kvserver import KVClient, KVServer, _sendv
-from .kvstore import KVStore, Metrics, _ShardRouter, _debatch
+from .kvstore import (LEASE_REGISTRY_KEY, KVStore, Metrics, _ShardRouter,
+                      _debatch)
 
 __all__ = ["KVCluster", "ClusterClient", "connect", "DESCRIPTOR_KEY",
            "ShardRedirectError", "ShardUnavailableError"]
@@ -184,6 +185,10 @@ _RETRY_SAFE = frozenset({
     "smembers", "scard", "sismember", "bllen",
     "set", "mset", "setrange", "msetrange", "delete", "expire", "persist",
     "lset", "ltrim", "hset", "hdel", "sadd", "srem", "flushall",
+    # lease bookkeeping is fenced by (field, attempt): replaying a renew
+    # or release whose fence no longer matches is a no-op returning
+    # False, so a lost reply cannot corrupt lease state
+    "lease_renew", "lease_release",
 })
 
 
@@ -363,7 +368,8 @@ class KVCluster:
                  control_port: int = 0, hash_seed: int = 0,
                  replicas: int = 0, ack: str = "primary",
                  watchdog: bool = False, heartbeat_s: float = 0.5,
-                 quorum_timeout: float = 5.0):
+                 quorum_timeout: float = 5.0,
+                 lease_sweep_s: float = 0.0):
         if shards < 1:
             raise ValueError("need at least one shard")
         if replicas < 0:
@@ -378,6 +384,10 @@ class KVCluster:
         self.watchdog = bool(watchdog)
         self.heartbeat_s = float(heartbeat_s)
         self.quorum_timeout = float(quorum_timeout)
+        self.lease_sweep_s = float(lease_sweep_s)
+        self._sweep_thread: Optional[threading.Thread] = None
+        self._sweep_stop = threading.Event()
+        self._sweep_client: Optional["ClusterClient"] = None
         self._control_port = control_port
         self._procs: List[_ShardProc] = []
         self._replicas: List[List[_ShardProc]] = []
@@ -421,14 +431,30 @@ class KVCluster:
             self._watchdog_thread = threading.Thread(
                 target=self._watch, daemon=True, name="kvcluster-watchdog")
             self._watchdog_thread.start()
+        if self.lease_sweep_s > 0:
+            self._sweep_stop.clear()
+            self._sweep_thread = threading.Thread(
+                target=self._lease_sweep, daemon=True,
+                name="kvcluster-lease-sweep")
+            self._sweep_thread.start()
         return self
 
     def stop(self) -> None:
         self._started = False
         self._watchdog_stop.set()
+        self._sweep_stop.set()
         if self._watchdog_thread is not None:
             self._watchdog_thread.join(timeout=2 * self.heartbeat_s + 5)
             self._watchdog_thread = None
+        if self._sweep_thread is not None:
+            self._sweep_thread.join(timeout=2 * self.lease_sweep_s + 5)
+            self._sweep_thread = None
+        if self._sweep_client is not None:
+            try:
+                self._sweep_client.close()
+            except Exception:
+                pass
+            self._sweep_client = None
         self._teardown()
 
     def _teardown(self) -> None:
@@ -633,6 +659,42 @@ class KVCluster:
                 self.supervise_once()
             except Exception as exc:  # pragma: no cover - defensive
                 sys.stderr.write(f"[kvcluster] watchdog pass failed: "
+                                 f"{exc!r}\n")
+
+    def lease_sweep_once(self) -> int:
+        """One pass of the cluster-side lease reaper: walk the
+        :data:`~repro.core.kvstore.LEASE_REGISTRY_KEY` registrations
+        (one per lease-enabled ``Pool``) and ``lease_reap`` each
+        registered in-flight hash, re-enqueueing expired leases onto
+        their source queue (attempt bumped) or dead-lettering exhausted
+        ones. This is the safety net for POOLS WHOSE OWNER DIED — a live
+        pool's supervisor reaps its own leases faster; for a dead owner
+        this sweep is the only thing that stops its orphaned leases from
+        pinning tasks forever. Registrations are never pruned here (only
+        ``Pool.close`` unregisters): a stale entry costs one no-op reap
+        per pass. Returns the number of entries reclaimed."""
+        if self._sweep_client is None:
+            self._sweep_client = self.client()
+        client = self._sweep_client
+        reclaimed = 0
+        registry = client.hgetall(LEASE_REGISTRY_KEY) or {}
+        for dst, spec in registry.items():
+            try:
+                src, max_attempts, dead_key = spec
+                requeued, dead = client.lease_reap(
+                    dst, src, max_attempts, None, dead_key)
+            except (ConnectionError, OSError, ValueError, TypeError):
+                continue  # shard mid-failover or malformed registration
+            reclaimed += len(requeued) + len(dead)
+        return reclaimed
+
+    def _lease_sweep(self) -> None:
+        """Reaper loop (``lease_sweep_s > 0``)."""
+        while not self._sweep_stop.wait(self.lease_sweep_s):
+            try:
+                self.lease_sweep_once()
+            except Exception as exc:  # pragma: no cover - defensive
+                sys.stderr.write(f"[kvcluster] lease sweep failed: "
                                  f"{exc!r}\n")
 
     def restart_shard(self, index: int) -> Tuple[str, int]:

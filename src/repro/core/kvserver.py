@@ -575,7 +575,7 @@ def _build_dispatch(store: KVStore) -> Tuple[Any, ...]:
 #: as ``_blocks``, resolved to wire ids once at import)
 _RAW_BLOCKING_NAMES = {
     serialization.RAW_COMMAND_IDS[c]: c
-    for c in ("blpop", "brpop", "bllen", "blpop_rpush")
+    for c in ("blpop", "brpop", "bllen", "blpop_rpush", "blpop_lease")
     if c in serialization.RAW_COMMAND_IDS
 }
 
@@ -923,6 +923,7 @@ _MUTATING_COMMANDS = frozenset({
     "mset", "setrange", "msetrange",
     "lpush", "rpush", "lpop", "rpop", "rpoplpush", "lset", "ltrim",
     "blpop", "brpop", "blpop_rpush",
+    "blpop_lease", "lease_renew", "lease_release", "lease_reap",
     "hset", "hsetnx", "hdel", "hincrby",
     "sadd", "srem",
     "delete", "expire", "persist", "flushall",
@@ -932,7 +933,7 @@ _MUTATING_COMMANDS = frozenset({
 #: blocking mutators need the park-then-log treatment (see
 #: ``_Replicator._run_blocking``): the realized EFFECT is what gets
 #: logged, as its non-blocking equivalent, so replicas never park.
-_REPL_BLOCKING = frozenset({"blpop", "brpop", "blpop_rpush"})
+_REPL_BLOCKING = frozenset({"blpop", "brpop", "blpop_rpush", "blpop_lease"})
 
 #: the realized-effect rewrite for blocking pops: a blpop that popped
 #: key k replays on replicas as lpop(k) — per-key log order makes it
@@ -1235,6 +1236,13 @@ class _Replicator:
             return None  # timed out: nothing mutated, nothing to log
         if name == "blpop_rpush":
             return ("blpop_rpush", (args[0], args[1], args[2], 0.0), {})
+        if name == "blpop_lease":
+            # the replica replays the non-blocking form and pops the same
+            # element (per-key log order); the lease DEADLINE is stamped
+            # with the replica's own clock at apply time — approximate,
+            # which the attempt fence keeps safe across a failover
+            return ("blpop_lease",
+                    (args[0], args[1], args[2], args[3], 0.0), {})
         return (_REPL_POP_EFFECT[name], (value[0],), {})
 
     def _run_blocking(self, store: KVStore, name: str, args: tuple,
@@ -1252,6 +1260,13 @@ class _Replicator:
 
             def attempt() -> Any:
                 return store.blpop_rpush(*attempt_args)
+        elif name == "blpop_lease":
+            wait_key = args[0]
+            timeout = args[4] if len(args) > 4 else kwargs.get("timeout")
+            lease_args = (args[0], args[1], args[2], args[3], 0.0)
+
+            def attempt() -> Any:
+                return store.blpop_lease(*lease_args)
         else:
             keys = [args[0]] if isinstance(args[0], str) else list(args[0])
             wait_key = keys[0]

@@ -928,6 +928,200 @@ class KVStore:
         self._charge("RPOPLPUSH", 0, _sizeof(v))
         return v
 
+    # -- leases (PR 8: fault-tolerant task hand-off) -------------------------
+    #
+    # A leased queue entry is an ``(attempt, field, payload)`` triple:
+    # ``attempt`` fences stale holders, ``field`` is the stable task key
+    # (identical across attempts) indexing the in-flight hash, ``payload``
+    # is the opaque task body. ``blpop_lease`` atomically moves an entry
+    # from the job list into the in-flight hash under a TTL;
+    # ``lease_renew`` extends the TTL (the worker heartbeat),
+    # ``lease_release`` removes the record (settle), and ``lease_reap``
+    # reclaims expired or orphaned entries — re-enqueueing them with a
+    # bumped attempt counter, or dead-lettering them once ``max_attempts``
+    # is exhausted. Renew/release/reap all compare the STORED attempt, so
+    # a zombie worker whose task was already reclaimed can never extend or
+    # release the new holder's lease. Deadlines use this store's monotonic
+    # clock (the same clock as key expiry), never a client clock.
+
+    @staticmethod
+    def _lease_entry(value: Any) -> Optional[Tuple[int, str, Any]]:
+        """Parse ``(attempt, field, payload)``, or None for values outside
+        the lease shape — which pass through ``blpop_lease`` un-leased
+        (poison pills, plain blobs from a lease-unaware producer)."""
+        if (type(value) in (tuple, list) and len(value) == 3
+                and type(value[0]) is int and type(value[1]) is str):
+            return value[0], value[1], value[2]
+        return None
+
+    def _blpop_lease_locked(self, src: str, dst: str, worker: Any,
+                            ttl: float) -> Tuple[bool, Any]:
+        """Must hold both src's and dst's stripe locks. Validates dst
+        BEFORE popping (like ``_blpop_rpush_locked``): erroring after the
+        pop would silently drop the task."""
+        e_dst = self._get_entry(dst)
+        if e_dst is not None and e_dst.kind != "hash":
+            raise WrongTypeError(
+                f"key {dst!r} holds {e_dst.kind}, operation requires hash")
+        ok, v = self._pop(src, True)
+        if not ok:
+            return False, None
+        ent = self._lease_entry(v)
+        if ent is not None:
+            attempt, field_, payload = ent
+            e = self._get_entry(dst, "hash", create=True)
+            e.value[field_] = (self._now() + float(ttl), attempt, worker,
+                              payload)
+        return True, v
+
+    def blpop_lease(self, src: str, dst: str, worker: Any, ttl: float,
+                    timeout: Optional[float] = None) -> Any:
+        """Atomically BLPOP a task entry from list ``src`` and record a
+        TTL lease for it in hash ``dst`` under the entry's ``field``:
+        ``dst[field] = (deadline, attempt, worker, payload)``. One
+        command = one round trip, exactly like ``blpop_rpush``. Returns
+        the popped entry (the full triple), or None on timeout.
+
+        Hash-tagged src/dst (every pool's keys) share a stripe: single
+        lock, plain condition wait; cross-stripe pairs acquire both in
+        index order and wait on src's stripe alone."""
+        if self._txn_tid == threading.get_ident():
+            timeout = 0.0  # inside transaction(fn): scripts cannot block
+        deadline = None if timeout is None else time.monotonic() + timeout
+        t0 = time.monotonic()
+        popped = None
+        got = False
+        s_st, d_st = self._stripe(src), self._stripe(dst)
+        if s_st is d_st:
+            with s_st.lock:
+                while True:
+                    got, popped = self._blpop_lease_locked(src, dst, worker,
+                                                           ttl)
+                    if got:
+                        s_st.cond.notify_all()
+                        break
+                    if deadline is None:
+                        s_st.cond.wait()
+                    else:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0 or not s_st.cond.wait(remaining):
+                            break
+        else:
+            pair = sorted((s_st, d_st), key=lambda st: st.index)
+            while True:
+                self._acquire(pair)
+                try:
+                    got, popped = self._blpop_lease_locked(src, dst, worker,
+                                                           ttl)
+                    if got:
+                        s_st.cond.notify_all()
+                        d_st.cond.notify_all()
+                except BaseException:
+                    self._release(pair)
+                    raise
+                self._release(pair)
+                if got:
+                    break
+                with s_st.lock:
+                    e = self._get_entry(src, "list")
+                    if e is None or not e.value:
+                        if deadline is None:
+                            s_st.cond.wait()
+                        else:
+                            remaining = deadline - time.monotonic()
+                            if remaining <= 0 or not s_st.cond.wait(remaining):
+                                break
+        self.metrics.record_blocked(time.monotonic() - t0)
+        self._charge("BLPOPLEASE", 0, _sizeof(popped) if got else 0)
+        return popped
+
+    def lease_renew(self, dst: str, field_: str, attempt: int,
+                    ttl: float) -> bool:
+        """Extend the lease on ``dst[field_]`` iff the stored attempt
+        matches (fenced): a reclaimed task's old holder renews nothing."""
+        st = self._stripe(dst)
+        with st.lock:
+            e = self._get_entry(dst, "hash")
+            rec = None if e is None else e.value.get(field_)
+            ok = rec is not None and rec[1] == attempt
+            if ok:
+                e.value[field_] = (self._now() + float(ttl), rec[1], rec[2],
+                                   rec[3])
+        self._charge("LEASERENEW")
+        return ok
+
+    def lease_release(self, dst: str, field_: str, attempt: int) -> bool:
+        """Remove the lease on ``dst[field_]`` iff the stored attempt
+        matches (fenced settle); True when the record was removed."""
+        st = self._stripe(dst)
+        with st.lock:
+            e = self._get_entry(dst, "hash")
+            rec = None if e is None else e.value.get(field_)
+            ok = rec is not None and rec[1] == attempt
+            if ok:
+                del e.value[field_]
+                if not e.value:
+                    del st.data[dst]
+        self._charge("LEASERELEASE")
+        return ok
+
+    def lease_reap(self, dst: str, src: Optional[str] = None,
+                   max_attempts: int = 0, worker: Any = None,
+                   dead_key: Optional[str] = None
+                   ) -> Tuple[List[Any], List[Any]]:
+        """Reclaim leases in hash ``dst`` that expired — or, when
+        ``worker`` is given, every lease that worker holds (immediate
+        reclaim on a detected death, no TTL wait). One atomic command.
+
+        Each reclaimed entry re-enqueues onto list ``src`` as
+        ``(attempt+1, field, payload)`` while ``attempt+1 <=
+        max_attempts``; beyond that it dead-letters onto list
+        ``dead_key`` as ``(field, attempt, holder, payload)`` — the
+        holder rides along so the consumer can name the last worker in
+        its typed error. Returns ``(requeued, dead)`` as ``[(field,
+        attempt), ...]`` summaries. With ``src``/``dead_key`` omitted
+        the corresponding entries are returned IN FULL (with payloads)
+        instead of being pushed, so a cross-shard router can route the
+        pushes itself."""
+        keys = [dst] + [k for k in (src, dead_key) if k is not None]
+        stripes = self._stripes_for(keys)
+        self._acquire(stripes)
+        try:
+            requeued: List[Any] = []
+            dead: List[Any] = []
+            e = self._get_entry(dst, "hash")
+            if e is not None:
+                now = self._now()
+                fields = [f for f, rec in e.value.items()
+                          if rec[0] <= now
+                          or (worker is not None and rec[2] == worker)]
+                for f in fields:
+                    _dl, attempt, holder, payload = e.value.pop(f)
+                    nxt = attempt + 1
+                    if nxt <= max_attempts:
+                        if src is not None:
+                            self._get_entry(src, "list",
+                                            create=True).value.append(
+                                                (nxt, f, payload))
+                            requeued.append((f, attempt))
+                        else:
+                            requeued.append((nxt, f, payload))
+                    elif dead_key is not None:
+                        self._get_entry(dead_key, "list",
+                                        create=True).value.append(
+                                            (f, attempt, holder, payload))
+                        dead.append((f, attempt))
+                    else:
+                        dead.append((f, attempt, holder, payload))
+                if not e.value:
+                    del self._stripe(dst).data[dst]
+            for st in stripes:
+                st.cond.notify_all()
+        finally:
+            self._release(stripes)
+        self._charge("LEASEREAP")
+        return requeued, dead
+
     def llen(self, key: str) -> int:
         st = self._stripe(key)
         with st.lock:
@@ -1235,9 +1429,17 @@ class KVStore:
         return Pipeline(self)
 
 
+#: Well-known hash where lease-using task planes (``Pool``) register
+#: their in-flight hashes so a store-side reaper (``KVCluster``'s lease
+#: sweep) can reclaim expired leases even when the client process that
+#: owns the pool has died. field = in-flight hash key, value =
+#: ``(src_queue, max_attempts, dead_key)``.
+LEASE_REGISTRY_KEY = "__leases__"
+
 #: blocking command -> index of its positional ``timeout`` argument;
 #: ``execute_batch`` clamps these to 0 (Redis-MULTI non-blocking rule).
-_BLOCKING_TIMEOUT_ARG = {"blpop": 1, "brpop": 1, "bllen": 1, "blpop_rpush": 3}
+_BLOCKING_TIMEOUT_ARG = {"blpop": 1, "brpop": 1, "bllen": 1, "blpop_rpush": 3,
+                         "blpop_lease": 4}
 
 
 def _blocks(cmd: str, args: tuple, kwargs: dict) -> bool:
@@ -1485,6 +1687,49 @@ class _ShardRouter:
         s_dst.lpush(dst, v)
         return v
 
+    def blpop_lease(self, src: str, dst: str, worker: Any, ttl: float,
+                    timeout: Optional[float] = None) -> Any:
+        """Single command when src/dst co-locate (hash-tagged pool keys
+        always do). Cross-shard fallback stages the popped entry through
+        a same-tag list on dst's shard, so the lease deadline is stamped
+        by DST's store clock — mixing two servers' monotonic clocks
+        would make TTL expiry meaningless. Best-effort like cross-shard
+        ``blpop_rpush``; a raced staging pop can hand the entry to a
+        concurrent consumer under the same (field, attempt), which
+        fencing + first-settle-wins renders harmless."""
+        s_src, s_dst = self.shard_for(src), self.shard_for(dst)
+        if s_src is s_dst:
+            return s_src.blpop_lease(src, dst, worker, ttl, timeout)
+        got = s_src.blpop(src, timeout)
+        if got is None:
+            return None
+        v = got[1]
+        staging = f"{dst}:xfer"
+        s_dst.rpush(staging, v)
+        leased = s_dst.blpop_lease(staging, dst, worker, ttl, 0.0)
+        return leased if leased is not None else v
+
+    def lease_reap(self, dst: str, src: Optional[str] = None,
+                   max_attempts: int = 0, worker: Any = None,
+                   dead_key: Optional[str] = None
+                   ) -> Tuple[List[Any], List[Any]]:
+        """One command when dst/src/dead_key co-locate; otherwise reap on
+        dst's shard with the pushes suppressed (src/dead_key None) and
+        route the re-enqueues / dead-letters from here."""
+        shard = self.shard_for(dst)
+        if ((src is None or self.shard_for(src) is shard)
+                and (dead_key is None or self.shard_for(dead_key) is shard)):
+            return shard.lease_reap(dst, src, max_attempts, worker, dead_key)
+        requeued, dead = shard.lease_reap(dst, None, max_attempts, worker,
+                                          None)
+        if src is not None and requeued:
+            self.shard_for(src).rpush(src, *requeued)
+            requeued = [(f, nxt - 1) for nxt, f, _p in requeued]
+        if dead_key is not None and dead:
+            self.shard_for(dead_key).rpush(dead_key, *dead)
+            dead = [(f, a) for f, a, _h, _p in dead]
+        return requeued, dead
+
     @staticmethod
     def _check_list_dst(shard: Any, dst: str) -> None:
         kind = shard.type_of(dst)
@@ -1549,14 +1794,17 @@ class _ShardRouter:
             # this router's own methods instead of pinning them onto
             # args[0]'s shard (which would write dst keys into the wrong
             # shard's namespace).
-            if cmd in ("blpop_rpush", "rpoplpush"):
+            if cmd in ("blpop_rpush", "rpoplpush", "blpop_lease"):
                 src_k = args[0] if args else kwargs.get("src")
                 dst_k = args[1] if len(args) > 1 else kwargs.get("dst")
                 spans_shards = (
                     not (isinstance(src_k, str) and isinstance(dst_k, str))
                     or self.shard_for(src_k) is not self.shard_for(dst_k))
             else:
-                spans_shards = cmd == "delete" and len(args) > 1
+                # lease_reap takes up to three keys in mixed positions;
+                # always let the router method sort out co-location
+                spans_shards = (cmd == "lease_reap"
+                                or (cmd == "delete" and len(args) > 1))
             if args and isinstance(args[0], str) and not spans_shards:
                 groups.setdefault(
                     self._hash(args[0]) % len(self.shards), []).append(

@@ -14,6 +14,62 @@ bounds worker lifetime (see ``FunctionExecutor(time_limit_s=...)``).
 
 Beyond-paper: ``resize()`` grows/shrinks the worker fleet at runtime —
 the elasticity hook used by ``repro.runtime.elastic``.
+
+Fault tolerance (PR 8)
+----------------------
+
+Serverless workers are *expected* to die mid-task. With the knobs below
+the task plane is **at-least-once execution, exactly-once-visible
+results**:
+
+``max_retries`` (default 0 = off)
+    Tasks hand off via the fused ``blpop_lease`` KV command instead of a
+    bare ``blpop``: the chunk moves atomically from the job queue into a
+    per-pool in-flight hash under a TTL lease. A worker that dies (or
+    stalls past the TTL) has its lease reclaimed — by the pool
+    supervisor immediately on detected death, by its periodic TTL sweep,
+    or by a ``KVCluster(lease_sweep_s=...)`` server-side reaper if the
+    pool's owner died too — and the chunk re-enqueues with a bumped
+    attempt counter, up to ``max_retries`` re-runs. Beyond that the
+    chunk dead-letters and its items settle as a typed
+    :class:`~repro.core.errors.WorkerLostError` (task id, attempts,
+    last worker) instead of hanging forever. Every settle is fenced by
+    ``(field, attempt)``: a zombie worker's late result for a reclaimed
+    task is discarded by the collector's settled-set, never
+    double-delivered to ``AsyncResult``/``imap``.
+
+``lease_ttl_s`` / ``heartbeat_s``
+    Lease TTL and the worker renewal cadence (default ``ttl / 3``).
+    Each worker also refreshes a per-worker heartbeat key carrying its
+    PID; a missing heartbeat is how the supervisor detects dead
+    subprocess workers (thread-backend deaths surface through the
+    executor future as well).
+
+``speculation_factor`` (default 0.0 = off)
+    Straggler speculation: the supervisor tracks completed-chunk
+    runtimes and re-enqueues a *speculative duplicate* of any chunk
+    outstanding longer than ``speculation_factor x median``. Fencing
+    makes the duplicate safe — first settle wins, the loser is
+    discarded.
+
+``respawn_budget``
+    How many replacement workers the supervisor may spawn for dead ones
+    (default ``2 x processes`` when fault tolerance is on, else 0).
+    When no live worker remains, tasks are outstanding and the budget
+    is spent, pending results fail with ``WorkerLostError`` rather than
+    blocking forever — this detection also runs with fault tolerance
+    OFF, closing the bare "all workers died -> ``get()`` hangs" hole.
+
+**Cost when off** is zero: with ``max_retries=0`` and
+``speculation_factor=0.0`` the worker loop, the submit path and the
+result messages are byte-identical to the lease-less protocol — same KV
+command count per task — and the supervisor thread performs no KV
+operation.
+
+**Side-effect caveat**: at-least-once execution means a non-idempotent
+user function can run its side effects more than once even though its
+*result* is delivered exactly once. Keep side-effecting tasks
+idempotent, or leave fault tolerance off for them.
 """
 
 from __future__ import annotations
@@ -21,21 +77,23 @@ from __future__ import annotations
 import hashlib
 import itertools
 import math
+import os
+import statistics
 import threading
 import time
 import traceback
+from collections import deque
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from . import serialization
 from . import session as _session
+from .errors import ProcessError, WorkerLostError
 from .executor import FunctionExecutor
+from .kvstore import LEASE_REGISTRY_KEY
 from .reference import fresh_uid
 
-__all__ = ["Pool", "AsyncResult", "MapResult", "ProcessError", "TimeoutError"]
-
-
-class ProcessError(Exception):
-    """Base of repro.core.mp exceptions (multiprocessing.ProcessError)."""
+__all__ = ["Pool", "AsyncResult", "MapResult", "ProcessError",
+           "TimeoutError", "WorkerLostError"]
 
 
 class TimeoutError(ProcessError):  # noqa: A001 - mirrors multiprocessing
@@ -47,10 +105,55 @@ class TimeoutError(ProcessError):  # noqa: A001 - mirrors multiprocessing
 _POISON = b"__poison__"
 _SUBMIT_RPUSH_ARITY = 64  # max chunks per RPUSH inside a submit pipeline
 
+#: Speculative re-enqueues fence with attempts from this base so they can
+#: never collide with (or be mistaken for) real retry attempts — and so a
+#: speculative lease that itself expires dead-letters invisibly instead of
+#: failing a task whose original attempt is still running.
+_SPEC_ATTEMPT_BASE = 10 ** 6
+
+#: Grace between an executor future settling and declaring the worker
+#: dead: a clean exit's "worker_exit" message needs a beat to drain.
+_DEAD_GRACE_S = 0.5
+
+#: Grace after spawn before a missing heartbeat key means death — covers
+#: subprocess startup (interpreter boot + store connect + first beat).
+_HB_SPAWN_GRACE_S = 5.0
+
 
 def default_parallelism() -> int:
     sess = _session.get_session()
     return int(sess.executor_defaults.get("default_parallelism", 0)) or 4
+
+
+def _kill_flag_matches(value: Any, pool_uid: str) -> bool:
+    """Generation-fenced kill flag: ``terminate`` writes the pool's uid,
+    so a stale flag from a previous pool generation reusing the tag can
+    never kill this generation's workers. Non-string truthy values keep
+    the legacy kill-all meaning."""
+    if value is None:
+        return False
+    if isinstance(value, (str, bytes)):
+        val = value.decode() if isinstance(value, bytes) else value
+        return val == pool_uid
+    return bool(value)
+
+
+def _chaos_actions(worker_id: int) -> set:
+    """Parse ``REPRO_POOL_CHAOS`` (e.g. ``"die:1,3;zombie:2"``) into the
+    set of fault actions scripted for this worker id. Used only by the
+    chaos harness; the env var is unset in normal operation."""
+    spec = os.environ.get("REPRO_POOL_CHAOS", "")
+    acts = set()
+    for part in spec.split(";"):
+        if ":" not in part:
+            continue
+        name, ids = part.split(":", 1)
+        try:
+            if worker_id in {int(x) for x in ids.split(",") if x}:
+                acts.add(name.strip())
+        except ValueError:
+            continue
+    return acts
 
 
 # ---------------------------------------------------------------------------
@@ -59,50 +162,133 @@ def default_parallelism() -> int:
 
 
 def _pool_worker(pool_tag: str, worker_id: int, init_key: Optional[str],
-                 maxtasksperchild: Optional[int]) -> None:
+                 maxtasksperchild: Optional[int],
+                 lease_cfg: Optional[Tuple[float, float]] = None) -> None:
     sess = _session.get_session()
     store, storage = sess.store, sess.get_storage()
     job_key = f"{pool_tag}:jobs"
     result_key = f"{pool_tag}:results"
     kill_key = f"{pool_tag}:kill"
+    inflight_key = f"{pool_tag}:inflight"
+    pool_uid = pool_tag[1:-1] if pool_tag.startswith("{") else pool_tag
 
     if init_key is not None:
         initializer, initargs = serialization.loads(storage.get(init_key))
         initializer(*initargs)
 
+    # -- lease mode plumbing (no-ops when lease_cfg is None) ----------------
+    ttl = hb_s = 0.0
+    chaos: set = set()
+    cur_lock = threading.Lock()
+    cur_lease: List[Optional[Tuple[str, int]]] = [None]
+    hb_stop = threading.Event()
+    if lease_cfg is not None:
+        ttl, hb_s = float(lease_cfg[0]), float(lease_cfg[1])
+        chaos = _chaos_actions(worker_id)
+        hb_key = f"{pool_tag}:hb:{worker_id}"
+        hb_ex = max(2.5 * hb_s, 0.5)
+
+        def _beat() -> None:
+            try:
+                store.set(hb_key, os.getpid(), ex=hb_ex)
+                with cur_lock:
+                    lease = cur_lease[0]
+                if lease is not None:
+                    store.lease_renew(inflight_key, lease[0], lease[1], ttl)
+            except Exception:
+                pass  # transient store failure: the next beat retries
+
+        def _hb_loop() -> None:
+            while not hb_stop.wait(hb_s):
+                _beat()
+
+        _beat()  # first heartbeat before any task, so spawn-grace is short
+        threading.Thread(target=_hb_loop, daemon=True,
+                         name=f"pool-hb-{worker_id}").start()
+
     func_cache: Dict[str, Callable] = {}
     chunks_done = 0
     exit_reason = "poison"
-    while True:
-        got = store.blpop(job_key, timeout=0.25)
-        if got is None:
-            if store.get(kill_key):
-                exit_reason = "killed"
+    try:
+        while True:
+            attempt, field_ = 0, None
+            if lease_cfg is not None:
+                got = store.blpop_lease(job_key, inflight_key, worker_id,
+                                        ttl, timeout=0.25)
+                if got is None:
+                    if _kill_flag_matches(store.get(kill_key), pool_uid):
+                        exit_reason = "killed"
+                        break
+                    continue
+                if isinstance(got, (bytes, bytearray)) \
+                        and bytes(got) == _POISON:
+                    break
+                blob = got
+                if (isinstance(got, (tuple, list)) and len(got) == 3
+                        and isinstance(got[0], int)):
+                    attempt, field_, blob = got
+                if field_ is not None and "die" in chaos:
+                    # chaos: SIGKILL between lease-acquire and the first
+                    # renewal — the task must come back via the reaper
+                    import signal
+                    chaos.discard("die")
+                    os.kill(os.getpid(), signal.SIGKILL)
+                if field_ is not None:
+                    with cur_lock:
+                        cur_lease[0] = (field_, attempt)
+            else:
+                got = store.blpop(job_key, timeout=0.25)
+                if got is None:
+                    if _kill_flag_matches(store.get(kill_key), pool_uid):
+                        exit_reason = "killed"
+                        break
+                    continue
+                if got[1] == _POISON:
+                    break
+                blob = got[1]
+            job_id, chunk_idx, func_key, items = serialization.loads(blob)
+            func = func_cache.get(func_key)
+            if func is None:
+                func = serialization.loads(storage.get(func_key))
+                func_cache[func_key] = func
+            results: List[Tuple[int, str, Any]] = []
+            t0 = time.perf_counter()
+            for item_idx, args, kwargs in items:
+                try:
+                    results.append((item_idx, "ok", func(*args, **kwargs)))
+                except Exception as exc:
+                    results.append((item_idx, "error",
+                                    (f"{type(exc).__name__}: {exc}",
+                                     traceback.format_exc())))
+            run_s = time.perf_counter() - t0
+            if field_ is not None and "zombie" in chaos:
+                # chaos: model a worker suspended past its lease TTL that
+                # resumes and tries a stale settle — renewals stop (a
+                # suspended process beats nothing), the reaper reclaims,
+                # and the late push below must be fenced/deduplicated
+                chaos.discard("zombie")
+                with cur_lock:
+                    cur_lease[0] = None
+                time.sleep(2.0 * ttl)
+            if lease_cfg is not None:
+                store.rpush(result_key, serialization.dumps(
+                    ("chunk", job_id, chunk_idx, results, worker_id,
+                     attempt, run_s)))
+                if field_ is not None:
+                    with cur_lock:
+                        cur_lease[0] = None
+                    store.lease_release(inflight_key, field_, attempt)
+            else:
+                store.rpush(result_key, serialization.dumps(
+                    ("chunk", job_id, chunk_idx, results, worker_id)))
+            chunks_done += 1
+            if maxtasksperchild and chunks_done >= maxtasksperchild:
+                exit_reason = "recycle"
                 break
-            continue
-        if got[1] == _POISON:
-            break
-        job_id, chunk_idx, func_key, items = serialization.loads(got[1])
-        func = func_cache.get(func_key)
-        if func is None:
-            func = serialization.loads(storage.get(func_key))
-            func_cache[func_key] = func
-        results: List[Tuple[int, str, Any]] = []
-        for item_idx, args, kwargs in items:
-            try:
-                results.append((item_idx, "ok", func(*args, **kwargs)))
-            except Exception as exc:
-                results.append((item_idx, "error",
-                                (f"{type(exc).__name__}: {exc}",
-                                 traceback.format_exc())))
         store.rpush(result_key, serialization.dumps(
-            ("chunk", job_id, chunk_idx, results, worker_id)))
-        chunks_done += 1
-        if maxtasksperchild and chunks_done >= maxtasksperchild:
-            exit_reason = "recycle"
-            break
-    store.rpush(result_key, serialization.dumps(
-        ("worker_exit", worker_id, exit_reason)))
+            ("worker_exit", worker_id, exit_reason)))
+    finally:
+        hb_stop.set()
 
 
 # ---------------------------------------------------------------------------
@@ -126,6 +312,9 @@ class AsyncResult:
         with self._lock:
             if status == "ok":
                 self._values[item_idx] = value
+            elif status == "exc":  # value IS the exception (WorkerLostError)
+                if self._first_error is None:
+                    self._first_error = value
             elif self._first_error is None:
                 self._first_error = RemoteError(value[0], value[1])
             self._got += 1
@@ -142,6 +331,22 @@ class AsyncResult:
                 except Exception:
                     pass
             self._event.set()
+
+    def _fail(self, exc: Exception) -> None:
+        """Settle the whole result with ``exc`` (supervisor verdicts:
+        all workers dead, pool torn down under a pending job)."""
+        with self._lock:
+            if self._event.is_set():
+                return
+            if self._first_error is None:
+                self._first_error = exc
+            self._got = self._n
+        if self._error_callback:
+            try:
+                self._error_callback(self._first_error)
+            except Exception:
+                pass
+        self._event.set()
 
     def _result_value(self):
         return self._values[0]
@@ -175,13 +380,52 @@ class MapResult(AsyncResult):
 # ---------------------------------------------------------------------------
 
 
+class _Chunk:
+    """Client-side record of one submitted chunk (lease mode only): the
+    item indices it covers (for dead-letter delivery), the serialized
+    payload (for speculation) and the submit time (for straggler
+    detection)."""
+
+    __slots__ = ("item_idxs", "payload", "submit_t", "speculated")
+
+    def __init__(self, item_idxs: List[int], payload: bytes):
+        self.item_idxs = item_idxs
+        self.payload = payload
+        self.submit_t = time.monotonic()
+        self.speculated = False
+
+
+class _Job:
+    __slots__ = ("result", "imap_buf", "settled", "chunks")
+
+    def __init__(self, result: "AsyncResult",
+                 imap_buf: Optional["_IMapBuffer"],
+                 chunks: Optional[Dict[int, _Chunk]] = None):
+        self.result = result
+        self.imap_buf = imap_buf
+        #: chunk indices already settled (lease mode): the exactly-once-
+        #: visible gate — late zombie results and speculation losers for
+        #: a settled chunk are discarded here. None when leases are off.
+        self.settled: Optional[set] = set() if chunks is not None else None
+        self.chunks = chunks
+
+
 class Pool:
     def __init__(self, processes: Optional[int] = None,
                  initializer: Optional[Callable] = None,
                  initargs: Sequence[Any] = (),
                  maxtasksperchild: Optional[int] = None,
                  context=None,  # accepted for API fidelity
-                 session: Optional[_session.Session] = None):
+                 session: Optional[_session.Session] = None,
+                 max_retries: int = 0,
+                 lease_ttl_s: float = 5.0,
+                 heartbeat_s: Optional[float] = None,
+                 speculation_factor: float = 0.0,
+                 respawn_budget: Optional[int] = None):
+        if max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if lease_ttl_s <= 0:
+            raise ValueError("lease_ttl_s must be > 0")
         self.session = session or _session.get_session()
         self._store = self.session.store
         self._storage = self.session.get_storage()
@@ -189,6 +433,15 @@ class Pool:
         self._tag = "{" + self.uid + "}"
         self._n_workers_target = processes or default_parallelism()
         self._maxtasks = maxtasksperchild
+        self._max_retries = int(max_retries)
+        self._spec_factor = float(speculation_factor)
+        self._ft = self._max_retries > 0 or self._spec_factor > 0
+        self._hb_s = float(heartbeat_s) if heartbeat_s else lease_ttl_s / 3.0
+        self._lease_cfg: Optional[Tuple[float, float]] = (
+            (float(lease_ttl_s), self._hb_s) if self._ft else None)
+        self._respawn_left = (respawn_budget if respawn_budget is not None
+                              else (2 * self._n_workers_target
+                                    if self._ft else 0))
         self._executor = FunctionExecutor(
             name=f"pool-{self.uid}", session=self.session,
             **{k: v for k, v in self.session.executor_defaults.items()
@@ -200,17 +453,45 @@ class Pool:
                               serialization.dumps((initializer, tuple(initargs))))
         self._job_seq = itertools.count()
         self._uploaded_funcs: set = set()  # payload hashes already stored
-        self._jobs: Dict[int, Tuple[MapResult, Optional["_IMapBuffer"]]] = {}
+        self._jobs: Dict[int, _Job] = {}
         self._jobs_lock = threading.Lock()
         self._live_workers = 0
         self._worker_seq = itertools.count()
+        self._workers: Dict[int, Any] = {}  # wid -> executor TaskFuture
+        self._worker_spawn_t: Dict[int, float] = {}
+        self._exited: set = set()        # clean worker_exit seen
+        self._dead_handled: set = set()  # deaths already acted on
+        self._dead_candidates: Dict[int, float] = {}
+        self._runtimes: deque = deque(maxlen=256)
+        self._spec_seq = itertools.count()
+        self._all_dead_since: Optional[float] = None
+        self._stats: Dict[str, int] = {
+            "workers_lost": 0, "workers_respawned": 0,
+            "leases_requeued": 0, "tasks_dead_lettered": 0,
+            "duplicate_results_discarded": 0, "speculative_tasks": 0,
+            "all_dead_failures": 0,
+        }
         self._closed = False
         self._all_exited = threading.Event()
         self._all_exited.set()
+        if self._ft:
+            # register with any cluster-side reaper: if THIS process dies,
+            # the sweep still reclaims our workers' orphaned leases
+            try:
+                self._store.hset(
+                    LEASE_REGISTRY_KEY, self._inflight_key,
+                    (self._job_key, self._max_retries, self._dead_key))
+            except Exception:
+                pass
         self._collector = threading.Thread(
             target=self._collect, daemon=True, name=f"pool-collector-{self.uid}")
         self._collector_stop = False
         self._collector.start()
+        self._supervisor_stop = threading.Event()
+        self._supervisor = threading.Thread(
+            target=self._supervise, daemon=True,
+            name=f"pool-supervisor-{self.uid}")
+        self._supervisor.start()
         self._spawn_workers(self._n_workers_target)
 
     # -- keys ---------------------------------------------------------------
@@ -227,14 +508,28 @@ class Pool:
     def _kill_key(self) -> str:
         return f"{self._tag}:kill"
 
+    @property
+    def _inflight_key(self) -> str:
+        return f"{self._tag}:inflight"
+
+    @property
+    def _dead_key(self) -> str:
+        return f"{self._tag}:dead"
+
+    def _hb_key(self, wid: int) -> str:
+        return f"{self._tag}:hb:{wid}"
+
     # -- workers --------------------------------------------------------------
 
     def _spawn_workers(self, n: int) -> None:
         for _ in range(n):
             wid = next(self._worker_seq)
-            self._executor.call_async(
-                _pool_worker, (self._tag, wid, self._init_key, self._maxtasks))
+            fut = self._executor.call_async(
+                _pool_worker, (self._tag, wid, self._init_key, self._maxtasks,
+                               self._lease_cfg))
             with self._jobs_lock:
+                self._workers[wid] = fut
+                self._worker_spawn_t[wid] = time.monotonic()
                 self._live_workers += 1
                 self._all_exited.clear()
 
@@ -252,6 +547,34 @@ class Pool:
     def n_workers(self) -> int:
         with self._jobs_lock:
             return self._live_workers
+
+    def worker_pids(self) -> Dict[int, int]:
+        """PIDs of live workers as advertised by their heartbeat keys
+        (lease mode only — empty otherwise). With the subprocess backend
+        these are real OS pids; the chaos harness SIGKILLs them."""
+        if self._lease_cfg is None:
+            return {}
+        with self._jobs_lock:
+            wids = [w for w in self._workers
+                    if w not in self._exited and w not in self._dead_handled]
+        if not wids:
+            return {}
+        try:
+            vals = self._store.mget([self._hb_key(w) for w in wids])
+        except Exception:
+            return {}
+        return {w: int(v) for w, v in zip(wids, vals) if v is not None}
+
+    def fault_stats(self) -> Dict[str, int]:
+        """Snapshot of the fault-tolerance counters (all zero with FT
+        off): workers lost/respawned, leases requeued, tasks
+        dead-lettered, duplicate results discarded by fencing,
+        speculative re-enqueues, all-dead failures."""
+        with self._jobs_lock:
+            out = dict(self._stats)
+            out["live_workers"] = self._live_workers
+            out["respawn_budget_left"] = self._respawn_left
+        return out
 
     # -- submission ------------------------------------------------------------
 
@@ -290,18 +613,26 @@ class Pool:
             result._event.set()
             return
         job_id = next(self._job_seq)
-        with self._jobs_lock:
-            self._jobs[job_id] = (result, imap_buf)
         func_key = self._upload_func(func)
         if chunksize is None:
             chunksize = max(1, math.ceil(n / (self._n_workers_target * 4)))
-        chunks = []
+        chunks: List[Any] = []
+        chunk_meta: Optional[Dict[int, _Chunk]] = {} if self._ft else None
         for c_idx, start in enumerate(range(0, n, chunksize)):
             chunk_items = [(start + j, args, kwargs)
                            for j, (args, kwargs) in
                            enumerate(items[start:start + chunksize])]
-            chunks.append(serialization.dumps(
-                (job_id, c_idx, func_key, chunk_items)))
+            blob = serialization.dumps((job_id, c_idx, func_key, chunk_items))
+            if chunk_meta is None:
+                chunks.append(blob)
+            else:
+                # lease-mode queue entry: (attempt, field, payload), the
+                # shape blpop_lease indexes the in-flight hash by
+                chunks.append((0, f"j{job_id}.{c_idx}", blob))
+                chunk_meta[c_idx] = _Chunk([ci[0] for ci in chunk_items],
+                                           blob)
+        with self._jobs_lock:
+            self._jobs[job_id] = _Job(result, imap_buf, chunk_meta)
         # One flush submits the whole job (the paper's key optimization).
         # Large jobs split into capped-arity RPUSHes inside one pipeline
         # flush: over TCP the multi-frame mode bounds how much of the job
@@ -391,13 +722,16 @@ class Pool:
         pipe_factory = getattr(self._store, "pipeline", None)
         if pipe_factory is not None:
             # kill flag + queue flush + poison pills: one round trip.
+            # The flag's VALUE is this pool's uid (generation fence):
+            # workers only honor their own generation's flag, so the
+            # ex=3600 window can never kill a later pool's workers.
             with pipe_factory() as pipe:
-                pipe.set(self._kill_key, 1, ex=3600)
+                pipe.set(self._kill_key, self.uid, ex=3600)
                 pipe.delete(self._job_key)
                 if n:
                     pipe.rpush(self._job_key, *([_POISON] * n))
             return
-        self._store.set(self._kill_key, 1, ex=3600)
+        self._store.set(self._kill_key, self.uid, ex=3600)
         self._store.delete(self._job_key)
         if n:
             self._store.rpush(self._job_key, *([_POISON] * n))
@@ -407,8 +741,18 @@ class Pool:
             raise ValueError("Pool is still running; call close() first")
         self._all_exited.wait(timeout)
         self._collector_stop = True
+        self._supervisor_stop.set()
+        if self._ft:
+            try:
+                self._store.hdel(LEASE_REGISTRY_KEY, self._inflight_key)
+                self._store.delete(self._inflight_key, self._dead_key)
+            except Exception:
+                pass
         self._store.rpush(self._result_key, serialization.dumps(("stop",)))
         self._executor.shutdown(wait=False)
+        # reap the collector so teardown (e.g. the session's store being
+        # closed right after join) can't race its parked blpop
+        self._collector.join(timeout=5)
 
     def __enter__(self) -> "Pool":
         return self
@@ -428,7 +772,23 @@ class Pool:
 
     def _collect(self) -> None:
         while True:
-            got = self._store.blpop(self._result_key, timeout=0.5)
+            try:
+                got = self._store.blpop(self._result_key, timeout=0.5)
+            except (ConnectionError, OSError) as exc:
+                # store connection closed under us (session teardown /
+                # server gone): no result can arrive anymore. Fail what
+                # is still pending so waiters unblock with the cause.
+                with self._jobs_lock:
+                    jobs = list(self._jobs.values())
+                    self._jobs.clear()
+                err = ProcessError(
+                    f"kv store connection lost while collecting pool "
+                    f"results: {type(exc).__name__}: {exc}")
+                for job in jobs:
+                    job.result._fail(err)
+                    if job.imap_buf is not None:
+                        job.imap_buf.fail(err)
+                return
             if got is None:
                 if self._collector_stop:
                     return
@@ -440,25 +800,255 @@ class Pool:
             if kind == "worker_exit":
                 _, wid, reason = msg
                 with self._jobs_lock:
+                    self._exited.add(wid)
+                    self._workers.pop(wid, None)
+                    self._dead_candidates.pop(wid, None)
                     self._live_workers -= 1
                     if self._live_workers <= 0:
                         self._all_exited.set()
                 if reason == "recycle" and not self._closed:
                     self._spawn_workers(1)  # maxtasksperchild replacement
                 continue
-            _, job_id, _c_idx, results, _wid = msg
+            if len(msg) >= 7:  # lease-mode chunk: + (attempt, run_s)
+                _, job_id, c_idx, results, _wid, _attempt, run_s = msg[:7]
+            else:
+                _, job_id, c_idx, results, _wid = msg
+                run_s = None
             with self._jobs_lock:
-                entry = self._jobs.get(job_id)
-            if entry is None:
+                job = self._jobs.get(job_id)
+                if job is not None and job.settled is not None:
+                    if c_idx in job.settled:
+                        # fenced duplicate: a zombie's late settle or a
+                        # speculation loser — already delivered once
+                        self._stats["duplicate_results_discarded"] += 1
+                        continue
+                    job.settled.add(c_idx)
+                elif job is None and run_s is not None:
+                    # lease-mode settle for a job already pruned (fully
+                    # delivered): a zombie that outslept the whole job
+                    self._stats["duplicate_results_discarded"] += 1
+                if run_s is not None:
+                    self._runtimes.append(run_s)
+            if job is None:
                 continue
-            result, imap_buf = entry
             for item_idx, status, value in results:
-                result._deliver(item_idx, status, value)
-                if imap_buf is not None:
-                    imap_buf.deliver(item_idx, status, value)
-            if result.ready():
+                job.result._deliver(item_idx, status, value)
+                if job.imap_buf is not None:
+                    job.imap_buf.deliver(item_idx, status, value)
+            if job.result.ready():
                 with self._jobs_lock:
                     self._jobs.pop(job_id, None)
+
+    # -- supervision ------------------------------------------------------------
+
+    def _supervise(self) -> None:
+        """Supervisor loop: dead-worker detection + respawn (all modes,
+        in-process signals only when FT is off), lease reaping,
+        dead-letter delivery, straggler speculation, and the all-dead
+        failsafe. Interval tracks the heartbeat cadence in lease mode."""
+        interval = (max(0.05, min(0.25, self._hb_s)) if self._ft else 0.25)
+        while not self._supervisor_stop.wait(interval):
+            try:
+                self._supervise_once()
+            except Exception:
+                pass  # a supervision pass must never kill the thread
+
+    def _supervise_once(self) -> None:
+        now = time.monotonic()
+        with self._jobs_lock:
+            snapshot = [(wid, fut) for wid, fut in self._workers.items()
+                        if wid not in self._exited
+                        and wid not in self._dead_handled]
+        # 1. executor-future deaths (thread backend: worker body raised)
+        for wid, fut in snapshot:
+            if fut is not None and fut.done():
+                t0 = self._dead_candidates.setdefault(wid, now)
+                if now - t0 >= _DEAD_GRACE_S:
+                    self._on_worker_death(wid)
+            else:
+                self._dead_candidates.pop(wid, None)
+        # 2. missing heartbeats (lease mode: catches SIGKILLed subprocesses)
+        if self._lease_cfg is not None and snapshot:
+            wids = [wid for wid, _ in snapshot
+                    if wid not in self._dead_handled
+                    and now - self._worker_spawn_t.get(wid, now)
+                    > _HB_SPAWN_GRACE_S]
+            if wids:
+                try:
+                    vals = self._store.mget([self._hb_key(w) for w in wids])
+                except Exception:
+                    vals = None
+                if vals is not None:
+                    for wid, val in zip(wids, vals):
+                        if val is None:
+                            self._on_worker_death(wid)
+        # 3. periodic TTL reap + dead-letter delivery (lease mode)
+        if self._lease_cfg is not None:
+            try:
+                requeued, _dead = self._store.lease_reap(
+                    self._inflight_key, self._job_key, self._max_retries,
+                    None, self._dead_key)
+                if requeued:
+                    with self._jobs_lock:
+                        self._stats["leases_requeued"] += len(requeued)
+            except Exception:
+                pass
+            self._drain_dead_letters()
+            if self._spec_factor > 0:
+                self._speculate(now)
+        # 4. all-dead failsafe (runs in every mode)
+        self._check_all_dead(now)
+
+    def _on_worker_death(self, wid: int) -> None:
+        with self._jobs_lock:
+            if wid in self._exited or wid in self._dead_handled:
+                return
+            self._dead_handled.add(wid)
+            self._workers.pop(wid, None)
+            self._dead_candidates.pop(wid, None)
+            self._live_workers -= 1
+            if self._live_workers <= 0:
+                self._all_exited.set()
+            self._stats["workers_lost"] += 1
+            respawn = not self._closed and self._respawn_left > 0
+            if respawn:
+                self._respawn_left -= 1
+        if self._lease_cfg is not None:
+            # reclaim the corpse's leases NOW instead of waiting for TTL
+            try:
+                requeued, _dead = self._store.lease_reap(
+                    self._inflight_key, self._job_key, self._max_retries,
+                    wid, self._dead_key)
+                self._store.delete(self._hb_key(wid))
+                if requeued:
+                    with self._jobs_lock:
+                        self._stats["leases_requeued"] += len(requeued)
+            except Exception:
+                pass
+        if respawn:
+            self._spawn_workers(1)
+            with self._jobs_lock:
+                self._stats["workers_respawned"] += 1
+
+    def _drain_dead_letters(self) -> None:
+        while True:
+            try:
+                got = self._store.blpop(self._dead_key, timeout=0)
+            except Exception:
+                return
+            if got is None:
+                return
+            try:
+                field_, attempt, holder, _payload = got[1]
+            except (TypeError, ValueError):
+                continue
+            if attempt >= _SPEC_ATTEMPT_BASE:
+                continue  # an expired speculative duplicate is not a failure
+            self._deliver_dead(str(field_), int(attempt), holder)
+
+    def _deliver_dead(self, field_: str, attempt: int, holder: Any) -> None:
+        try:
+            job_part, c_part = field_.split(".", 1)
+            job_id, c_idx = int(job_part[1:]), int(c_part)
+        except (ValueError, IndexError):
+            return
+        with self._jobs_lock:
+            job = self._jobs.get(job_id)
+            if job is None or job.settled is None or c_idx in job.settled:
+                return
+            job.settled.add(c_idx)
+            chunk = (job.chunks or {}).get(c_idx)
+            self._stats["tasks_dead_lettered"] += (
+                len(chunk.item_idxs) if chunk else 1)
+        exc = WorkerLostError(
+            f"task {field_} lost its worker on every attempt "
+            f"({attempt + 1} attempts, max_retries={self._max_retries})",
+            task_id=field_, attempts=attempt + 1, last_worker=holder)
+        if chunk is not None:
+            for item_idx in chunk.item_idxs:
+                job.result._deliver(item_idx, "exc", exc)
+                if job.imap_buf is not None:
+                    job.imap_buf.deliver(item_idx, "exc", exc)
+        else:
+            job.result._fail(exc)
+            if job.imap_buf is not None:
+                job.imap_buf.fail(exc)
+        if job.result.ready():
+            with self._jobs_lock:
+                self._jobs.pop(job_id, None)
+
+    def _speculate(self, now: float) -> None:
+        """Re-enqueue a speculative duplicate of chunks outstanding
+        longer than ``speculation_factor x median`` completed-chunk
+        runtime (client-observed: queue wait counts as straggling too).
+        At most one speculation per chunk; fencing + the settled-set
+        make whichever copy finishes second invisible."""
+        if len(self._runtimes) < 3:
+            return
+        med = statistics.median(self._runtimes)
+        if med <= 0:
+            return
+        # floor: with microsecond medians every queued chunk would look
+        # like a straggler and the whole backlog would double-submit
+        threshold = max(self._spec_factor * med, 0.05)
+        cands: List[Tuple[int, int, bytes]] = []
+        with self._jobs_lock:
+            for job_id, job in self._jobs.items():
+                if job.chunks is None:
+                    continue
+                for c_idx, ch in job.chunks.items():
+                    if (ch.speculated or c_idx in job.settled
+                            or now - ch.submit_t <= threshold):
+                        continue
+                    ch.speculated = True
+                    cands.append((job_id, c_idx, ch.payload))
+        for job_id, c_idx, payload in cands:
+            attempt = _SPEC_ATTEMPT_BASE + next(self._spec_seq)
+            try:
+                self._store.rpush(self._job_key,
+                                  (attempt, f"j{job_id}.{c_idx}", payload))
+                with self._jobs_lock:
+                    self._stats["speculative_tasks"] += 1
+            except Exception:
+                pass
+
+    def _check_all_dead(self, now: float) -> None:
+        """No live worker + outstanding tasks + no respawn left: fail
+        pending results with ``WorkerLostError`` instead of letting
+        ``get(timeout=None)``/``join`` park forever. Requires the
+        condition to hold for two passes with an EMPTY result list so
+        results still in flight are never spuriously failed."""
+        with self._jobs_lock:
+            live = self._live_workers
+            can_respawn = not self._closed and self._respawn_left > 0
+            pending = [j for j in self._jobs.values() if not j.result.ready()]
+        if live > 0 or not pending or can_respawn:
+            self._all_dead_since = None
+            return
+        try:
+            backlog = self._store.llen(self._result_key)
+        except Exception:
+            backlog = 1  # can't tell -> don't fail anything yet
+        if backlog:
+            self._all_dead_since = None
+            return
+        if self._all_dead_since is None:
+            self._all_dead_since = now
+            return
+        if now - self._all_dead_since < 2 * _DEAD_GRACE_S:
+            return
+        exc = WorkerLostError(
+            "all pool workers died with tasks outstanding "
+            "(respawn budget exhausted)", attempts=0)
+        with self._jobs_lock:
+            jobs = list(self._jobs.values())
+            self._jobs.clear()
+            self._stats["all_dead_failures"] += 1
+        for job in jobs:
+            job.result._fail(exc)
+            if job.imap_buf is not None:
+                job.imap_buf.fail(exc)
+        self._all_dead_since = None
 
 
 class _IMapBuffer:
@@ -469,6 +1059,7 @@ class _IMapBuffer:
         self._ordered = ordered
         self._ready: Dict[int, Tuple[str, Any]] = {}
         self._arrival: List[Tuple[int, str, Any]] = []
+        self._error: Optional[Exception] = None
         self._cond = threading.Condition()
 
     def deliver(self, idx: int, status: str, value: Any) -> None:
@@ -477,14 +1068,25 @@ class _IMapBuffer:
             self._arrival.append((idx, status, value))
             self._cond.notify_all()
 
+    def fail(self, exc: Exception) -> None:
+        """Abort the iteration: consumers raise ``exc`` instead of
+        waiting forever on items that can no longer arrive."""
+        with self._cond:
+            self._error = exc
+            self._cond.notify_all()
+
     def __iter__(self):
         from .executor import RemoteError
         if self._ordered:
             for i in range(self._n):
                 with self._cond:
                     while i not in self._ready:
+                        if self._error is not None:
+                            raise self._error
                         self._cond.wait()
                     status, value = self._ready[i]
+                if status == "exc":
+                    raise value
                 if status != "ok":
                     raise RemoteError(value[0], value[1])
                 yield value
@@ -492,8 +1094,12 @@ class _IMapBuffer:
             for i in range(self._n):
                 with self._cond:
                     while len(self._arrival) <= i:
+                        if self._error is not None:
+                            raise self._error
                         self._cond.wait()
                     _, status, value = self._arrival[i]
+                if status == "exc":
+                    raise value
                 if status != "ok":
                     raise RemoteError(value[0], value[1])
                 yield value

@@ -379,6 +379,13 @@ RAW_COMMANDS: Tuple[str, ...] = (
     # with OOB-sized or exotic args fall back to the pickle dialect,
     # exactly like any other command).
     "repl_apply",
+    # PR 8: task-plane lease protocol. blpop_lease is the fused
+    # hand-off (pop + in-flight lease record, one RTT, same shape as
+    # blpop_rpush); renew/release are the per-heartbeat/per-settle hot
+    # commands, fenced by attempt; lease_reap is the (cold) reclaim
+    # sweep. Entries whose payload reaches OOB size fall back to the
+    # pickle dialect per command, like everything else.
+    "blpop_lease", "lease_renew", "lease_release", "lease_reap",
 )
 RAW_COMMAND_IDS: Dict[str, int] = {c: i for i, c in enumerate(RAW_COMMANDS)}
 #: Dispatch id of ``execute_batch`` — its body nests whole sub-commands.

@@ -45,11 +45,19 @@ def main() -> int:
     run_s = time.perf_counter() - t0
 
     blob = serialization.dumps((task_id, status, body, {"run_s": run_s}))
-    if monitoring == "storage":
-        sess.storage.put(f"jobs/{task_id}/result", blob)
-    else:
-        client.rpush(result_list, blob)
-    client.close()
+    try:
+        if monitoring == "storage":
+            sess.storage.put(f"jobs/{task_id}/result", blob)
+        else:
+            client.rpush(result_list, blob)
+        client.close()
+    except (ConnectionError, OSError):
+        # The store is gone: there is nowhere to deliver even the error.
+        # Exit nonzero and silent — the pool supervisor's process-level
+        # death detection (missing heartbeat / settled future) is the
+        # channel that reports this failure mode, and the lease reaper
+        # re-enqueues whatever task this worker was holding.
+        return 1
     return 0
 
 

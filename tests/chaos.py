@@ -1,8 +1,8 @@
-"""Chaos-injection harness for the replicated KV serving plane (PR 7).
+"""Chaos-injection harness for the replicated KV plane and the task plane.
 
-Drives a seeded, reproducible fault schedule against a live
-``KVCluster(replicas=1, ack="quorum", watchdog=True)`` while writer
-threads hammer it, then audits the damage:
+Storage plane (PR 7): drives a seeded, reproducible fault schedule
+against a live ``KVCluster(replicas=1, ack="quorum", watchdog=True)``
+while writer threads hammer it, then audits the damage:
 
 - **SIGKILL primaries** mid-workload: the watchdog must promote the
   freshest replica and clients must resume through the promotion; the
@@ -46,7 +46,7 @@ from repro.core import transport as _transport
 from repro.core.errors import ShardUnavailableError
 from repro.core.kvcluster import KVCluster
 
-__all__ = ["ChaosInjector", "run_chaos"]
+__all__ = ["ChaosInjector", "run_chaos", "run_pool_chaos"]
 
 
 class ChaosInjector(_transport.FaultInjector):
@@ -219,12 +219,211 @@ def run_chaos(seed: int = 7, quick: bool = False) -> Dict[str, Any]:
     return result
 
 
+# ---------------------------------------------------------------------------
+# Compute-plane chaos (PR 8): SIGKILL real pool workers mid-map / mid-imap
+# ---------------------------------------------------------------------------
+
+
+def run_pool_chaos(seed: int = 7, quick: bool = False) -> Dict[str, Any]:
+    """One seeded task-plane chaos run against a fault-tolerant
+    :class:`~repro.core.pool.Pool` over the ``subprocess`` backend
+    (workers are real OS processes reached only via TCP).
+
+    Fault schedule (seeded, reproducible):
+
+    - worker 1 is scripted (``REPRO_POOL_CHAOS=die:1``) to SIGKILL
+      *itself* immediately after acquiring its first lease — before its
+      first heartbeat renewal, the nastiest window;
+    - worker 2 is scripted (``zombie:2``) to stop renewing one lease,
+      sleep past ``2 x lease_ttl_s`` (so the reaper re-enqueues the
+      task and another worker settles it), then push its now-stale
+      result — which fencing must discard;
+    - at seeded times mid-``map`` and mid-``imap_unordered`` the
+      harness SIGKILLs further live workers picked from
+      :meth:`Pool.worker_pids`, and measures detection + respawn
+      latency from the pool's fault counters.
+
+    Audit (the acceptance criterion): every task settles **exactly
+    once** — ``map`` returns the exact expected list, ``imap`` yields
+    each result exactly once, nothing is dead-lettered, and the only
+    duplicates anywhere are in the *discarded* counter. A per-execution
+    side-effect ledger (an ``rpush`` per task attempt) proves the
+    at-least-once part was actually exercised (re-executions > 0).
+    """
+    from repro.core import pool as pool_mod
+    from repro.core import session as S
+    from repro.core.kvserver import KVClient, KVServer
+    from repro.core.pool import Pool
+    from repro.core.storage import KVObjectStore
+
+    n_workers = 4
+    n_map = 48 if quick else 96
+    n_imap = 24 if quick else 48
+    task_sleep = 0.05
+    lease_ttl = 1.0
+
+    rng = random.Random(seed ^ 0xBEEF)
+    server = KVServer().start()
+    client = KVClient(server.address)
+    sess = S.Session(store=client, storage=KVObjectStore(client),
+                     kv_address=server.address)
+    sess.executor_defaults["backend"] = "subprocess"
+
+    exec_key = "{chaospool}:execs"
+
+    def task(x, _k=exec_key, _s=task_sleep):
+        import os as _os
+        import time as _t
+        from repro.core import session as _S
+        _S.get_session().store.rpush(_k, (x, _os.getpid()))
+        _t.sleep(_s)
+        return 3 * x + 1
+
+    killed_pids: List[int] = []
+    kill_lat_ms: List[Dict[str, float]] = []
+    killer_stop = threading.Event()
+
+    def _kill_one(pool) -> None:
+        """SIGKILL one live worker not yet killed; record latencies."""
+        deadline = time.monotonic() + 5.0
+        victim = None
+        while time.monotonic() < deadline and not killer_stop.is_set():
+            # wid 2 is the scripted zombie: leave it alive so its stale
+            # late settle actually happens and exercises the fencing
+            pids = {w: p for w, p in pool.worker_pids().items()
+                    if p not in killed_pids and w != 2}
+            if pids:
+                victim = rng.choice(sorted(pids.items()))
+                break
+            time.sleep(0.05)
+        if victim is None:
+            return
+        wid, pid = victim
+        base = pool.fault_stats()
+        try:
+            os.kill(pid, 9)
+        except ProcessLookupError:
+            return
+        killed_pids.append(pid)
+        t0 = time.monotonic()
+        lat = {"detect_ms": -1.0, "respawn_ms": -1.0}
+        while time.monotonic() - t0 < 15.0 and not killer_stop.is_set():
+            st = pool.fault_stats()
+            if (lat["detect_ms"] < 0
+                    and st["workers_lost"] > base["workers_lost"]):
+                lat["detect_ms"] = (time.monotonic() - t0) * 1e3
+            if st["workers_respawned"] > base["workers_respawned"]:
+                lat["respawn_ms"] = (time.monotonic() - t0) * 1e3
+                break
+            time.sleep(0.02)
+        kill_lat_ms.append({k: round(v, 1) for k, v in lat.items()})
+
+    def _killer(pool, n_kills: int, first_delay: float) -> None:
+        time.sleep(first_delay)
+        for _ in range(n_kills):
+            if killer_stop.is_set():
+                return
+            _kill_one(pool)
+            time.sleep(rng.uniform(0.1, 0.3))
+
+    # scripted chaos is read by the worker from its inherited environ,
+    # so it must be exported BEFORE the Pool spawns its workers
+    os.environ["REPRO_POOL_CHAOS"] = "die:1;zombie:2"
+    grace_prev = pool_mod._HB_SPAWN_GRACE_S
+    pool_mod._HB_SPAWN_GRACE_S = 2.0  # workers boot in <2 s here; detect fast
+    pool = None
+    try:
+        pool = Pool(processes=n_workers, session=sess,
+                    max_retries=3, lease_ttl_s=lease_ttl, heartbeat_s=0.25)
+
+        # -- phase 1: map, with 1 external SIGKILL (+ the scripted two) ----
+        killer = threading.Thread(
+            target=_killer, args=(pool, 1, rng.uniform(0.3, 0.6)),
+            name="pool-chaos-killer")
+        killer.start()
+        t_map = time.monotonic()
+        got = pool.map(task, range(n_map), chunksize=1)
+        map_s = time.monotonic() - t_map
+        killer.join(30)
+        assert got == [3 * x + 1 for x in range(n_map)], (
+            "map lost or corrupted results under worker kills")
+
+        # -- phase 2: imap_unordered, 1 more external SIGKILL mid-stream ---
+        killer2 = threading.Thread(
+            target=_killer, args=(pool, 1, rng.uniform(0.1, 0.3)),
+            name="pool-chaos-killer-2")
+        killer2.start()
+        t_imap = time.monotonic()
+        seen = sorted(pool.imap_unordered(task, range(n_imap), chunksize=1))
+        imap_s = time.monotonic() - t_imap
+        killer2.join(30)
+        assert seen == sorted(3 * x + 1 for x in range(n_imap)), (
+            "imap lost or duplicated results under worker kills")
+
+        stats = pool.fault_stats()
+        pool.close()
+        pool.join(timeout=30)
+    finally:
+        killer_stop.set()
+        pool_mod._HB_SPAWN_GRACE_S = grace_prev
+        os.environ.pop("REPRO_POOL_CHAOS", None)
+        if pool is not None:
+            try:
+                pool.terminate()
+                pool.join(timeout=10)
+            except Exception:
+                pass
+
+    n_total = n_map + n_imap
+    executions = client.llen(exec_key)
+    client.delete(exec_key)
+    client.close()
+    server.stop()
+
+    result = {
+        "seed": seed,
+        "quick": quick,
+        "plane": "pool",
+        "workers": n_workers,
+        "tasks": n_total,
+        "map_s": round(map_s, 3),
+        "imap_s": round(imap_s, 3),
+        "kills_external": len(killed_pids),
+        "kills_scripted": 2,  # die:1 (pre-first-heartbeat) + zombie:2
+        "executions": executions,
+        "re_executions": max(0, executions - n_total),
+        "workers_lost": stats["workers_lost"],
+        "workers_respawned": stats["workers_respawned"],
+        "leases_requeued": stats["leases_requeued"],
+        "duplicate_results_discarded": stats["duplicate_results_discarded"],
+        "tasks_dead_lettered": stats["tasks_dead_lettered"],
+        "all_dead_failures": stats["all_dead_failures"],
+        "lost_tasks": 0,  # both asserts above passed to get here
+        "kill_latency_ms": kill_lat_ms,
+    }
+    assert result["kills_external"] >= 1, "no external kill landed"
+    assert result["workers_lost"] >= 2, (
+        f"expected >=2 worker deaths (scripted die + external), got {result}")
+    assert result["re_executions"] >= 1, (
+        "no task was ever re-executed: the kills missed every lease window")
+    assert result["duplicate_results_discarded"] >= 1, (
+        "the zombie's stale settle was never fenced — fencing untested")
+    assert result["tasks_dead_lettered"] == 0, (
+        f"tasks exceeded max_retries under chaos: {result}")
+    assert result["all_dead_failures"] == 0, result
+    return result
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--seed", type=int, default=7)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--pool", action="store_true",
+                    help="run the task-plane (Pool worker-kill) chaos "
+                         "instead of the storage-plane chaos")
     args = ap.parse_args(argv)
-    res = run_chaos(seed=args.seed, quick=args.quick)
+    fn = run_pool_chaos if args.pool else run_chaos
+    res = fn(seed=args.seed, quick=args.quick)
     for k, v in sorted(res.items()):
         print(f"{k}: {v}")
     return 0

@@ -293,6 +293,59 @@ class TestSupervision:
         assert proc.poll() is not None  # no orphan shard processes
 
 
+class TestLeaseSweep:
+    """Cluster-side lease reaping (PR 8): even if the Pool's own process
+    dies, leases registered in ``LEASE_REGISTRY_KEY`` are swept back to
+    their job queues by the cluster supervisor."""
+
+    def test_sweep_requeues_expired_registered_leases(self):
+        from repro.core.kvstore import LEASE_REGISTRY_KEY
+        with KVCluster(shards=2, lease_sweep_s=0.2) as cl:
+            c = cl.client()
+            try:
+                # a pool-shaped layout: hash-tagged queue + in-flight hash,
+                # registered exactly the way Pool.__init__ does it
+                c.hset(LEASE_REGISTRY_KEY, "{p1}:inflight",
+                       ("{p1}:jobs", 3, "{p1}:dead"))
+                c.rpush("{p1}:jobs", (0, "j0.0", b"x"))
+                assert c.blpop_lease("{p1}:jobs", "{p1}:inflight",
+                                     "w1", 0.1, timeout=0) == (0, "j0.0", b"x")
+                # the orphaned lease expires; the sweep thread (no client
+                # involvement) must requeue it with a bumped attempt
+                deadline = time.monotonic() + 10
+                entry = None
+                while time.monotonic() < deadline:
+                    got = c.lrange("{p1}:jobs", 0, -1)
+                    if got:
+                        entry = got[0]
+                        break
+                    time.sleep(0.05)
+                assert entry == (1, "j0.0", b"x")
+                assert c.hget("{p1}:inflight", "j0.0") is None
+                # the registration survives the sweep (only the pool
+                # unregisters itself on close/join)
+                assert c.hlen(LEASE_REGISTRY_KEY) == 1
+            finally:
+                c.close()
+
+    def test_sweep_once_counts_and_dead_letters(self):
+        from repro.core.kvstore import LEASE_REGISTRY_KEY
+        with KVCluster(shards=1) as cl:  # sweep thread off: drive by hand
+            c = cl.client()
+            try:
+                c.hset(LEASE_REGISTRY_KEY, "{p}:inflight",
+                       ("{p}:jobs", 0, "{p}:dead"))  # max_attempts=0
+                c.rpush("{p}:jobs", (0, "t", b"x"))
+                c.blpop_lease("{p}:jobs", "{p}:inflight", "w", 0.05,
+                              timeout=0)
+                time.sleep(0.08)
+                assert cl.lease_sweep_once() == 1
+                assert c.lrange("{p}:dead", 0, -1) == [("t", 0, "w", b"x")]
+                assert cl.lease_sweep_once() == 0  # idempotent when clean
+            finally:
+                c.close()
+
+
 @pytest.mark.slow
 class TestSubprocessWorkerOverCluster:
     def test_worker_bootstraps_from_control_address(self, cluster):

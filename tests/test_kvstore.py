@@ -270,6 +270,128 @@ class TestBatchCommands:
             bad.get()
 
 
+class TestLeases:
+    """Lease protocol (PR 8): fused pop-and-lease, fenced renew/release,
+    expiry reaping with attempt bumps, and the dead-letter channel."""
+
+    def test_blpop_lease_moves_entry_into_hash(self, kv):
+        kv.rpush("q", (0, "t1", b"payload"))
+        got = kv.blpop_lease("q", "fl", "w1", 5.0, timeout=0)
+        assert got == (0, "t1", b"payload")
+        rec = kv.hget("fl", "t1")
+        assert rec[1] == 0 and rec[2] == "w1" and rec[3] == b"payload"
+        assert rec[0] > time.monotonic()  # deadline in the future
+        assert kv.llen("q") == 0
+
+    def test_blpop_lease_is_one_command(self, kv):
+        kv.rpush("q", (0, "t1", b"x"))
+        before = kv.metrics.total_commands()
+        kv.blpop_lease("q", "fl", "w1", 5.0, timeout=0)
+        assert kv.metrics.total_commands() - before == 1
+
+    def test_blpop_lease_passthrough_non_entry(self, kv):
+        # poison pills and legacy payloads pass through un-leased
+        kv.rpush("q", b"__poison__")
+        assert kv.blpop_lease("q", "fl", "w1", 5.0, timeout=0) == b"__poison__"
+        assert not kv.exists("fl")
+
+    def test_blpop_lease_atomic_under_concurrent_consumers(self, kv):
+        n = 200
+        for i in range(n):
+            kv.rpush("q", (0, f"t{i}", i))
+        won: list = []
+        lock = threading.Lock()
+
+        def consume(wid):
+            while True:
+                got = kv.blpop_lease("q", "fl", wid, 30.0, timeout=0)
+                if got is None:
+                    return
+                with lock:
+                    won.append(got[1])
+
+        threads = [threading.Thread(target=consume, args=(f"w{j}",))
+                   for j in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(20)
+        # every task leased exactly once: no loss, no double-acquire
+        assert sorted(won) == sorted(f"t{i}" for i in range(n))
+        assert kv.hlen("fl") == n
+
+    def test_lease_renew_and_release_are_fenced(self, kv):
+        kv.rpush("q", (3, "t1", b"x"))
+        kv.blpop_lease("q", "fl", "w1", 5.0, timeout=0)
+        assert kv.lease_renew("fl", "t1", 3, 10.0) is True
+        assert kv.lease_renew("fl", "t1", 2, 10.0) is False   # stale attempt
+        assert kv.lease_release("fl", "t1", 2) is False       # stale attempt
+        assert kv.hlen("fl") == 1                             # still held
+        assert kv.lease_release("fl", "t1", 3) is True
+        assert not kv.exists("fl")  # empty hash removed
+        assert kv.lease_release("fl", "t1", 3) is False       # idempotent
+
+    def test_lease_reap_requeues_expired_with_attempt_bump(self, kv):
+        kv.rpush("q", (0, "t1", b"x"))
+        kv.blpop_lease("q", "fl", "w1", 0.05, timeout=0)
+        time.sleep(0.08)
+        requeued, dead = kv.lease_reap("fl", "q", max_attempts=3)
+        assert requeued == [("t1", 0)] and dead == []
+        assert kv.lrange("q", 0, -1) == [(1, "t1", b"x")]
+        assert not kv.exists("fl")
+
+    def test_lease_reap_respects_live_leases(self, kv):
+        kv.rpush("q", (0, "t1", b"x"))
+        kv.blpop_lease("q", "fl", "w1", 30.0, timeout=0)
+        assert kv.lease_reap("fl", "q", max_attempts=3) == ([], [])
+        assert kv.hlen("fl") == 1
+
+    def test_lease_reap_by_worker_reclaims_live_lease(self, kv):
+        kv.rpush("q", (0, "t1", b"x"))
+        kv.rpush("q", (0, "t2", b"y"))
+        kv.blpop_lease("q", "fl", "w1", 30.0, timeout=0)
+        kv.blpop_lease("q", "fl", "w2", 30.0, timeout=0)
+        requeued, dead = kv.lease_reap("fl", "q", max_attempts=3, worker="w1")
+        assert requeued == [("t1", 0)] and dead == []
+        assert list(kv.hgetall("fl")) == ["t2"]  # w2's lease untouched
+
+    def test_lease_reap_dead_letters_with_holder(self, kv):
+        kv.rpush("q", (2, "t1", b"x"))  # attempt 2 == max_attempts: last try
+        kv.blpop_lease("q", "fl", "w9", 0.05, timeout=0)
+        time.sleep(0.08)
+        requeued, dead = kv.lease_reap("fl", "q", max_attempts=2,
+                                       dead_key="dq")
+        assert requeued == [] and dead == [("t1", 2)]
+        assert kv.llen("q") == 0
+        # the dead-letter record carries the last holder for the error
+        assert kv.lrange("dq", 0, -1) == [("t1", 2, "w9", b"x")]
+
+    def test_lease_reap_returns_entries_when_not_pushing(self, kv):
+        kv.rpush("q", (1, "t1", b"x"))
+        kv.blpop_lease("q", "fl", "w1", 0.05, timeout=0)
+        time.sleep(0.08)
+        # no src: the caller (the sharded router) routes the pushes, so
+        # the store returns full entries instead of pushing summaries
+        requeued, dead = kv.lease_reap("fl", max_attempts=3)
+        assert requeued == [(2, "t1", b"x")] and dead == []
+        assert kv.llen("q") == 0  # nothing pushed by the store itself
+
+    def test_stale_settle_after_reap_is_rejected(self, kv):
+        """The zombie scenario at the store layer: expiry, requeue, a new
+        worker settles attempt 1 — the old worker's attempt-0 release and
+        renew must both bounce off the fence."""
+        kv.rpush("q", (0, "t1", b"x"))
+        kv.blpop_lease("q", "fl", "w1", 0.05, timeout=0)
+        time.sleep(0.08)
+        kv.lease_reap("fl", "q", max_attempts=3)
+        got = kv.blpop_lease("q", "fl", "w2", 30.0, timeout=0)
+        assert got == (1, "t1", b"x")
+        assert kv.lease_renew("fl", "t1", 0, 30.0) is False   # zombie renew
+        assert kv.lease_release("fl", "t1", 0) is False       # zombie settle
+        assert kv.hget("fl", "t1")[2] == "w2"                 # w2 still holds
+        assert kv.lease_release("fl", "t1", 1) is True
+
+
 class TestSizeof:
     def test_memoryview_counts_bytes_not_elements(self):
         kv = KVStore()
@@ -433,6 +555,41 @@ class TestSharded:
             deleted = p.delete(*[f"d-{i}" for i in range(8)])
         assert deleted.get() == 8
         assert sh.mget([f"d-{i}" for i in range(8)]) == [None] * 8
+
+    def test_sharded_blpop_lease_same_shard_fast_path(self):
+        sh = ShardedKVStore([KVStore(name=f"s{i}") for i in range(4)])
+        # hash tags co-locate the pool's queue and in-flight hash, the
+        # layout Pool uses: one fused command on one shard
+        sh.rpush("{u}:jobs", (0, "t1", b"x"))
+        got = sh.blpop_lease("{u}:jobs", "{u}:inflight", "w1", 5.0, timeout=0)
+        assert got == (0, "t1", b"x")
+        shard = sh.shard_for("{u}:jobs")
+        assert shard.metrics.commands.get("BLPOPLEASE") == 1
+        assert sh.hget("{u}:inflight", "t1")[2] == "w1"
+
+    def test_sharded_blpop_lease_cross_shard(self):
+        sh = ShardedKVStore([KVStore(name=f"s{i}") for i in range(4)])
+        src, dst = "{x}:jobs", "{y}:inflight"
+        assert sh.shard_for(src) is not sh.shard_for(dst)
+        sh.rpush(src, (0, "t1", b"x"))
+        assert sh.blpop_lease(src, dst, "w1", 5.0, timeout=0) == (0, "t1", b"x")
+        # the lease is visible where direct reads route to
+        assert sh.hget(dst, "t1")[2] == "w1"
+        assert sh.lease_release(dst, "t1", 0) is True
+
+    def test_sharded_lease_reap_fallback_routes_pushes(self):
+        sh = ShardedKVStore([KVStore(name=f"s{i}") for i in range(4)])
+        src, dst, dead = "{x}:jobs", "{y}:inflight", "{z}:dead"
+        sh.rpush(src, (0, "t1", b"x"))
+        sh.rpush(src, (2, "t2", b"y"))
+        for w in ("w1", "w2"):
+            sh.blpop_lease(src, dst, w, 0.05, timeout=0)
+        time.sleep(0.08)
+        requeued, deadl = sh.lease_reap(dst, src, max_attempts=2,
+                                        dead_key=dead)
+        assert requeued == [("t1", 0)] and deadl == [("t2", 2)]
+        assert sh.lrange(src, 0, -1) == [(1, "t1", b"x")]
+        assert sh.lrange(dead, 0, -1) == [("t2", 2, "w2", b"y")]
 
 
 class TestByteRange:

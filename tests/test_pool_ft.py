@@ -1,0 +1,170 @@
+"""Fault-tolerant task plane (PR 8): worker supervision, lease-based
+retries, typed worker-loss failures, straggler speculation, and the
+zero-cost-when-off contract — all over the fast in-process threads
+backend (the full OS-process kill matrix lives in ``tests/chaos.py``)."""
+
+import pickle
+import time
+
+import pytest
+
+from repro.core import get_session, mp
+from repro.core.errors import ProcessError, WorkerLostError
+from repro.core.executor import FunctionExecutor
+from repro.core.kvstore import LEASE_REGISTRY_KEY
+from repro.core.pool import Pool, _kill_flag_matches
+
+
+def _die(x):
+    # SystemExit escapes the per-item error wrapper and kills the worker
+    # (the threads-backend analogue of a SIGKILLed container)
+    raise SystemExit(f"worker killed by task {x}")
+
+
+class TestWorkerLoss:
+    def test_retry_recovers_from_one_worker_death(self):
+        """A task that kills its first worker succeeds on a respawned one
+        if its second attempt behaves."""
+        with mp.Pool(2, max_retries=2, lease_ttl_s=0.4) as p:
+
+            def flaky(x):
+                if x == 3 and get_session().store.incr("ft:runs") == 1:
+                    raise SystemExit("first attempt dies")
+                return x * 2
+
+            assert p.map(flaky, range(8), chunksize=1) == \
+                [x * 2 for x in range(8)]
+            # death detection is asynchronous (a grace period filters
+            # shutdown races), so poll the counters briefly
+            deadline = time.monotonic() + 10
+            while time.monotonic() < deadline:
+                stats = p.fault_stats()
+                if stats["workers_lost"] and stats["workers_respawned"]:
+                    break
+                time.sleep(0.05)
+            assert stats["workers_lost"] >= 1
+            assert stats["workers_respawned"] >= 1
+            assert stats["leases_requeued"] >= 1
+            assert stats["tasks_dead_lettered"] == 0
+
+    def test_max_retries_exceeded_raises_typed_error(self):
+        """A task that kills EVERY worker it lands on settles as a typed
+        WorkerLostError carrying task id, attempt count, and last worker
+        — within bounded time, never a hang."""
+        with mp.Pool(2, max_retries=1, lease_ttl_s=0.4) as p:
+            res = p.map_async(_die, [1])
+            t0 = time.monotonic()
+            with pytest.raises(WorkerLostError) as ei:
+                res.get(timeout=30)
+            assert time.monotonic() - t0 < 20
+            err = ei.value
+            assert err.task_id == "j0.0"
+            assert err.attempts == 2  # initial + 1 retry
+            assert err.last_worker is not None
+            assert isinstance(err, ProcessError)
+            assert p.fault_stats()["tasks_dead_lettered"] == 1
+
+    def test_all_workers_dead_fails_fast_without_ft(self):
+        """Satellite S1: with fault tolerance OFF (default), a map whose
+        workers all died must fail typed, not hang forever."""
+        with mp.Pool(2) as p:
+            res = p.map_async(_die, range(4), chunksize=1)
+            with pytest.raises(WorkerLostError, match="all pool workers"):
+                res.get(timeout=30)
+            assert p.fault_stats()["all_dead_failures"] == 1
+
+    def test_all_workers_dead_unblocks_imap(self):
+        with mp.Pool(2) as p:
+            with pytest.raises(WorkerLostError):
+                list(p.imap(_die, range(4), chunksize=1))
+
+    def test_worker_lost_error_pickles(self):
+        err = WorkerLostError("gone", task_id="j1.2", attempts=3,
+                              last_worker=7)
+        err2 = pickle.loads(pickle.dumps(err))
+        assert isinstance(err2, WorkerLostError)
+        assert (err2.task_id, err2.attempts, err2.last_worker) == \
+            ("j1.2", 3, 7)
+
+
+class TestSpeculation:
+    def test_straggler_is_speculated_and_first_settle_wins(self):
+        """A one-off straggler (slow first attempt, fast duplicate) must
+        not gate the map on its full sleep; the duplicate's settle wins
+        and the late original is discarded by fencing."""
+        with mp.Pool(3, speculation_factor=3.0, lease_ttl_s=10.0) as p:
+
+            def straggle(x):
+                if x == 5 and get_session().store.incr("spec:runs") == 1:
+                    time.sleep(4.0)  # only the FIRST attempt straggles
+                else:
+                    time.sleep(0.05)
+                return x + 100
+
+            t0 = time.monotonic()
+            got = p.map(straggle, range(12), chunksize=1)
+            elapsed = time.monotonic() - t0
+            assert got == [x + 100 for x in range(12)]
+            assert elapsed < 3.5  # did not wait out the 4 s straggler
+            assert p.fault_stats()["speculative_tasks"] >= 1
+
+
+class TestZeroCostWhenOff:
+    def test_default_pool_issues_no_lease_commands(self):
+        """With FT off (the default) the hot path is wire-identical to
+        PR 1-6: no lease commands, no registry writes, no heartbeats."""
+        with mp.Pool(2) as p:
+            p.map(lambda x: x, range(8), chunksize=2)
+            cmds = get_session().store.metrics.commands
+            assert "BLPOPLEASE" not in cmds
+            assert "LEASERENEW" not in cmds and "LEASERELEASE" not in cmds
+            assert "LEASEREAP" not in cmds
+            assert not get_session().store.exists(LEASE_REGISTRY_KEY)
+
+    def test_ft_pool_registers_and_unregisters_reaper_entry(self):
+        st = get_session().store
+        p = mp.Pool(2, max_retries=1)
+        try:
+            assert st.hlen(LEASE_REGISTRY_KEY) == 1
+            (spec,) = st.hgetall(LEASE_REGISTRY_KEY).values()
+            assert spec[1] == 1  # max_retries rides the registration
+        finally:
+            p.close()
+            p.join()
+        assert not st.exists(LEASE_REGISTRY_KEY)
+
+
+class TestTerminateGeneration:
+    def test_kill_flag_matching(self):
+        assert _kill_flag_matches(None, "u1") is False
+        assert _kill_flag_matches("u1", "u1") is True
+        assert _kill_flag_matches(b"u1", "u1") is True
+        assert _kill_flag_matches("u2", "u1") is False
+        assert _kill_flag_matches(1, "u1") is True  # legacy kill-all flag
+
+    def test_terminate_then_new_pool_works(self):
+        """Satellite S6: a terminated pool's kill flag is fenced by pool
+        generation — a fresh pool created right after (even one reading a
+        stale flag) keeps its workers and serves maps."""
+        p1 = mp.Pool(2)
+        p1.terminate()
+        p1.join(timeout=10)
+        with mp.Pool(2) as p2:
+            # simulate the stale-flag hazard explicitly: p1's uid under
+            # p2's kill key must NOT kill p2's generation of workers
+            get_session().store.set(p2._kill_key, p1.uid, ex=60)
+            assert p2.map(lambda x: x + 1, range(6)) == list(range(1, 7))
+            assert p2.n_workers == 2
+
+
+class TestExecutorDeadline:
+    def test_get_result_timeout_is_shared_not_per_future(self):
+        """Satellite S2: the gather deadline bounds TOTAL wall-clock; N
+        unfinished futures must not cost up to N x timeout."""
+        ex = FunctionExecutor()
+        futs = [ex.call_async(time.sleep, (5,)) for _ in range(4)]
+        t0 = time.monotonic()
+        with pytest.raises(TimeoutError):
+            ex.get_result(futs, timeout=0.5)
+        assert time.monotonic() - t0 < 2.0  # not 4 x 0.5 + slop per future
+        ex.shutdown(wait=False)

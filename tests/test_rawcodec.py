@@ -290,6 +290,63 @@ class TestInterop:
         c.close()
 
 
+class TestLeaseInterop:
+    """The PR 8 lease commands across every wire dialect: they ride the
+    raw v4 fast path when codable and must interop with v1-v3 pickle
+    clients observing the same lease state."""
+
+    def test_lease_cycle_per_dialect(self, server):
+        clients = _dialect_clients(server.address)
+        try:
+            for name, c in clients.items():
+                q, fl = f"lq:{name}", f"lfl:{name}"
+                c.rpush(q, (0, "t1", b"x"))
+                assert c.blpop_lease(q, fl, f"w-{name}", 5.0, timeout=0) \
+                    == (0, "t1", b"x")
+                assert c.lease_renew(fl, "t1", 0, 5.0) is True
+                assert c.lease_renew(fl, "t1", 9, 5.0) is False
+                assert c.lease_release(fl, "t1", 0) is True
+                assert c.blpop_lease(q, fl, "w", 5.0, timeout=0.01) is None
+        finally:
+            for c in clients.values():
+                c.close()
+
+    def test_lease_state_visible_across_dialects(self, server):
+        """A v4 writer's lease is observed (and reaped) by a v1 reader:
+        lease records and queue entries survive dialect boundaries."""
+        clients = _dialect_clients(server.address)
+        try:
+            w, r = clients["v4"], clients["v1"]
+            w.rpush("xq", (1, "tX", b"payload"))
+            assert w.blpop_lease("xq", "xfl", "w4", 0.05, timeout=0) \
+                == (1, "tX", b"payload")
+            rec = r.hget("xfl", "tX")
+            assert rec[1] == 1 and rec[2] == "w4" and rec[3] == b"payload"
+            time.sleep(0.08)
+            requeued, dead = r.lease_reap("xfl", "xq", 3)
+            assert requeued == [("tX", 1)] and dead == []
+            assert clients["v3"].lrange("xq", 0, -1) == [(2, "tX", b"payload")]
+        finally:
+            for c in clients.values():
+                c.close()
+
+    def test_blpop_lease_blocking_lane(self, server):
+        """blpop_lease with a timeout parks on the server's blocking lane
+        (not the fast dispatch table) and wakes on a push."""
+        c1, c2 = KVClient(server.address), KVClient(server.address)
+        out = []
+        t = threading.Thread(target=lambda: out.append(
+            c2.blpop_lease("bq", "bfl", "w1", 5.0, timeout=5)))
+        t.start()
+        time.sleep(0.05)
+        c1.rpush("bq", (0, "tB", b"v"))
+        t.join(3)
+        assert out == [(0, "tB", b"v")]
+        assert c1.hget("bfl", "tB")[2] == "w1"
+        c1.close()
+        c2.close()
+
+
 class TestRawPipelines:
     def test_transactional_pipeline_is_one_eval(self, server):
         c = KVClient(server.address)
