@@ -1,0 +1,217 @@
+"""Elastic autoscaling benchmark (PR 9): open-loop Poisson arrivals with
+heavy-tailed task times against (a) the ElasticController-driven pool
+and (b) fixed fleets sized small / right / large.
+
+The paper's core value proposition (§5.3/§6.4) is that serverless
+workers attach instantly, so provisioning can follow load instead of
+peak. This benchmark quantifies that: a bursty arrival process is
+replayed against each configuration and we report
+
+  * P99 task completion time (arrival -> result delivered, queue wait
+    included — the number a fixed-small fleet loses on), and
+  * worker-seconds (∫ n_workers dt — the provisioning cost a
+    fixed-large fleet loses on).
+
+The elastic pool must land in the win-win quadrant: P99 below the small
+fixed fleet, worker-seconds below the large fixed fleet. Every run also
+audits exact results: each task's value is checked and each callback
+must fire exactly once — zero lost, zero duplicate-visible tasks across
+the scale-up/drain cycles the bursts force.
+
+CLI (the CI smoke gate):
+
+    PYTHONPATH=src python benchmarks/bench_elastic.py --quick \
+        --assert-elastic-beats-fixed-small [--json OUT.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import sys
+import threading
+import time
+from typing import Dict, List, Tuple
+
+sys.path.insert(0, "src") if "src" not in sys.path else None
+
+from repro.core import Session, set_session  # noqa: E402
+from repro.core.pool import Pool  # noqa: E402
+from repro.runtime.elastic import ElasticPolicy  # noqa: E402
+
+Row = Tuple[str, float, str]
+
+DEFAULT_SEEDS = (7, 11, 13)
+
+#: fleet sizes under comparison (workers)
+SMALL, RIGHT, LARGE = 1, 4, 12
+
+
+def _work(i: int, dur: float) -> int:
+    time.sleep(dur)
+    return i * 31 + 7
+
+
+def make_schedule(seed: int, quick: bool) -> List[Tuple[float, float]]:
+    """(arrival_offset_s, duration_s) per task: two Poisson bursts with
+    a lull between them (forcing one full scale-up -> drain -> scale-up
+    cycle), durations Pareto-tailed (alpha=1.8, capped) so stragglers
+    exist without unbounded runs."""
+    rng = random.Random(seed)
+    n = 90 if quick else 240
+    mean_dur = 0.025 if quick else 0.04
+    phases = [  # (fraction_of_tasks, arrival_rate per s)
+        (0.45, 70.0), (0.10, 4.0), (0.45, 70.0),
+    ]
+    sched: List[Tuple[float, float]] = []
+    t = 0.0
+    for frac, rate in phases:
+        for _ in range(int(n * frac)):
+            t += rng.expovariate(rate)
+            u = max(rng.random(), 1e-9)
+            dur = min(mean_dur * 0.45 * u ** (-1 / 1.8), 12 * mean_dur)
+            sched.append((t, dur))
+    return sched
+
+
+def run_config(name: str, seed: int, quick: bool,
+               n_workers: int, elastic: bool) -> Dict[str, object]:
+    set_session(Session())
+    sched = make_schedule(seed, quick)
+    policy = ElasticPolicy(min_workers=1, max_workers=LARGE,
+                           backlog_per_worker=1.0,
+                           idle_cycles_before_shrink=3, step=4)
+    pool = Pool(n_workers, max_retries=1,
+                elastic=policy if elastic else None)
+    if elastic:
+        # tighten the control cadence for a seconds-scale benchmark
+        ctl = pool._elastic_controller
+        ctl.interval = 0.05
+    done_lock = threading.Lock()
+    done_t: Dict[int, float] = {}
+    callback_counts: Dict[int, int] = {}
+
+    def make_cb(i: int):
+        def cb(_value):
+            with done_lock:
+                done_t[i] = time.monotonic()
+                callback_counts[i] = callback_counts.get(i, 0) + 1
+        return cb
+
+    results = []
+    t0 = time.monotonic()
+    arrivals: List[float] = []
+    try:
+        for i, (offset, dur) in enumerate(sched):
+            now = time.monotonic()
+            target = t0 + offset
+            if target > now:
+                time.sleep(target - now)
+            arrivals.append(time.monotonic())
+            results.append(pool.apply_async(_work, (i, dur),
+                                            callback=make_cb(i)))
+        # -- audit: exact results, exactly once ---------------------------
+        values = [r.get(timeout=120) for r in results]
+        t_end = time.monotonic()
+        ws = (pool._elastic_controller.worker_seconds() if elastic
+              else n_workers * (t_end - t0))
+        assert values == [i * 31 + 7 for i in range(len(sched))], \
+            f"{name} seed={seed}: wrong/lost results"
+        with done_lock:
+            dups = {i: c for i, c in callback_counts.items() if c != 1}
+            missing = [i for i in range(len(sched)) if i not in done_t]
+        assert not dups, f"{name} seed={seed}: duplicate deliveries {dups}"
+        assert not missing, f"{name} seed={seed}: missing deliveries {missing}"
+        fs = pool.fault_stats()
+        assert fs["tasks_dead_lettered"] == 0, fs
+        with done_lock:
+            completion = sorted(done_t[i] - arrivals[i]
+                                for i in range(len(sched)))
+    finally:
+        pool.close()
+        pool.join(timeout=30)
+    n = len(completion)
+    p50 = completion[n // 2]
+    p99 = completion[min(n - 1, int(0.99 * (n - 1)))]
+    return {
+        "config": name, "seed": seed, "tasks": n,
+        "p50_s": round(p50, 4), "p99_s": round(p99, 4),
+        "worker_seconds": round(float(ws), 2),
+        "wall_s": round(t_end - t0, 3),
+        "drained": fs["workers_drained"], "lost": 0, "dup": 0,
+    }
+
+
+def run_seed(seed: int, quick: bool) -> List[Dict[str, object]]:
+    out = [run_config("elastic", seed, quick, 1, elastic=True)]
+    for name, n in (("fixed_small", SMALL), ("fixed_right", RIGHT),
+                    ("fixed_large", LARGE)):
+        out.append(run_config(name, seed, quick, n, elastic=False))
+    return out
+
+
+def _rows(recs: List[Dict[str, object]]) -> List[Row]:
+    rows: List[Row] = []
+    for r in recs:
+        rows.append((f"elastic/{r['config']}_seed{r['seed']}",
+                     float(r["p99_s"]) * 1e6,
+                     f"p99={r['p99_s']}s p50={r['p50_s']}s "
+                     f"ws={r['worker_seconds']} drained={r['drained']} "
+                     f"lost={r['lost']} dup={r['dup']}"))
+    return rows
+
+
+def run(quick: bool = False, seeds=None) -> List[Row]:
+    """Benchmark-harness entry point (``benchmarks.run`` MODULES API)."""
+    seeds = list(seeds) if seeds else ([7] if quick else list(DEFAULT_SEEDS))
+    rows: List[Row] = []
+    for s in seeds:
+        rows.extend(_rows(run_seed(s, quick)))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--seed", default="7,11,13",
+                    help="comma-separated seeds (one replay per seed)")
+    ap.add_argument("--assert-elastic-beats-fixed-small", action="store_true",
+                    help="exit 1 unless, for EVERY seed, elastic P99 < "
+                         "fixed-small P99 AND elastic worker-seconds < "
+                         "fixed-large worker-seconds")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write per-config records to PATH")
+    args = ap.parse_args(argv)
+    seeds = [int(s) for s in args.seed.split(",")]
+    all_recs: List[Dict[str, object]] = []
+    failed = False
+    for s in seeds:
+        try:
+            recs = run_seed(s, args.quick)
+        except AssertionError as exc:
+            print(f"seed {s}: INVARIANT VIOLATED: {exc}", file=sys.stderr)
+            failed = True
+            continue
+        all_recs.extend(recs)
+        for name, us, derived in _rows(recs):
+            print(f"{name},{us:.1f},\"{derived}\"")
+        by = {r["config"]: r for r in recs}
+        if args.assert_elastic_beats_fixed_small:
+            e, small, large = by["elastic"], by["fixed_small"], by["fixed_large"]
+            if not (e["p99_s"] < small["p99_s"]
+                    and e["worker_seconds"] < large["worker_seconds"]):
+                print(f"seed {s}: elastic NOT in the win-win quadrant: "
+                      f"elastic p99={e['p99_s']} vs small {small['p99_s']}; "
+                      f"elastic ws={e['worker_seconds']} vs large "
+                      f"{large['worker_seconds']}", file=sys.stderr)
+                failed = True
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema": 1, "results": all_recs}, f, indent=2,
+                      sort_keys=True)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -30,6 +30,7 @@ MODULES = [
     ("apps", "benchmarks.bench_apps"),              # Figs 9-12 + Table 5
     ("compression", "benchmarks.bench_compression"),  # beyond-paper
     ("chaos", "benchmarks.bench_chaos"),            # PR 7 robustness gate
+    ("elastic", "benchmarks.bench_elastic"),        # PR 9 autoscaling gate
     ("roofline", "benchmarks.roofline"),            # dry-run report
 ]
 

@@ -11,6 +11,7 @@ from .kvstore import (KVStore, ShardedKVStore, LatencyModel,  # noqa: F401
                       PAPER_REMOTE_LATENCY, Pipeline, PipelineError)
 from .errors import (ShardUnavailableError, ShardRedirectError,  # noqa: F401
                      EndpointConnectError)
+from .clientopts import ClientOptions  # noqa: F401
 from .kvserver import KVServer, KVClient  # noqa: F401
 from .kvcluster import KVCluster, ClusterClient  # noqa: F401
 from .session import Session, get_session, set_session, reset_session, configure  # noqa: F401

@@ -1,0 +1,132 @@
+"""Unified client construction surface (PR 9 api_redesign satellite).
+
+Every client entry point — :class:`~repro.core.kvserver.KVClient`,
+:class:`~repro.core.kvcluster.ClusterClient`, and
+:func:`~repro.core.kvcluster.connect` — historically grew its own
+keyword spellings for the same five knobs (transport preference, raw
+dialect, mux engine, legacy wire protocol, failover budget). They now
+all consume ONE :class:`ClientOptions` value:
+
+    opts = ClientOptions(transport="uds", raw=False)
+    KVClient(addr, options=opts)
+    ClusterClient(address=ctrl, options=opts)
+    connect(addr, options=opts)
+
+**Back-compat contract (deprecation policy).** The historical kwargs
+(``legacy_protocol=``, ``mux=``, ``raw=``, ``transport=``,
+``failover_timeout_s=``) remain supported indefinitely as *aliases*
+that map onto the same resolved ``ClientOptions``: old spellings are
+not deprecated-and-removed, they are redefined as sugar. Passing an
+alias together with ``options`` is allowed when they agree (the alias
+restates the option) and raises a clear ``ValueError`` when they
+conflict — silent precedence between two explicit spellings is how
+configuration bugs hide.
+
+Resolution order for each knob:
+
+1. an explicitly passed legacy kwarg (must agree with ``options`` if
+   both are given);
+2. the ``options`` value;
+3. the ``ClientOptions`` field default.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, fields
+from typing import Any, Dict, Optional
+
+__all__ = ["ClientOptions", "UNSET", "resolve_client_options"]
+
+
+class _Unset:
+    """Sentinel distinguishing 'kwarg not passed' from any real value
+    (``transport=None`` means auto-selection and must stay expressible)."""
+
+    _instance: Optional["_Unset"] = None
+
+    def __new__(cls) -> "_Unset":
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return "<UNSET>"
+
+    def __bool__(self) -> bool:
+        return False
+
+
+UNSET = _Unset()
+
+
+@dataclass(frozen=True)
+class ClientOptions:
+    """One value object naming every client construction knob.
+
+    ``transport``
+        ``None`` auto-selects the cheapest advertised carrier per
+        connection (shm > uds > tcp); ``"tcp"``/``"uds"``/``"shm"``
+        pins one for A/B runs (raises if the server does not advertise
+        it).
+    ``raw``
+        Speak the v4 struct-packed binary dialect for the hot command
+        vocabulary (default). ``False`` keeps pickle v3 for A/B.
+    ``mux``
+        Use the per-process multiplexed I/O engine (default). ``False``
+        keeps the one-socket-per-thread PR 3 transport.
+    ``legacy_protocol``
+        Speak the seed's v1 wire dialect; implies ``mux=False`` and
+        ``raw=False`` (the resolved options keep the user's values, the
+        clients apply the implication exactly as they always did).
+    ``failover_timeout_s``
+        Retry budget for idempotent commands across a shard failover
+        (``ClusterClient`` only; carried but unused by plain
+        ``KVClient``).
+    """
+
+    transport: Optional[str] = None
+    raw: bool = True
+    mux: bool = True
+    legacy_protocol: bool = False
+    failover_timeout_s: float = 10.0
+
+    def replace(self, **changes: Any) -> "ClientOptions":
+        import dataclasses
+        return dataclasses.replace(self, **changes)
+
+
+#: Field names resolvable from legacy kwarg aliases.
+_ALIAS_FIELDS = tuple(f.name for f in fields(ClientOptions))
+
+
+def resolve_client_options(options: Optional[ClientOptions] = None,
+                           **aliases: Any) -> ClientOptions:
+    """Merge legacy kwarg ``aliases`` (value or :data:`UNSET`) with an
+    explicit ``options`` object into one resolved :class:`ClientOptions`.
+
+    A kwarg that was actually passed must agree with ``options`` when
+    both are given — two explicit, conflicting spellings raise
+    ``ValueError`` naming the knob and both values instead of silently
+    picking one.
+    """
+    if options is not None and not isinstance(options, ClientOptions):
+        raise TypeError(
+            f"options must be a ClientOptions, got {type(options).__name__}")
+    base = options if options is not None else ClientOptions()
+    resolved: Dict[str, Any] = {}
+    for name in _ALIAS_FIELDS:
+        alias_val = aliases.pop(name, UNSET)
+        if alias_val is UNSET:
+            resolved[name] = getattr(base, name)
+        elif options is not None and alias_val != getattr(options, name):
+            raise ValueError(
+                f"conflicting client options: {name}={alias_val!r} was "
+                f"passed as a keyword but options.{name}="
+                f"{getattr(options, name)!r}; pass one spelling (or make "
+                f"them agree)")
+        else:
+            resolved[name] = alias_val
+    if aliases:
+        raise TypeError(
+            f"unknown client option(s): {', '.join(sorted(aliases))}")
+    return ClientOptions(**resolved)

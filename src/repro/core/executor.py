@@ -17,6 +17,14 @@ is allocated at ``cold_invoke_s``. Containers return to the warm pool on
 completion. A function exceeding ``time_limit_s`` fails with
 ``FunctionTimeoutError`` (the Lambda 15-minute ceiling, §3.1.2).
 
+With ``backend="subprocess"`` the dynamics are real, not simulated
+(PR 9): the executor is a lithops-style *invoker* that dispatches task
+ids onto per-handler KV invoke lists, and each *handler*
+(``worker_main --handler``) is a long-lived OS process that parks
+between tasks. A dispatch that finds a parked handler re-attaches it
+(``warm_attaches``); only when none is free does the invoker fork a new
+process (``cold_starts``). See ``stats_summary()``.
+
 All latency constants live in :class:`repro.core.session.InvocationModel`;
 they default to ~0 so tests run at native speed, and benchmarks install
 the paper's Table 1 values. Every future carries a per-phase timing
@@ -107,6 +115,22 @@ class _Container:
         self.invocations = 0
 
 
+_HANDLER_EXIT_PILL = b"__exit__"
+
+
+class _Handler:
+    """A long-lived subprocess worker (PR 9 invoker/handler split): a
+    real OS process parked on its own KV invoke list between tasks —
+    the warm container the invoker re-attaches instead of cold-spawning."""
+
+    __slots__ = ("hid", "proc", "tasks_run")
+
+    def __init__(self, hid: str, proc: Any):
+        self.hid = hid
+        self.proc = proc
+        self.tasks_run = 0
+
+
 class FunctionExecutor:
     """Invoke Python callables as (simulated) serverless functions."""
 
@@ -133,10 +157,15 @@ class FunctionExecutor:
         self._containers_created = len(self._warm)
         self._invoker_lock = threading.Lock()  # sequential async invocation
         self._pending: Dict[str, TaskFuture] = {}
-        #: live subprocess workers by task id (``backend="subprocess"``
-        #: only) — the chaos harness SIGKILLs these to model a serverless
-        #: runtime reclaiming a function mid-execution
-        self._procs: Dict[str, Any] = {}
+        # -- invoker/handler state (``backend="subprocess"`` only, PR 9) --
+        self._handlers: Dict[str, _Handler] = {}   # hid -> every live handler
+        self._parked: List[_Handler] = []          # warm, idle (LIFO: MRU first)
+        #: busy handlers by task id — the chaos harness SIGKILLs these to
+        #: model a serverless runtime reclaiming a function mid-execution
+        self._assignments: Dict[str, _Handler] = {}
+        self._hseq = itertools.count()
+        self._cold_starts = 0
+        self._warm_attaches = 0
         self._result_list = f"{{{self.name}}}:results"
         self._collector: Optional[threading.Thread] = None
         self._shutdown = False
@@ -191,14 +220,36 @@ class FunctionExecutor:
         if wait:
             for t in list(self._threads):
                 t.join(timeout=10)
+        with self._lock:
+            handlers = list(self._handlers.values())
+            self._parked.clear()
+        if handlers:
+            # retire the warm fleet: generation-fenced kill flag (parked
+            # handlers poll it between BLPOPs) + an exit pill per invoke
+            # list so a parked handler leaves on its very next pop
+            try:
+                self._store.set(self._exec_kill_key, self.name, ex=3600)
+                for h in handlers:
+                    self._store.rpush(self._invoke_key(h.hid),
+                                      _HANDLER_EXIT_PILL)
+            except Exception:
+                pass  # store already gone: handlers exit via conn error
         # Unblock the collector.
         self._store.rpush(self._result_list, serialization.dumps(("__stop__", None, None, {})))
 
     def stats_summary(self) -> Dict[str, Any]:
+        """Container economics: simulated warm pool (threads/inline
+        backends) plus the real invoker/handler counts (subprocess
+        backend) — ``cold_starts`` processes forked vs ``warm_attaches``
+        dispatches served by re-attaching a parked warm handler."""
         with self._lock:
             return {
                 "containers_created": self._containers_created,
                 "warm_pool": len(self._warm),
+                "cold_starts": self._cold_starts,
+                "warm_attaches": self._warm_attaches,
+                "parked_handlers": len(self._parked),
+                "live_handlers": len(self._handlers),
             }
 
     # ----------------------------------------------------------- internals
@@ -314,47 +365,112 @@ class FunctionExecutor:
             # Redis mode: push to the executor's result list (queue-notify).
             self._store.rpush(self._result_list, result_blob)
 
-    def _run_subprocess(self, task_id: str) -> None:
-        """Full-fidelity mode: a real OS process reaching state over TCP."""
+    def _invoke_key(self, hid: str) -> str:
+        return f"{{{self.name}}}:invoke:{hid}"
+
+    @property
+    def _exec_kill_key(self) -> str:
+        return f"{{{self.name}}}:kill"
+
+    def _spawn_handler(self) -> _Handler:
+        """Cold start: fork a real OS process that parks on its own
+        invoke list (see ``worker_main.handler_main``)."""
         import subprocess
         import sys
-        addr = getattr(self.session, "kv_address", None)
-        if addr is None:
-            raise RuntimeError(
-                "subprocess backend needs session.kv_address -> a running "
-                "KVServer (see tests/test_subprocess_backend.py)")
+        addr = self.session.kv_address
         env = dict(os.environ)
         env["REPRO_KV_ADDR"] = f"{addr[0]}:{addr[1]}"
         src_root = os.path.dirname(os.path.dirname(os.path.dirname(
             os.path.abspath(__file__))))
         env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+        hid = f"h{next(self._hseq)}"
         proc = subprocess.Popen(
-            [sys.executable, "-m", "repro.core.worker_main", task_id,
-             self.monitoring, self._result_list],
+            [sys.executable, "-m", "repro.core.worker_main", "--handler",
+             self.name, hid, self.monitoring, self._result_list],
             env=env)
+        return _Handler(hid, proc)
+
+    def _run_subprocess(self, task_id: str) -> None:
+        """Full-fidelity mode: dispatch to a warm parked handler when one
+        exists, else cold-spawn one (PR 9 invoker/handler split — the
+        paper's warm-container reuse made literal: a pool scale-up after
+        a drain re-attaches the drained worker's parked process instead
+        of paying a cold start)."""
+        addr = getattr(self.session, "kv_address", None)
+        if addr is None:
+            raise RuntimeError(
+                "subprocess backend needs session.kv_address -> a running "
+                "KVServer (see tests/test_kvserver.py)")
+        handler: Optional[_Handler] = None
         with self._lock:
-            self._procs[task_id] = proc
-        try:
-            proc.wait(timeout=self.time_limit_s or 600)
-        except subprocess.TimeoutExpired:
-            proc.kill()
-            proc.wait()
-            self._settle(task_id, "timeout", (
-                f"subprocess worker exceeded time limit of "
-                f"{self.time_limit_s or 600}s and was killed", ""), {})
-        finally:
+            while self._parked:
+                cand = self._parked.pop()
+                if cand.proc.poll() is None:
+                    handler = cand
+                    self._warm_attaches += 1
+                    break
+                self._handlers.pop(cand.hid, None)  # died while parked
+        if handler is None:
+            handler = self._spawn_handler()
             with self._lock:
-                self._procs.pop(task_id, None)
+                self._handlers[handler.hid] = handler
+                self._cold_starts += 1
+        fut = self._pending.get(task_id)
+        with self._lock:
+            self._assignments[task_id] = handler
+        try:
+            self._store.rpush(self._invoke_key(handler.hid), task_id)
+        except Exception:
+            with self._lock:
+                self._assignments.pop(task_id, None)
+            raise
+        handler.tasks_run += 1
+        limit = self.time_limit_s or 600
+        deadline = time.monotonic() + limit
+        try:
+            while True:
+                if fut is None or fut.wait(0.25):
+                    break
+                if handler.proc.poll() is not None:
+                    # handler died mid-task: give the collector a beat to
+                    # drain a last-gasp result, then settle as an error so
+                    # the caller (and a pool's future-death detector) is
+                    # never stranded waiting on a corpse
+                    if not fut.wait(1.0):
+                        self._settle(task_id, "error", (
+                            f"subprocess handler {handler.hid} died while "
+                            f"running task {task_id} "
+                            f"(exit code {handler.proc.returncode})", ""), {})
+                    break
+                if time.monotonic() >= deadline:
+                    handler.proc.kill()
+                    handler.proc.wait()
+                    self._settle(task_id, "timeout", (
+                        f"subprocess worker exceeded time limit of "
+                        f"{limit}s and was killed", ""), {})
+                    break
+        finally:
+            # parking happened in _settle (success) — here only clean up
+            # a handler that died or was killed for exceeding the limit
+            with self._lock:
+                self._assignments.pop(task_id, None)
+                if handler.proc.poll() is not None:
+                    self._handlers.pop(handler.hid, None)
+                    try:
+                        self._parked.remove(handler)
+                    except ValueError:
+                        pass
 
     def worker_pids(self) -> Dict[str, int]:
-        """PIDs of live subprocess workers, keyed by task id.
+        """PIDs of live subprocess handlers currently running a task,
+        keyed by task id.
 
         ``backend="subprocess"`` only (empty otherwise). The chaos
         harness uses this to SIGKILL real worker processes mid-task;
         supervisors can use it for waitpid-style liveness checks."""
         with self._lock:
-            return {tid: p.pid for tid, p in self._procs.items()
-                    if p.poll() is None}
+            return {tid: h.proc.pid for tid, h in self._assignments.items()
+                    if h.proc.poll() is None}
 
     # (5) join
     def _ensure_collector(self) -> None:
@@ -371,6 +487,13 @@ class FunctionExecutor:
                 meta: Dict[str, float]) -> None:
         with self._lock:
             fut = self._pending.pop(task_id, None)
+            # re-park the handler that ran this task RIGHT NOW (not when
+            # the invoker thread's poll next wakes): a caller that chains
+            # result() -> next call_async must find it warm
+            h = self._assignments.pop(task_id, None)
+            if (h is not None and not self._shutdown
+                    and h.proc.poll() is None):
+                self._parked.append(h)
         if fut is None:
             return
         fut.stats["run_s"] = meta.get("run_s", 0.0)

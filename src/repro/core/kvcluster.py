@@ -153,6 +153,7 @@ import time
 from collections import deque
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
+from . import clientopts as _copts
 from . import transport as _transport
 from .errors import (EndpointConnectError, ShardRedirectError,
                      ShardUnavailableError)
@@ -800,16 +801,23 @@ class ClusterClient(_ShardRouter):
 
     def __init__(self, address: Any = None,
                  shard_addresses: Optional[Sequence[Any]] = None,
-                 legacy_protocol: bool = False, hash_seed: int = 0,
-                 mux: bool = True, raw: bool = True,
-                 transport: Optional[str] = None,
-                 failover_timeout_s: float = 10.0):
+                 legacy_protocol: Any = _copts.UNSET, hash_seed: int = 0,
+                 mux: Any = _copts.UNSET, raw: Any = _copts.UNSET,
+                 transport: Any = _copts.UNSET,
+                 failover_timeout_s: Any = _copts.UNSET,
+                 options: Optional[_copts.ClientOptions] = None):
+        # Unified construction surface: the historical kwargs are
+        # aliases over one ClientOptions (see repro.core.clientopts).
+        opts = _copts.resolve_client_options(
+            options, legacy_protocol=legacy_protocol, mux=mux, raw=raw,
+            transport=transport, failover_timeout_s=failover_timeout_s)
+        self.options = opts
         self._control_address = address
-        self._legacy = legacy_protocol
-        self._mux_opt = mux
-        self._raw_opt = raw
-        self.transport = transport
-        self.failover_timeout_s = float(failover_timeout_s)
+        self._legacy = opts.legacy_protocol
+        self._mux_opt = opts.mux
+        self._raw_opt = opts.raw
+        self.transport = opts.transport
+        self.failover_timeout_s = float(opts.failover_timeout_s)
         self._desc_epoch = 0
         self._refresh_lock = threading.Lock()
         self._clients: List[KVClient] = []
@@ -870,9 +878,7 @@ class ClusterClient(_ShardRouter):
             eps = _transport.normalize_endpoints(a)
             key = tuple(sorted(e.url for e in eps))
             if key not in by_key:
-                by_key[key] = KVClient(eps, legacy_protocol=self._legacy,
-                                       mux=self._mux_opt, raw=self._raw_opt,
-                                       transport=self.transport)
+                by_key[key] = KVClient(eps, options=self.options)
             new_clients.append(by_key[key])
             new_keys.append(key)
         live = set(new_keys)
@@ -1108,18 +1114,28 @@ class ClusterClient(_ShardRouter):
                 c.close()
 
 
-def connect(address: Any, legacy_protocol: bool = False,
-            transport: Optional[str] = None
+def connect(address: Any, legacy_protocol: Any = _copts.UNSET,
+            transport: Any = _copts.UNSET, mux: Any = _copts.UNSET,
+            raw: Any = _copts.UNSET,
+            failover_timeout_s: Any = _copts.UNSET,
+            options: Optional[_copts.ClientOptions] = None
             ) -> Union[KVClient, "ClusterClient"]:
     """Bootstrap from one address: a cluster control endpoint answers the
     descriptor GET and yields a ``ClusterClient``; a plain ``KVServer``
-    answers None and the already-open ``KVClient`` is returned as-is.
-    ``address`` takes any shape ``KVClient`` does — a ``(host, port)``
-    tuple, an endpoint url, or a url list. ``transport`` pins the SHARD
+    answers None and a ``KVClient`` is returned. ``address`` takes any
+    shape ``KVClient`` does — a ``(host, port)`` tuple, an endpoint url,
+    or a url list.
+
+    Configuration rides one :class:`~repro.core.clientopts.ClientOptions`
+    (``options=``, with the historical kwargs kept as aliases — see that
+    module for the conflict rules). ``transport`` pins the SHARD/server
     carriers; the bootstrap GET itself uses whatever ``address``
     advertises (a bare control tuple is tcp-only, and pinning one
     round trip buys nothing)."""
-    client = KVClient(address, legacy_protocol=legacy_protocol)
+    opts = _copts.resolve_client_options(
+        options, legacy_protocol=legacy_protocol, transport=transport,
+        mux=mux, raw=raw, failover_timeout_s=failover_timeout_s)
+    client = KVClient(address, options=opts.replace(transport=None))
     try:
         desc = client.get(DESCRIPTOR_KEY)
     except Exception:
@@ -1133,14 +1149,12 @@ def connect(address: Any, legacy_protocol: bool = False,
             address=address,
             shard_addresses=(desc.get("endpoints")
                              or [tuple(a) for a in desc["shards"]]),
-            legacy_protocol=legacy_protocol,
             hash_seed=desc.get("hash_seed", 0),
-            transport=transport)
-    if transport is not None:
+            options=opts)
+    if opts.transport is not None:
         # plain server: re-open with the pin (raises if unadvertised)
         client.close()
-        return KVClient(address, legacy_protocol=legacy_protocol,
-                        transport=transport)
+        return KVClient(address, options=opts)
     return client
 
 

@@ -154,6 +154,7 @@ from collections import deque
 from itertools import islice as _islice
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from . import clientopts as _copts
 from . import serialization
 from . import transport as _transport
 from .errors import ShardRedirectError, ShardUnavailableError
@@ -2071,17 +2072,28 @@ class KVClient:
     """
 
     def __init__(self, address: Any,
-                 legacy_protocol: bool = False, mux: bool = True,
-                 raw: bool = True, transport: Optional[str] = None):
+                 legacy_protocol: Any = _copts.UNSET,
+                 mux: Any = _copts.UNSET,
+                 raw: Any = _copts.UNSET,
+                 transport: Any = _copts.UNSET,
+                 failover_timeout_s: Any = _copts.UNSET,
+                 options: Optional[_copts.ClientOptions] = None):
+        # One resolved ClientOptions backs every knob: the historical
+        # kwargs remain as aliases (see repro.core.clientopts for the
+        # conflict/back-compat contract).
+        opts = _copts.resolve_client_options(
+            options, legacy_protocol=legacy_protocol, mux=mux, raw=raw,
+            transport=transport, failover_timeout_s=failover_timeout_s)
+        self.options = opts
         self.endpoints = _transport.normalize_endpoints(address)
-        self.transport = transport
+        self.transport = opts.transport
         # .address keeps its historical (host, port) meaning wherever a
         # TCP carrier exists (old callers index into it)
         tcp = next((e for e in self.endpoints if e.scheme == "tcp"), None)
         self.address = (tcp.host, tcp.port) if tcp is not None else address
-        self.legacy_protocol = legacy_protocol
-        self.mux_enabled = mux and not legacy_protocol
-        self.raw_enabled = raw and not legacy_protocol
+        self.legacy_protocol = opts.legacy_protocol
+        self.mux_enabled = opts.mux and not opts.legacy_protocol
+        self.raw_enabled = opts.raw and not opts.legacy_protocol
         self._tls = threading.local()
         # thread ident -> (thread, socket): lets close() reach every live
         # connection and lets _sock() prune entries of exited threads

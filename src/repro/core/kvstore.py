@@ -1262,7 +1262,9 @@ class KVStore:
         st = self._stripe(key)
         with st.lock:
             e = self._get_entry(key, "hash")
-            return 0 if e is None else len(e.value)
+            n = 0 if e is None else len(e.value)
+        self._charge("HLEN")
+        return n
 
     def hkeys(self, key: str) -> List[str]:
         st = self._stripe(key)

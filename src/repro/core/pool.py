@@ -163,13 +163,15 @@ def _chaos_actions(worker_id: int) -> set:
 
 def _pool_worker(pool_tag: str, worker_id: int, init_key: Optional[str],
                  maxtasksperchild: Optional[int],
-                 lease_cfg: Optional[Tuple[float, float]] = None) -> None:
+                 lease_cfg: Optional[Tuple[float, float]] = None,
+                 drain_enabled: bool = False) -> None:
     sess = _session.get_session()
     store, storage = sess.store, sess.get_storage()
     job_key = f"{pool_tag}:jobs"
     result_key = f"{pool_tag}:results"
     kill_key = f"{pool_tag}:kill"
     inflight_key = f"{pool_tag}:inflight"
+    drain_key = f"{pool_tag}:drain:{worker_id}"
     pool_uid = pool_tag[1:-1] if pool_tag.startswith("{") else pool_tag
 
     if init_key is not None:
@@ -212,6 +214,15 @@ def _pool_worker(pool_tag: str, worker_id: int, init_key: Optional[str],
     try:
         while True:
             attempt, field_ = 0, None
+            if drain_enabled and _kill_flag_matches(store.get(drain_key),
+                                                    pool_uid):
+                # graceful drain (PR 9): the flag is only ever checked
+                # BETWEEN tasks — a drained worker finishes its current
+                # lease, stops issuing blpop_lease, and exits cleanly.
+                # The flag's value is the pool uid (generation fence),
+                # so a stale flag from a prior pool generation is inert.
+                exit_reason = "drained"
+                break
             if lease_cfg is not None:
                 got = store.blpop_lease(job_key, inflight_key, worker_id,
                                         ttl, timeout=0.25)
@@ -287,6 +298,17 @@ def _pool_worker(pool_tag: str, worker_id: int, init_key: Optional[str],
                 break
         store.rpush(result_key, serialization.dumps(
             ("worker_exit", worker_id, exit_reason)))
+        if exit_reason == "drained":
+            # release our marker keys AFTER the exit message is on the
+            # wire: the supervisor skips draining workers in its
+            # heartbeat sweep, so the early key deletion cannot be
+            # mistaken for a death (and never burns respawn budget).
+            try:
+                store.delete(drain_key)
+                if lease_cfg is not None:
+                    store.delete(f"{pool_tag}:hb:{worker_id}")
+            except Exception:
+                pass
     finally:
         hb_stop.set()
 
@@ -410,28 +432,81 @@ class _Job:
         self.chunks = chunks
 
 
+#: Sentinel distinguishing "caller did not pass this knob" from an
+#: explicit value — the hinge of the pool_defaults merge: explicit
+#: ``Pool(...)`` kwargs > ``session.pool_defaults`` > builtin default.
+_UNSET = object()
+
+
 class Pool:
+    """``multiprocessing.Pool`` over serverless workers.
+
+    Configuration layering (PR 9): every fault-tolerance/elasticity knob
+    below resolves as **explicit kwarg > session.pool_defaults >
+    builtin default**. Set fleet-wide policy once::
+
+        configure(pool_defaults={"max_retries": 3, "elastic": True})
+
+    and every subsequent ``Pool()`` picks it up; an explicit kwarg at
+    any call site still wins. Legacy keyword spellings remain stable —
+    no deprecation planned; new knobs are only ever added with inert
+    defaults so that an un-configured ``Pool()`` stays byte-identical
+    on the wire (see ``TestZeroCostWhenOff``).
+
+    ``elastic`` selects the scaling mode:
+
+    * ``None``/``False`` (default) — fixed fleet; ``resize()`` shrinks
+      via poison pills; zero added KV traffic.
+    * ``True`` — graceful-drain resize enabled: scale-down flags
+      individual workers, which finish their current task, stop
+      pulling work and exit cleanly (never killing a leased task,
+      never burning ``respawn_budget``). No controller is started.
+    * an :class:`~repro.runtime.elastic.ElasticPolicy` (or a dict of
+      its fields) — drain-enabled resize **plus** an auto-started
+      :class:`~repro.runtime.elastic.ElasticController` driving
+      ``resize()`` from ``backlog()``; stopped by ``close()`` /
+      ``terminate()``.
+    """
+
     def __init__(self, processes: Optional[int] = None,
                  initializer: Optional[Callable] = None,
                  initargs: Sequence[Any] = (),
-                 maxtasksperchild: Optional[int] = None,
+                 maxtasksperchild: Any = _UNSET,
                  context=None,  # accepted for API fidelity
                  session: Optional[_session.Session] = None,
-                 max_retries: int = 0,
-                 lease_ttl_s: float = 5.0,
-                 heartbeat_s: Optional[float] = None,
-                 speculation_factor: float = 0.0,
-                 respawn_budget: Optional[int] = None):
+                 max_retries: Any = _UNSET,
+                 lease_ttl_s: Any = _UNSET,
+                 heartbeat_s: Any = _UNSET,
+                 speculation_factor: Any = _UNSET,
+                 respawn_budget: Any = _UNSET,
+                 elastic: Any = _UNSET):
+        self.session = session or _session.get_session()
+        _defaults = dict(getattr(self.session, "pool_defaults", None) or {})
+
+        def _knob(name: str, explicit: Any, builtin: Any) -> Any:
+            if explicit is not _UNSET:
+                return explicit
+            return _defaults.get(name, builtin)
+
+        processes = processes or _defaults.get("processes") \
+            or default_parallelism()
+        maxtasksperchild = _knob("maxtasksperchild", maxtasksperchild, None)
+        max_retries = _knob("max_retries", max_retries, 0)
+        lease_ttl_s = _knob("lease_ttl_s", lease_ttl_s, 5.0)
+        heartbeat_s = _knob("heartbeat_s", heartbeat_s, None)
+        speculation_factor = _knob("speculation_factor",
+                                   speculation_factor, 0.0)
+        respawn_budget = _knob("respawn_budget", respawn_budget, None)
+        elastic = _knob("elastic", elastic, None)
         if max_retries < 0:
             raise ValueError("max_retries must be >= 0")
         if lease_ttl_s <= 0:
             raise ValueError("lease_ttl_s must be > 0")
-        self.session = session or _session.get_session()
         self._store = self.session.store
         self._storage = self.session.get_storage()
         self.uid = fresh_uid("pool")
         self._tag = "{" + self.uid + "}"
-        self._n_workers_target = processes or default_parallelism()
+        self._n_workers_target = processes
         self._maxtasks = maxtasksperchild
         self._max_retries = int(max_retries)
         self._spec_factor = float(speculation_factor)
@@ -442,6 +517,12 @@ class Pool:
         self._respawn_left = (respawn_budget if respawn_budget is not None
                               else (2 * self._n_workers_target
                                     if self._ft else 0))
+        self._drain_enabled = bool(elastic)
+        self._draining: set = set()  # wids flagged for graceful drain
+        #: set by _submit_job: the ElasticController parks on this event
+        #: instead of polling the KV plane when the pool is idle.
+        self._activity = threading.Event()
+        self._elastic_controller = None
         self._executor = FunctionExecutor(
             name=f"pool-{self.uid}", session=self.session,
             **{k: v for k, v in self.session.executor_defaults.items()
@@ -469,7 +550,7 @@ class Pool:
             "workers_lost": 0, "workers_respawned": 0,
             "leases_requeued": 0, "tasks_dead_lettered": 0,
             "duplicate_results_discarded": 0, "speculative_tasks": 0,
-            "all_dead_failures": 0,
+            "all_dead_failures": 0, "workers_drained": 0,
         }
         self._closed = False
         self._all_exited = threading.Event()
@@ -493,6 +574,18 @@ class Pool:
             name=f"pool-supervisor-{self.uid}")
         self._supervisor.start()
         self._spawn_workers(self._n_workers_target)
+        if elastic not in (None, False, True):
+            # lazy import: repro.core must not import repro.runtime at
+            # module load (layering), and plain pools must not pay for it
+            from ..runtime.elastic import ElasticController, ElasticPolicy
+            policy = (ElasticPolicy(**elastic) if isinstance(elastic, dict)
+                      else elastic)
+            if not isinstance(policy, ElasticPolicy):
+                raise TypeError(
+                    "elastic must be None/bool, an ElasticPolicy, or a "
+                    f"dict of ElasticPolicy fields, not {type(elastic).__name__}")
+            self._elastic_controller = ElasticController(self, policy)
+            self._elastic_controller.start()
 
     # -- keys ---------------------------------------------------------------
 
@@ -519,6 +612,9 @@ class Pool:
     def _hb_key(self, wid: int) -> str:
         return f"{self._tag}:hb:{wid}"
 
+    def _drain_key(self, wid: int) -> str:
+        return f"{self._tag}:drain:{wid}"
+
     # -- workers --------------------------------------------------------------
 
     def _spawn_workers(self, n: int) -> None:
@@ -526,7 +622,7 @@ class Pool:
             wid = next(self._worker_seq)
             fut = self._executor.call_async(
                 _pool_worker, (self._tag, wid, self._init_key, self._maxtasks,
-                               self._lease_cfg))
+                               self._lease_cfg, self._drain_enabled))
             with self._jobs_lock:
                 self._workers[wid] = fut
                 self._worker_spawn_t[wid] = time.monotonic()
@@ -534,19 +630,108 @@ class Pool:
                 self._all_exited.clear()
 
     def resize(self, n_workers: int) -> None:
-        """Elastically grow or shrink the worker fleet (beyond-paper)."""
+        """Grow or shrink the worker fleet at runtime (beyond-paper; the
+        actuator behind :class:`~repro.runtime.elastic.ElasticController`).
+
+        Scale-up first cancels any not-yet-honored drain flags, then
+        cold-spawns the remainder (with the warm-capable subprocess
+        backend, the spawn re-attaches parked warm handlers first).
+        Scale-down is **graceful** when the pool was built with
+        ``elastic`` truthy: the highest-numbered live workers get a
+        per-worker drain flag, finish their current task, stop pulling
+        work and exit — a leased task is never killed and a drained
+        exit never burns ``respawn_budget``. Without ``elastic`` the
+        legacy poison-pill shrink is used (workers exit after their
+        next queue pop), keeping the default wire profile unchanged.
+        """
+        if n_workers < 0:
+            raise ValueError("n_workers must be >= 0")
+        if self._closed:
+            return  # teardown already poisoned the fleet
+        cancel: List[int] = []
+        victims: List[int] = []
         with self._jobs_lock:
-            cur = self._live_workers
+            cur = self._live_workers - len(self._draining)
+            if n_workers > cur and self._draining:
+                # un-drain the newest flagged workers before spawning:
+                # cheaper than a cold spawn, and the worker keeps its
+                # warm caches. The collector covers the race where the
+                # worker honored the flag before the delete landed.
+                cancel = sorted(self._draining)[:n_workers - cur]
+                for wid in cancel:
+                    self._draining.discard(wid)
+                cur += len(cancel)
+            elif n_workers < cur and self._drain_enabled:
+                victims = sorted(
+                    (w for w in self._workers
+                     if w not in self._draining and w not in self._exited
+                     and w not in self._dead_handled),
+                    reverse=True)[:cur - n_workers]
+                self._draining.update(victims)
+        if cancel:
+            try:
+                self._store.delete(*[self._drain_key(w) for w in cancel])
+            except Exception:
+                pass
         if n_workers > cur:
             self._spawn_workers(n_workers - cur)
+        elif victims:
+            pipe_factory = getattr(self._store, "pipeline", None)
+            if pipe_factory is not None and len(victims) > 1:
+                with pipe_factory() as pipe:
+                    for wid in victims:
+                        pipe.set(self._drain_key(wid), self.uid, ex=3600)
+            else:
+                for wid in victims:
+                    self._store.set(self._drain_key(wid), self.uid, ex=3600)
         elif n_workers < cur:
             self._store.rpush(self._job_key, *([_POISON] * (cur - n_workers)))
         self._n_workers_target = n_workers
 
     @property
     def n_workers(self) -> int:
+        """Number of currently live workers (public contract, PR 9).
+
+        Counts every worker that has been spawned and has not yet
+        exited or been declared dead — including workers currently
+        draining. This is the value
+        :class:`~repro.runtime.elastic.ElasticController` scales
+        against; ``resize()`` targets ``n_workers - draining``."""
         with self._jobs_lock:
             return self._live_workers
+
+    def backlog(self) -> int:
+        """Outstanding work the fleet has not finished: queue depth
+        plus in-flight tasks (public contract, PR 9 — the load signal
+        :class:`~repro.runtime.elastic.ElasticController` consumes).
+
+        Costs **zero KV commands when the pool is idle** (no registered
+        jobs short-circuits to 0) and exactly one pipelined round trip
+        otherwise: ``LLEN jobs`` + ``HLEN inflight`` in one flush (the
+        pool's keys share a hash tag, so this holds on a cluster too).
+        Without fault tolerance there is no in-flight hash; the queue
+        depth alone is returned, so tasks currently executing are not
+        counted — an acceptable undercount for scaling decisions."""
+        with self._jobs_lock:
+            if not self._jobs:
+                return 0
+        try:
+            if self._lease_cfg is None:
+                return int(self._store.llen(self._job_key))
+            pipe_factory = getattr(self._store, "pipeline", None)
+            if pipe_factory is None:
+                return (int(self._store.llen(self._job_key))
+                        + int(self._store.hlen(self._inflight_key)))
+            try:
+                pipe = pipe_factory(transactional=False)
+            except TypeError:  # in-process stores: batch mode only
+                pipe = pipe_factory()
+            with pipe:
+                q = pipe.llen(self._job_key)
+                inflight = pipe.hlen(self._inflight_key)
+            return int(q.get()) + int(inflight.get())
+        except (ConnectionError, OSError):
+            return 0  # store gone: report idle rather than explode
 
     def worker_pids(self) -> Dict[int, int]:
         """PIDs of live workers as advertised by their heartbeat keys
@@ -566,14 +751,25 @@ class Pool:
         return {w: int(v) for w, v in zip(wids, vals) if v is not None}
 
     def fault_stats(self) -> Dict[str, int]:
-        """Snapshot of the fault-tolerance counters (all zero with FT
-        off): workers lost/respawned, leases requeued, tasks
-        dead-lettered, duplicate results discarded by fencing,
-        speculative re-enqueues, all-dead failures."""
+        """Snapshot of the fault-tolerance/elasticity counters (all
+        zero with FT off): workers lost/respawned/drained, leases
+        requeued, tasks dead-lettered, duplicate results discarded by
+        fencing, speculative re-enqueues, all-dead failures — plus the
+        executor's cold-spawn vs warm-attach counts (PR 9: the
+        invoker/handler backend re-attaches parked warm handlers on
+        scale-up instead of cold-starting)."""
         with self._jobs_lock:
             out = dict(self._stats)
             out["live_workers"] = self._live_workers
+            out["draining_workers"] = len(self._draining)
             out["respawn_budget_left"] = self._respawn_left
+        try:
+            exs = self._executor.stats_summary() or {}
+        except Exception:
+            exs = {}
+        out["cold_starts"] = int(exs.get("cold_starts",
+                                         exs.get("containers_created", 0)))
+        out["warm_attaches"] = int(exs.get("warm_attaches", 0))
         return out
 
     # -- submission ------------------------------------------------------------
@@ -633,6 +829,7 @@ class Pool:
                                            blob)
         with self._jobs_lock:
             self._jobs[job_id] = _Job(result, imap_buf, chunk_meta)
+        self._activity.set()  # wake a parked ElasticController, if any
         # One flush submits the whole job (the paper's key optimization).
         # Large jobs split into capped-arity RPUSHes inside one pipeline
         # flush: over TCP the multi-frame mode bounds how much of the job
@@ -706,19 +903,32 @@ class Pool:
 
     # -- lifecycle -----------------------------------------------------------------
 
+    def _stop_elastic(self) -> None:
+        ctl = self._elastic_controller
+        if ctl is not None:
+            self._elastic_controller = None
+            try:
+                ctl.stop()
+            except Exception:
+                pass
+
     def close(self) -> None:
         if self._closed:
             return
         self._closed = True
+        self._stop_elastic()
         with self._jobs_lock:
-            n = self._live_workers
-        if n:
+            # draining workers exit via their flag (checked before every
+            # queue pop) and never consume a pill — poison only the rest
+            n = self._live_workers - len(self._draining)
+        if n > 0:
             self._store.rpush(self._job_key, *([_POISON] * n))
 
     def terminate(self) -> None:
         self._closed = True
+        self._stop_elastic()
         with self._jobs_lock:
-            n = self._live_workers
+            n = self._live_workers - len(self._draining)
         pipe_factory = getattr(self._store, "pipeline", None)
         if pipe_factory is not None:
             # kill flag + queue flush + poison pills: one round trip.
@@ -806,8 +1016,22 @@ class Pool:
                     self._live_workers -= 1
                     if self._live_workers <= 0:
                         self._all_exited.set()
+                    deficit = False
+                    if reason == "drained":
+                        # clean scale-down exit: NOT a death — no lost
+                        # counter, no respawn budget spent. If a resize
+                        # cancelled this drain after the worker already
+                        # honored the flag, live has dipped below target:
+                        # spawn one replacement to converge.
+                        self._draining.discard(wid)
+                        self._stats["workers_drained"] += 1
+                        deficit = (not self._closed
+                                   and self._live_workers
+                                   < self._n_workers_target)
                 if reason == "recycle" and not self._closed:
                     self._spawn_workers(1)  # maxtasksperchild replacement
+                elif deficit:
+                    self._spawn_workers(1)
                 continue
             if len(msg) >= 7:  # lease-mode chunk: + (attempt, run_s)
                 _, job_id, c_idx, results, _wid, _attempt, run_s = msg[:7]
@@ -859,6 +1083,7 @@ class Pool:
             snapshot = [(wid, fut) for wid, fut in self._workers.items()
                         if wid not in self._exited
                         and wid not in self._dead_handled]
+            draining = set(self._draining)
         # 1. executor-future deaths (thread backend: worker body raised)
         for wid, fut in snapshot:
             if fut is not None and fut.done():
@@ -867,10 +1092,14 @@ class Pool:
                     self._on_worker_death(wid)
             else:
                 self._dead_candidates.pop(wid, None)
-        # 2. missing heartbeats (lease mode: catches SIGKILLed subprocesses)
+        # 2. missing heartbeats (lease mode: catches SIGKILLed subprocesses).
+        #    Draining workers are exempt: they delete their own heartbeat
+        #    key on a clean drained exit, which must never read as death
+        #    (real deaths of draining workers still surface via check 1
+        #    and their leases via the periodic reap below).
         if self._lease_cfg is not None and snapshot:
             wids = [wid for wid, _ in snapshot
-                    if wid not in self._dead_handled
+                    if wid not in self._dead_handled and wid not in draining
                     and now - self._worker_spawn_t.get(wid, now)
                     > _HB_SPAWN_GRACE_S]
             if wids:
@@ -904,13 +1133,19 @@ class Pool:
             if wid in self._exited or wid in self._dead_handled:
                 return
             self._dead_handled.add(wid)
+            was_draining = wid in self._draining
+            self._draining.discard(wid)
             self._workers.pop(wid, None)
             self._dead_candidates.pop(wid, None)
             self._live_workers -= 1
             if self._live_workers <= 0:
                 self._all_exited.set()
             self._stats["workers_lost"] += 1
-            respawn = not self._closed and self._respawn_left > 0
+            # a worker that died while draining was leaving anyway:
+            # reclaim its lease below, but don't respawn past the
+            # already-reduced target (and don't spend budget on it)
+            respawn = (not self._closed and self._respawn_left > 0
+                       and not was_draining)
             if respawn:
                 self._respawn_left -= 1
         if self._lease_cfg is not None:

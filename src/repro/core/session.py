@@ -9,6 +9,13 @@ backend, Redis endpoint). Our equivalent is a ``Session`` naming:
                    (storage-poll monitoring) and the file façade;
   * ``executor_defaults`` — FaaS model: backend, cold/warm invocation
                    latencies, function time limit, monitoring mode.
+  * ``pool_defaults`` — session-wide defaults for Pool's FT/elastic
+                   knobs (``max_retries``, ``lease_ttl_s``,
+                   ``heartbeat_s``, ``speculation_factor``,
+                   ``respawn_budget``, ``elastic``): set once via
+                   ``configure(pool_defaults={...})`` instead of
+                   threading them through every ``Pool(...)`` call
+                   site; explicit Pool kwargs always win (PR 9).
 
 Everything defaults to zero-latency in-process fakes so unit tests run at
 native speed; benchmarks install paper-calibrated latency models.
@@ -46,11 +53,25 @@ PAPER_INVOCATION = dict(
 )
 
 
+#: Keys accepted in ``Session.pool_defaults`` / ``configure(pool_defaults=...)``
+#: — the FT/elastic knobs of :class:`repro.core.pool.Pool`. Anything else
+#: raises up front: a typo'd default silently ignored at every Pool site
+#: is exactly the failure mode this namespace exists to remove.
+POOL_DEFAULT_KEYS = frozenset({
+    "processes", "maxtasksperchild", "max_retries", "lease_ttl_s",
+    "heartbeat_s", "speculation_factor", "respawn_budget", "elastic",
+})
+
+
 @dataclass
 class Session:
     store: Any = field(default_factory=lambda: KVStore(name="session-kv"))
     storage: Any = None  # lazily built ObjectStore (avoid import cycle)
     executor_defaults: Dict[str, Any] = field(default_factory=dict)
+    #: Session-wide Pool knob defaults (see POOL_DEFAULT_KEYS): set once
+    #: via ``configure(pool_defaults={...})``, merged UNDER explicit
+    #: ``Pool(...)`` kwargs — an explicit kwarg always wins.
+    pool_defaults: Dict[str, Any] = field(default_factory=dict)
     invocation: InvocationModel = field(default_factory=InvocationModel)
     default_resource_ttl_s: float = 3600.0  # paper §3.2: 1-hour backstop
     kv_address: Optional[tuple] = None  # (host, port) for subprocess workers
@@ -87,9 +108,35 @@ def reset_session() -> Session:
 
 
 def configure(**kwargs: Any) -> Session:
-    """Update fields of the current session in place."""
+    """Update fields of the current session in place.
+
+    ``pool_defaults`` gets merge-with-validation semantics instead of
+    plain assignment: keys are checked against :data:`POOL_DEFAULT_KEYS`
+    (unknown knobs raise ``ValueError`` immediately) and the mapping is
+    merged into the existing defaults, so repeated calls compose::
+
+        configure(pool_defaults={"max_retries": 3, "lease_ttl_s": 2.0})
+        configure(pool_defaults={"speculation_factor": 2.5})  # keeps both
+
+    Every :class:`repro.core.pool.Pool` constructed afterwards picks
+    these up for any knob not passed explicitly — explicit ``Pool(...)``
+    kwargs always win. Remove a default by setting it to ``None``.
+    """
     s = get_session()
     for k, v in kwargs.items():
+        if k == "pool_defaults":
+            if not isinstance(v, dict):
+                raise TypeError("pool_defaults must be a dict")
+            unknown = set(v) - POOL_DEFAULT_KEYS
+            if unknown:
+                raise ValueError(
+                    f"unknown pool_defaults key(s): {sorted(unknown)}; "
+                    f"valid keys: {sorted(POOL_DEFAULT_KEYS)}")
+            merged = dict(s.pool_defaults)
+            merged.update(v)
+            s.pool_defaults = {k2: v2 for k2, v2 in merged.items()
+                               if v2 is not None}
+            continue
         if not hasattr(s, k):
             raise AttributeError(f"Session has no field {k!r}")
         setattr(s, k, v)

@@ -7,8 +7,27 @@ Lithops worker: download payload from (KV-backed) storage, deserialize,
 execute under the error wrapper, deliver the result via queue-notify or
 storage-poll.
 
-Usage (spawned by FunctionExecutor):
+Two modes (PR 9 — lithops-style invoker/handler split):
+
+*Handler* (the default spawned by FunctionExecutor)::
+
+    python -m repro.core.worker_main --handler <exec_name> <handler_id> \
+        <monitoring> <result_list_key>
+
+  A long-lived process that parks on its own invoke list
+  ``{exec}:invoke:{hid}`` and runs one task per message — the warm
+  container the paper's Table 1 prices at ``warm_invoke_s`` instead of
+  ``cold_invoke_s``. Between tasks it re-parks; the client-side invoker
+  re-attaches it to later tasks instead of cold-spawning. It exits on an
+  ``__exit__`` pill or when the executor's generation-fenced kill flag
+  (``{exec}:kill`` = executor name) appears.
+
+*Single-task* (legacy)::
+
     python -m repro.core.worker_main <task_id> <monitoring> <result_list_key>
+
+  Runs exactly one task and exits. Kept as a stable CLI for external
+  invokers; the in-tree executor no longer uses it.
 """
 
 from __future__ import annotations
@@ -18,12 +37,12 @@ import sys
 import time
 import traceback
 
+_EXIT_PILL = b"__exit__"
 
-def main() -> int:
-    task_id, monitoring, result_list = sys.argv[1], sys.argv[2], sys.argv[3]
+
+def _connect_session():
     host, port = os.environ["REPRO_KV_ADDR"].rsplit(":", 1)
 
-    from . import serialization
     from . import session as S
     from .kvcluster import connect
     from .storage import KVObjectStore
@@ -33,6 +52,15 @@ def main() -> int:
     client = connect((host, int(port)))
     sess = S.Session(store=client, storage=KVObjectStore(client))
     S.set_session(sess)
+    return sess, client
+
+
+def _run_task(sess, client, task_id: str, monitoring: str,
+              result_list: str) -> None:
+    """Download → deserialize → execute under the error wrapper →
+    deliver. Delivery failures propagate (the caller decides whether a
+    lost store is fatal)."""
+    from . import serialization
 
     payload = sess.storage.get(f"jobs/{task_id}/payload")
     t0 = time.perf_counter()
@@ -45,11 +73,58 @@ def main() -> int:
     run_s = time.perf_counter() - t0
 
     blob = serialization.dumps((task_id, status, body, {"run_s": run_s}))
+    if monitoring == "storage":
+        sess.storage.put(f"jobs/{task_id}/result", blob)
+    else:
+        client.rpush(result_list, blob)
+
+
+def handler_main() -> int:
+    """Long-lived handler: park on the invoke list, run tasks until told
+    to exit. One task at a time — the invoker never double-dispatches."""
+    exec_name, hid, monitoring, result_list = sys.argv[2:6]
+    sess, client = _connect_session()
+    invoke_key = f"{{{exec_name}}}:invoke:{hid}"
+    kill_key = f"{{{exec_name}}}:kill"
+
+    while True:
+        try:
+            got = client.blpop(invoke_key, timeout=0.5)
+        except (ConnectionError, OSError):
+            return 1
+        if got is None:
+            try:
+                flag = client.get(kill_key)
+            except (ConnectionError, OSError):
+                return 1
+            if flag is not None:
+                val = flag.decode() if isinstance(flag, bytes) else flag
+                if val == exec_name or not isinstance(val, str):
+                    break  # generation fence: only OUR executor's flag
+            continue
+        msg = got[1]
+        if isinstance(msg, (bytes, bytearray)) and bytes(msg) == _EXIT_PILL:
+            break
+        task_id = msg.decode() if isinstance(msg, (bytes, bytearray)) \
+            else str(msg)
+        try:
+            _run_task(sess, client, task_id, monitoring, result_list)
+        except (ConnectionError, OSError):
+            return 1  # store gone: nowhere to deliver even the error
     try:
-        if monitoring == "storage":
-            sess.storage.put(f"jobs/{task_id}/result", blob)
-        else:
-            client.rpush(result_list, blob)
+        client.close()
+    except Exception:
+        pass
+    return 0
+
+
+def main() -> int:
+    if len(sys.argv) > 1 and sys.argv[1] == "--handler":
+        return handler_main()
+    task_id, monitoring, result_list = sys.argv[1], sys.argv[2], sys.argv[3]
+    sess, client = _connect_session()
+    try:
+        _run_task(sess, client, task_id, monitoring, result_list)
         client.close()
     except (ConnectionError, OSError):
         # The store is gone: there is nowhere to deliver even the error.

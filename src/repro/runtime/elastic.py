@@ -1,15 +1,40 @@
 """Elastic scaling policy (the paper's core value proposition, §5.3/§6.4:
 serverless resources attach instantly and without prior provisioning).
 
-``ElasticController`` watches the job queue depth and worker idleness in
-the KV store and resizes a Pool/JobRunner between [min_workers,
-max_workers]. Scale-up is aggressive (the whole point of FaaS — §6.4
+``ElasticController`` drives a :class:`repro.core.pool.Pool` (or any
+object with the same public contract) between ``[min_workers,
+max_workers]``. Scale-up is aggressive (the whole point of FaaS — §6.4
 shows a VM "vertically scaled" with +48 lambdas mid-run); scale-down is
-conservative (hysteresis) to avoid thrashing warm containers.
+conservative (hysteresis via ``idle_cycles_before_shrink``) to avoid
+thrashing warm containers.
+
+Public contract (PR 9)
+----------------------
+
+The controller consumes exactly three documented target members — no
+private key-layout knowledge, no reaching into ``target.session``:
+
+* ``target.backlog() -> int`` — outstanding work (queue depth +
+  in-flight), one pipelined KV read, **zero KV commands when idle**;
+* ``target.n_workers -> int`` — live workers;
+* ``target.resize(n)`` — the actuator (graceful drain on scale-down
+  when the pool was built with ``elastic`` truthy).
+
+When the backlog hits zero and the fleet has shrunk to the floor, the
+controller *parks* on the target's activity event (set by every job
+submission) instead of polling — an idle elastic pool adds **no KV
+load and no busy polling**; the next submit wakes it immediately.
+
+The usual way to get a controller is ``Pool(elastic=ElasticPolicy(...))``
+(or ``configure(pool_defaults={"elastic": {...}})``), which starts one
+automatically and stops it in ``close()``/``terminate()``. Constructing
+``ElasticController(pool, policy)`` by hand still works for custom
+targets and for tests.
 """
 
 from __future__ import annotations
 
+import math
 import threading
 import time
 from dataclasses import dataclass
@@ -20,54 +45,133 @@ __all__ = ["ElasticPolicy", "ElasticController"]
 
 @dataclass
 class ElasticPolicy:
+    """Threshold policy mapping (n_workers, backlog, idleness) to a
+    target fleet size. ``decide()`` is pure — trivially unit-testable —
+    and clamps every answer into ``[min_workers, max_workers]``."""
+
     min_workers: int = 1
     max_workers: int = 64
     backlog_per_worker: float = 2.0    # scale up above this queue depth
     idle_cycles_before_shrink: int = 5
-    step: int = 4                      # workers added per decision
+    step: int = 4                      # max workers added/removed per decision
+
+    def __post_init__(self) -> None:
+        if self.min_workers < 0:
+            raise ValueError("min_workers must be >= 0")
+        if self.max_workers < max(self.min_workers, 1):
+            raise ValueError("max_workers must be >= max(min_workers, 1)")
+        if self.backlog_per_worker <= 0:
+            raise ValueError("backlog_per_worker must be > 0")
+        if self.step < 1:
+            raise ValueError("step must be >= 1")
 
     def decide(self, n_workers: int, backlog: int, idle_cycles: int) -> int:
+        """Target fleet size given the current observation.
+
+        * Overload (``backlog > backlog_per_worker * n_workers``): grow
+          toward ``backlog / backlog_per_worker``, by at most ``step``,
+          capped at ``max_workers``.
+        * Idle (``backlog == 0``) for ``idle_cycles_before_shrink``
+          consecutive observations: shrink by ``step``, floored at
+          ``min_workers`` (hysteresis — one quiet sample never shrinks).
+        * Otherwise: hold steady.
+        """
         if backlog > self.backlog_per_worker * max(n_workers, 1):
-            want = min(self.max_workers,
-                       max(n_workers + self.step,
-                           int(backlog / self.backlog_per_worker)))
-            return want
+            want = min(n_workers + self.step,
+                       math.ceil(backlog / self.backlog_per_worker))
+            return min(self.max_workers, max(self.min_workers, want))
         if backlog == 0 and idle_cycles >= self.idle_cycles_before_shrink:
-            return max(self.min_workers, n_workers - self.step)
+            return min(n_workers, max(self.min_workers,
+                                      n_workers - self.step))
         return n_workers
 
 
 class ElasticController:
-    """Background controller bound to a Pool or JobRunner (anything with
-    ``resize(n)``, ``n_workers`` and a ``{tag}:jobs`` KV list)."""
+    """Background controller bound to a Pool-contract target (PR 9:
+    ``backlog()`` / ``n_workers`` / ``resize(n)`` — see module doc).
+
+    Also integrates **worker-seconds** (∫ n_workers dt) while running:
+    the provisioning-cost metric ``benchmarks/bench_elastic.py``
+    compares against fixed fleets.
+    """
 
     def __init__(self, target: Any, policy: Optional[ElasticPolicy] = None,
-                 interval: float = 0.2):
+                 interval: float = 0.2, park_timeout: float = 30.0):
         self.target = target
         self.policy = policy or ElasticPolicy()
-        self.interval = interval
+        self.interval = float(interval)
+        #: safety heartbeat while parked: even with no submit activity
+        #: the loop wakes this often (backlog() still costs zero KV
+        #: commands on an idle pool, so this is CPU-only insurance).
+        self.park_timeout = float(park_timeout)
         self._stop = threading.Event()
         self._idle_cycles = 0
+        #: (monotonic_t, n_before, n_after, backlog) per resize decision
         self.decisions: list = []
         self._thread: Optional[threading.Thread] = None
+        self._ws_lock = threading.Lock()
+        self._ws = 0.0
+        self._ws_last: Optional[float] = None
+        self._ws_n = 0
 
-    def _backlog(self) -> int:
-        store = self.target.session.store
-        tag = getattr(self.target, "_tag")
-        return store.llen(f"{tag}:jobs")
+    # -- worker-seconds accounting -----------------------------------------
+
+    def _integrate(self, now: float, n: int) -> None:
+        with self._ws_lock:
+            if self._ws_last is not None:
+                self._ws += self._ws_n * (now - self._ws_last)
+            self._ws_last, self._ws_n = now, n
+
+    def worker_seconds(self) -> float:
+        """∫ n_workers dt since ``start()`` — the elastic fleet's
+        provisioning cost, comparable to ``n * wall_clock`` for a fixed
+        fleet of ``n`` workers."""
+        with self._ws_lock:
+            ws = self._ws
+            if self._ws_last is not None:
+                ws += self._ws_n * (time.monotonic() - self._ws_last)
+            return ws
+
+    # -- control loop -------------------------------------------------------
+
+    def _observe_once(self) -> None:
+        """One observe→decide→act pass (exposed for deterministic tests)."""
+        act = getattr(self.target, "_activity", None)
+        if act is not None:
+            # clear BEFORE sampling: a submit landing after the sample
+            # re-sets the event, so the park below can never miss it
+            act.clear()
+        backlog = int(self.target.backlog())
+        self._idle_cycles = self._idle_cycles + 1 if backlog == 0 else 0
+        cur = int(self.target.n_workers)
+        self._integrate(time.monotonic(), cur)
+        want = self.policy.decide(cur, backlog, self._idle_cycles)
+        if want != cur:
+            self.decisions.append((time.monotonic(), cur, want, backlog))
+            self.target.resize(want)
+            self._integrate(time.monotonic(), want)
+            self._idle_cycles = 0
+        self._last_backlog, self._last_n = backlog, min(cur, want)
 
     def _loop(self) -> None:
-        while not self._stop.wait(self.interval):
-            backlog = self._backlog()
-            self._idle_cycles = self._idle_cycles + 1 if backlog == 0 else 0
-            cur = self.target.n_workers
-            want = self.policy.decide(cur, backlog, self._idle_cycles)
-            if want != cur:
-                self.decisions.append((time.monotonic(), cur, want, backlog))
-                self.target.resize(want)
-                self._idle_cycles = 0
+        self._last_backlog, self._last_n = 1, 0
+        while not self._stop.is_set():
+            try:
+                self._observe_once()
+            except Exception:
+                pass  # a decision pass must never kill the controller
+            act = getattr(self.target, "_activity", None)
+            if (act is not None and self._last_backlog == 0
+                    and self._last_n <= self.policy.min_workers):
+                # fully drained and at the floor: park event-driven —
+                # zero KV commands, zero polling until the next submit
+                act.wait(self.park_timeout)
+            else:
+                self._stop.wait(self.interval)
 
     def start(self) -> "ElasticController":
+        self._integrate(time.monotonic(),
+                        int(getattr(self.target, "n_workers", 0)))
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="elastic-controller")
         self._thread.start()
@@ -75,8 +179,12 @@ class ElasticController:
 
     def stop(self) -> None:
         self._stop.set()
+        act = getattr(self.target, "_activity", None)
+        if act is not None:
+            act.set()  # unpark so the loop observes the stop flag
         if self._thread is not None:
             self._thread.join(timeout=2)
+        self._integrate(time.monotonic(), int(self._ws_n))
 
     def __enter__(self):
         return self.start()

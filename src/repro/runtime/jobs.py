@@ -203,6 +203,15 @@ class JobRunner:
                 self._store.rpush(f"{self._tag}:jobs", b"__stop__")
         self.n_workers = n_workers
 
+    def backlog(self) -> int:
+        """Outstanding queued tasks — the elastic public contract
+        (:mod:`repro.runtime.elastic`): lets an ``ElasticController``
+        drive a JobRunner exactly like a Pool."""
+        try:
+            return int(self._store.llen(f"{self._tag}:jobs"))
+        except (ConnectionError, OSError):
+            return 0
+
     def shutdown(self) -> None:
         self._store.set(f"{self._tag}:stop", 1, ex=600)
         for _ in range(self.n_workers):

@@ -1,0 +1,142 @@
+"""Unified client configuration (PR 9): ``ClientOptions`` consumed
+uniformly by ``KVClient``, ``ClusterClient`` and ``connect()``, legacy
+kwarg spellings kept as aliases, and conflicting spellings rejected with
+a clear error — the back-compat grid for the config API redesign."""
+
+import pytest
+
+from repro.core import ClientOptions, KVClient, KVServer
+from repro.core.clientopts import UNSET, resolve_client_options
+from repro.core.kvcluster import connect
+
+
+@pytest.fixture
+def server():
+    with KVServer() as srv:
+        yield srv
+
+
+class TestResolution:
+    def test_defaults(self):
+        o = resolve_client_options(None)
+        assert o == ClientOptions()
+        assert o.raw is True and o.mux is True
+        assert o.legacy_protocol is False
+        assert o.transport is None
+        assert o.failover_timeout_s == 10.0
+
+    def test_alias_only(self):
+        o = resolve_client_options(None, raw=False, transport="uds")
+        assert o.raw is False and o.transport == "uds"
+        assert o.mux is True  # untouched knobs keep defaults
+
+    def test_options_only(self):
+        base = ClientOptions(mux=False, failover_timeout_s=3.0)
+        o = resolve_client_options(base)
+        assert o.mux is False and o.failover_timeout_s == 3.0
+
+    def test_agreeing_spellings_are_fine(self):
+        base = ClientOptions(raw=False)
+        o = resolve_client_options(base, raw=False)
+        assert o.raw is False
+
+    def test_conflicting_spellings_raise(self):
+        base = ClientOptions(raw=True)
+        with pytest.raises(ValueError, match="raw"):
+            resolve_client_options(base, raw=False)
+
+    def test_unknown_alias_raises(self):
+        with pytest.raises(TypeError):
+            resolve_client_options(None, bogus_knob=1)
+
+    def test_replace_returns_new_frozen_copy(self):
+        o = ClientOptions()
+        o2 = o.replace(transport="shm")
+        assert o2.transport == "shm" and o.transport is None
+        with pytest.raises(Exception):  # frozen dataclass
+            o2.transport = "tcp"
+
+    def test_unset_sentinel_is_not_a_value(self):
+        # passing UNSET is identical to not passing the kwarg at all
+        o = resolve_client_options(None, raw=UNSET, mux=UNSET)
+        assert o == ClientOptions()
+
+
+class TestKVClientGrid:
+    """Every spelling of the same configuration must behave identically
+    on the wire."""
+
+    def test_legacy_kwargs_still_work(self, server):
+        c = KVClient(server.address, mux=False, raw=False)
+        try:
+            c.set("k", b"v")
+            assert c.get("k") == b"v"
+            assert c.mux_enabled is False and c.raw_enabled is False
+        finally:
+            c.close()
+
+    def test_options_object(self, server):
+        c = KVClient(server.address,
+                     options=ClientOptions(mux=False, raw=False))
+        try:
+            c.set("k2", b"v2")
+            assert c.get("k2") == b"v2"
+            assert c.mux_enabled is False and c.raw_enabled is False
+            assert c.options.mux is False
+        finally:
+            c.close()
+
+    def test_conflict_raises_before_connecting_state_changes(self, server):
+        with pytest.raises(ValueError, match="mux"):
+            KVClient(server.address, mux=True,
+                     options=ClientOptions(mux=False))
+
+    def test_legacy_protocol_spellings_agree(self, server):
+        a = KVClient(server.address, legacy_protocol=True)
+        b = KVClient(server.address,
+                     options=ClientOptions(legacy_protocol=True))
+        try:
+            a.set("x", b"1")
+            assert b.get("x") == b"1"
+            # legacy protocol disables both mux and raw paths
+            for c in (a, b):
+                assert c.mux_enabled is False and c.raw_enabled is False
+        finally:
+            a.close()
+            b.close()
+
+    def test_default_spelling_matrix_roundtrips(self, server):
+        for kwargs in ({}, {"options": ClientOptions()},
+                       {"mux": True}, {"raw": True},
+                       {"options": ClientOptions(), "mux": True}):
+            c = KVClient(server.address, **kwargs)
+            try:
+                c.set("m", b"v")
+                assert c.get("m") == b"v"
+                assert c.mux_enabled and c.raw_enabled
+            finally:
+                c.close()
+
+
+class TestConnectGrid:
+    def test_connect_plain_server_with_options(self, server):
+        c = connect(server.address, options=ClientOptions(mux=False))
+        try:
+            c.set("ck", b"cv")
+            assert c.get("ck") == b"cv"
+            assert c.mux_enabled is False
+        finally:
+            c.close()
+
+    def test_connect_alias_and_options_conflict(self, server):
+        with pytest.raises(ValueError, match="raw"):
+            connect(server.address, raw=False,
+                    options=ClientOptions(raw=True))
+
+    def test_connect_legacy_kwargs(self, server):
+        c = connect(server.address, legacy_protocol=True)
+        try:
+            c.rpush("cl", b"a")
+            assert c.lpop("cl") == b"a"
+        finally:
+            c.close()

@@ -1,0 +1,335 @@
+"""Elastic autoscaling worker plane (PR 9): ElasticPolicy decision
+boundaries, the public Pool contract (``n_workers`` / ``backlog()``),
+graceful drain semantics, session-level ``pool_defaults``, and the
+auto-started controller — all over the fast in-process threads backend
+(warm handler reuse over real OS processes lives in test_kvserver.py)."""
+
+import time
+
+import pytest
+
+from repro.core import configure, get_session, mp
+from repro.core.pool import Pool
+from repro.runtime.elastic import ElasticController, ElasticPolicy
+
+
+def _wait_until(pred, timeout=8.0, interval=0.02):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(interval)
+    return pred()
+
+
+# ---------------------------------------------------------------------------
+# ElasticPolicy decision boundaries (pure — no pool needed)
+# ---------------------------------------------------------------------------
+
+
+class TestPolicyBoundaries:
+    def test_hysteresis_one_quiet_sample_never_shrinks(self):
+        p = ElasticPolicy(min_workers=1, idle_cycles_before_shrink=3)
+        assert p.decide(8, backlog=0, idle_cycles=0) == 8
+        assert p.decide(8, backlog=0, idle_cycles=1) == 8
+        assert p.decide(8, backlog=0, idle_cycles=2) == 8
+        assert p.decide(8, backlog=0, idle_cycles=3) == 4  # step=4 default
+
+    def test_exact_threshold_holds_steady(self):
+        # backlog == backlog_per_worker * n is NOT overload (strict >)
+        p = ElasticPolicy(backlog_per_worker=2.0)
+        assert p.decide(4, backlog=8, idle_cycles=0) == 4
+        assert p.decide(4, backlog=9, idle_cycles=0) > 4
+
+    def test_scale_up_is_step_clamped(self):
+        p = ElasticPolicy(max_workers=64, step=4, backlog_per_worker=1.0)
+        # a huge backlog still grows by at most `step` per decision
+        assert p.decide(2, backlog=10 ** 6, idle_cycles=0) == 6
+
+    def test_scale_up_clamps_at_max_workers(self):
+        p = ElasticPolicy(min_workers=2, max_workers=4)
+        assert p.decide(3, backlog=10 ** 6, idle_cycles=0) == 4
+        assert p.decide(4, backlog=10 ** 6, idle_cycles=0) == 4
+        # even a fleet already above max is pulled back into bounds
+        assert p.decide(1000, backlog=10 ** 6, idle_cycles=0) == 4
+
+    def test_scale_down_clamps_at_min_workers(self):
+        p = ElasticPolicy(min_workers=2, step=4)
+        assert p.decide(3, backlog=0, idle_cycles=99) == 2
+        assert p.decide(2, backlog=0, idle_cycles=99) == 2
+
+    def test_small_overload_grows_at_least_one(self):
+        # 5 > 2*2 is overload; ceil(5/2)=3 guarantees visible growth
+        p = ElasticPolicy(backlog_per_worker=2.0, step=4)
+        assert p.decide(2, backlog=5, idle_cycles=0) == 3
+
+    def test_invalid_policy_fields_raise(self):
+        with pytest.raises(ValueError):
+            ElasticPolicy(min_workers=-1)
+        with pytest.raises(ValueError):
+            ElasticPolicy(min_workers=8, max_workers=4)
+        with pytest.raises(ValueError):
+            ElasticPolicy(backlog_per_worker=0)
+        with pytest.raises(ValueError):
+            ElasticPolicy(step=0)
+
+
+# ---------------------------------------------------------------------------
+# The public Pool contract: n_workers + backlog()
+# ---------------------------------------------------------------------------
+
+
+class TestPoolContract:
+    def test_backlog_zero_and_kv_free_when_idle(self):
+        """An idle pool reports backlog 0 without touching the KV plane
+        (the no-KV-load-when-idle half of the controller contract)."""
+        with mp.Pool(2, max_retries=1) as p:
+            p.map(lambda x: x, range(4))
+            metrics = get_session().store.metrics
+            llen0 = metrics.commands.get("LLEN", 0)
+            hlen0 = metrics.commands.get("HLEN", 0)
+            for _ in range(10):
+                assert p.backlog() == 0
+            # backlog() on an idle pool short-circuits client-side:
+            # no LLEN, no HLEN — nothing hits the KV plane
+            assert metrics.commands.get("LLEN", 0) == llen0
+            assert metrics.commands.get("HLEN", 0) == hlen0
+
+    def test_backlog_counts_queue_plus_inflight(self):
+        """queued + in-flight, via one pipelined LLEN+HLEN read."""
+        sess = get_session()
+        p = Pool(1, max_retries=1)
+        try:
+            hold = sess.store  # direct handle for ground truth
+            res = p.map_async(lambda x: time.sleep(0.15) or x, range(6),
+                              chunksize=1)
+            assert _wait_until(lambda: hold.hlen(p._inflight_key) >= 1)
+            llen_before = sess.store.metrics.commands.get("LLEN", 0)
+            hlen_before = sess.store.metrics.commands.get("HLEN", 0)
+            b = p.backlog()
+            # exactly one LLEN + one HLEN, in one pipelined flush
+            assert sess.store.metrics.commands.get("LLEN", 0) \
+                == llen_before + 1
+            assert sess.store.metrics.commands.get("HLEN", 0) \
+                == hlen_before + 1
+            assert b >= 1  # 1 in-flight (plus whatever is still queued)
+            assert res.get(30) == list(range(6))
+        finally:
+            p.close()
+            p.join(timeout=10)
+
+    def test_backlog_without_ft_is_queue_depth_only(self):
+        p = Pool(1)
+        try:
+            res = p.map_async(lambda x: time.sleep(0.1) or x, range(4),
+                              chunksize=1)
+            b = p.backlog()
+            assert b >= 0  # no in-flight hash to consult
+            assert get_session().store.metrics.commands.get("HLEN", 0) == 0
+            assert res.get(30) == list(range(4))
+        finally:
+            p.close()
+            p.join(timeout=10)
+
+    def test_n_workers_tracks_resize(self):
+        p = Pool(2, elastic=True)
+        try:
+            assert p.n_workers == 2
+            p.resize(4)
+            assert _wait_until(lambda: p.n_workers == 4)
+            p.resize(1)
+            assert _wait_until(lambda: p.n_workers == 1)
+        finally:
+            p.close()
+            p.join(timeout=10)
+
+
+# ---------------------------------------------------------------------------
+# Graceful drain
+# ---------------------------------------------------------------------------
+
+
+class TestGracefulDrain:
+    def test_drain_on_empty_queue_exits_promptly(self):
+        p = Pool(4, elastic=True)
+        try:
+            t0 = time.monotonic()
+            p.resize(1)
+            assert _wait_until(lambda: p.n_workers == 1, timeout=5)
+            assert time.monotonic() - t0 < 5
+            fs = p.fault_stats()
+            assert fs["workers_drained"] == 3
+            assert fs["workers_lost"] == 0
+            assert fs["workers_respawned"] == 0
+        finally:
+            p.close()
+            p.join(timeout=10)
+
+    def test_drained_worker_finishes_inflight_task(self):
+        """Scale-down mid-job: the drained worker completes its current
+        lease — the task is never killed, dead-lettered or re-run."""
+        p = Pool(2, max_retries=2, elastic=True, lease_ttl_s=2.0)
+        try:
+            res = p.map_async(lambda x: time.sleep(0.25) or x * 10,
+                              range(8), chunksize=1)
+            assert _wait_until(
+                lambda: get_session().store.hlen(p._inflight_key) >= 1)
+            p.resize(1)  # drains one worker while it holds a lease
+            assert res.get(30) == [x * 10 for x in range(8)]
+            assert _wait_until(lambda: p.n_workers == 1)
+            fs = p.fault_stats()
+            assert fs["workers_drained"] == 1
+            assert fs["tasks_dead_lettered"] == 0
+            assert fs["leases_requeued"] == 0
+            assert fs["workers_lost"] == 0
+            assert fs["respawn_budget_left"] == 4  # untouched (2 * 2)
+        finally:
+            p.close()
+            p.join(timeout=10)
+
+    def test_scale_up_cancels_pending_drain(self):
+        p = Pool(3, elastic=True, max_retries=1)
+        try:
+            # hold all workers busy so drain flags stay un-honored
+            res = p.map_async(lambda x: time.sleep(0.4) or x, range(3),
+                              chunksize=1)
+            assert _wait_until(
+                lambda: get_session().store.hlen(p._inflight_key) >= 2)
+            p.resize(1)   # flags 2 workers for drain
+            p.resize(3)   # cancels both before they finish their task
+            assert res.get(30) == list(range(3))
+            assert _wait_until(lambda: p.n_workers == 3, timeout=6)
+            assert p.map(lambda x: -x, range(6)) == [-x for x in range(6)]
+        finally:
+            p.close()
+            p.join(timeout=10)
+
+    def test_default_pool_resize_uses_legacy_poison(self):
+        """Without elastic=, scale-down is the PR-6-era poison pill —
+        no drain flags, no drain stats."""
+        p = Pool(3)
+        try:
+            p.resize(1)
+            assert _wait_until(lambda: p.n_workers == 1)
+            fs = p.fault_stats()
+            assert fs["workers_drained"] == 0
+            assert fs["draining_workers"] == 0
+        finally:
+            p.close()
+            p.join(timeout=10)
+
+
+# ---------------------------------------------------------------------------
+# session.configure(pool_defaults=...)
+# ---------------------------------------------------------------------------
+
+
+class TestPoolDefaults:
+    def test_defaults_apply_and_merge(self):
+        configure(pool_defaults={"max_retries": 3, "lease_ttl_s": 2.0})
+        configure(pool_defaults={"speculation_factor": 2.5})  # composes
+        p = Pool(2)
+        try:
+            assert p._max_retries == 3
+            assert p._lease_cfg[0] == 2.0
+            assert p._spec_factor == 2.5
+        finally:
+            p.close()
+            p.join(timeout=10)
+
+    def test_explicit_kwarg_wins(self):
+        configure(pool_defaults={"max_retries": 3, "processes": 5})
+        p = Pool(2, max_retries=0)
+        try:
+            assert p._max_retries == 0
+            assert p._lease_cfg is None
+            assert p.n_workers == 2  # explicit processes beats default
+        finally:
+            p.close()
+            p.join(timeout=10)
+
+    def test_unknown_default_key_raises_up_front(self):
+        with pytest.raises(ValueError, match="unknown pool_defaults"):
+            configure(pool_defaults={"max_retrys": 1})
+
+    def test_none_removes_a_default(self):
+        configure(pool_defaults={"max_retries": 3})
+        configure(pool_defaults={"max_retries": None})
+        p = Pool(2)
+        try:
+            assert p._max_retries == 0
+        finally:
+            p.close()
+            p.join(timeout=10)
+
+    def test_elastic_default_via_session(self):
+        configure(pool_defaults={"elastic": {"min_workers": 1,
+                                             "max_workers": 6}})
+        p = Pool(2)
+        try:
+            assert p._elastic_controller is not None
+            assert p._elastic_controller.policy.max_workers == 6
+            assert p.map(lambda x: x + 1, range(10)) == list(range(1, 11))
+        finally:
+            p.close()
+            p.join(timeout=10)
+            assert p._elastic_controller is None  # stopped by close()
+
+
+# ---------------------------------------------------------------------------
+# Controller end-to-end over the public contract
+# ---------------------------------------------------------------------------
+
+
+class TestControllerEndToEnd:
+    def test_scales_up_under_load_and_back_down_when_idle(self):
+        p = Pool(1, max_retries=1,
+                 elastic=ElasticPolicy(min_workers=1, max_workers=8,
+                                       backlog_per_worker=1.0,
+                                       idle_cycles_before_shrink=2,
+                                       step=4))
+        ctl = p._elastic_controller
+        try:
+            assert ctl is not None
+            res = p.map_async(lambda x: time.sleep(0.05) or x, range(40),
+                              chunksize=1)
+            assert res.get(60) == list(range(40))
+            assert ctl.decisions, "controller never acted"
+            assert max(d[2] for d in ctl.decisions) > 1  # scaled up
+            # idle hysteresis then drain back to the floor
+            assert _wait_until(lambda: p.n_workers == 1, timeout=15)
+            assert p.fault_stats()["workers_lost"] == 0
+            assert ctl.worker_seconds() > 0
+        finally:
+            p.close()
+            p.join(timeout=10)
+
+    def test_invalid_elastic_value_raises(self):
+        with pytest.raises(TypeError):
+            Pool(2, elastic=object())
+
+    def test_controller_against_custom_target(self):
+        """The contract is duck-typed: anything with backlog()/n_workers/
+        resize() can be driven (no Pool internals touched)."""
+
+        class FakePool:
+            def __init__(self):
+                self.n_workers = 2
+                self._backlog = 50
+                self.calls = []
+
+            def backlog(self):
+                return self._backlog
+
+            def resize(self, n):
+                self.calls.append(n)
+                self.n_workers = n
+                self._backlog = 0  # pretend the burst was absorbed
+
+        fake = FakePool()
+        ctl = ElasticController(fake, ElasticPolicy(max_workers=8, step=4,
+                                                    backlog_per_worker=1.0),
+                                interval=0.01)
+        with ctl:
+            assert _wait_until(lambda: fake.calls, timeout=3)
+        assert fake.calls[0] == 6  # 2 + step, not the full backlog jump

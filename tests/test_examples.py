@@ -52,6 +52,11 @@ class TestExamples:
                           "--batch", "2", "--seq", "32")
         assert "[dp]" in out
 
+    def test_autoscale(self):
+        out = run_example("autoscale.py", "--tasks", "40", "--max", "4")
+        assert "graceful drains" in out
+        assert "autoscale example: OK" in out
+
     def test_serve_lm(self):
         out = run_example("serve_lm.py", "--batch", "2",
                           "--prompt-len", "8", "--new-tokens", "8")

@@ -224,6 +224,31 @@ class TestSubprocessBackend:
         assert ex.call_async(lambda a, b: a * b, (6, 7)).result(90) == 42
         ex.shutdown(wait=False)
 
+    def test_warm_handler_reuse(self, server):
+        """PR 9 invoker/handler split: the second sequential task re-
+        attaches the parked handler process instead of forking a new one
+        — one cold start, N-1 warm attaches, same PID end to end."""
+        import os
+        client = KVClient(server.address)
+        set_session(Session(store=client,
+                            storage=KVObjectStore(client),
+                            kv_address=server.address))
+        ex = FunctionExecutor(backend="subprocess")
+        try:
+            pids = {ex.call_async(os.getpid).result(90) for _ in range(3)}
+            assert len(pids) == 1, f"expected one reused handler: {pids}"
+            stats = ex.stats_summary()
+            assert stats["cold_starts"] == 1
+            assert stats["warm_attaches"] == 2
+            # the handler re-parks a beat after the future settles
+            deadline = time.monotonic() + 5
+            while (ex.stats_summary()["parked_handlers"] != 1
+                   and time.monotonic() < deadline):
+                time.sleep(0.02)
+            assert ex.stats_summary()["parked_handlers"] == 1
+        finally:
+            ex.shutdown(wait=False)
+
     def test_real_process_uses_ipc(self, server):
         client = KVClient(server.address)
         set_session(Session(store=client,

@@ -121,6 +121,30 @@ class TestZeroCostWhenOff:
             assert "LEASEREAP" not in cmds
             assert not get_session().store.exists(LEASE_REGISTRY_KEY)
 
+    def test_default_pool_has_no_elastic_footprint(self):
+        """PR 9 zero-cost extension: with ``elastic`` unset and defaults
+        off, the job path stays byte-identical — no drain flags are ever
+        written or polled, no controller exists, resize still shrinks by
+        poison pill, and backlog() on the idle pool adds no KV command."""
+        with mp.Pool(2) as p:
+            assert p._drain_enabled is False
+            assert p._elastic_controller is None
+            p.map(lambda x: x, range(8), chunksize=2)
+            store = get_session().store
+            cmds = store.metrics.commands
+            llen0, hlen0 = cmds.get("LLEN", 0), cmds.get("HLEN", 0)
+            assert p.backlog() == 0          # client-side short-circuit
+            assert cmds.get("LLEN", 0) == llen0
+            assert cmds.get("HLEN", 0) == hlen0
+            assert not any(":drain:" in k for k in store.keys("*"))
+            p.resize(1)
+            deadline = time.monotonic() + 5
+            while p.n_workers > 1 and time.monotonic() < deadline:
+                time.sleep(0.02)
+            fs = p.fault_stats()
+            assert fs["workers_drained"] == 0 and fs["draining_workers"] == 0
+            assert not any(":drain:" in k for k in store.keys("*"))
+
     def test_ft_pool_registers_and_unregisters_reaper_entry(self):
         st = get_session().store
         p = mp.Pool(2, max_retries=1)
