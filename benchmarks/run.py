@@ -31,6 +31,7 @@ MODULES = [
     ("compression", "benchmarks.bench_compression"),  # beyond-paper
     ("chaos", "benchmarks.bench_chaos"),            # PR 7 robustness gate
     ("elastic", "benchmarks.bench_elastic"),        # PR 9 autoscaling gate
+    ("serve", "benchmarks.bench_serve"),            # PR 10 serving gate
     ("roofline", "benchmarks.roofline"),            # dry-run report
 ]
 

@@ -6,6 +6,16 @@ heads rides in VMEM scratch across kv blocks (GPU flash-decode's
 split-k + cross-SM reduction becomes grid-sequential accumulation —
 there is no shared-memory combine step to port). Per-sequence ``lengths``
 mask out unwritten cache tail blocks.
+
+:func:`flash_decode_paged` is the same kernel body gathering K/V through
+a per-sequence **page table** instead of a contiguous cache: pages are
+``block_k``-sized, so the grid is unchanged — ``(B * K, n_blocks)`` with
+``n_blocks == max_pages`` — and the only difference is the K/V BlockSpec
+index map, which resolves block ``j`` of sequence ``b`` to slab page
+``page_table[b, j]`` via scalar prefetch (``PrefetchScalarGridSpec``:
+the table rides in SMEM and is available to the index map before the
+body runs, so the page indirection costs zero extra DMA steps). Rows
+with ``lengths == 0`` emit zeros (the accumulator never runs).
 """
 
 from __future__ import annotations
@@ -106,4 +116,97 @@ def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B * K, G, D), q.dtype),
         interpret=interpret,
     )(lens, qf, kf, vf)
+    return o.reshape(B, H, D)
+
+
+def _paged_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, sm_scale, page_size, n_kv):
+    """Same online-softmax body as :func:`_decode_kernel`; the page
+    indirection happened in the BlockSpec index map, so block ``j`` of
+    grid row ``i`` already holds page ``page_table[i // K, j]``."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[i // n_kv]
+
+    @pl.when(j * page_size < length)
+    def compute():
+        q = q_ref[0].astype(jnp.float32) * sm_scale        # [G, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)             # [page, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G, page]
+        cols = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(cols < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None] + jax.lax.dot(p, v))
+        m_scr[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def emit():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       page_table: jax.Array, lengths: jax.Array, *,
+                       sm_scale: Optional[float] = None,
+                       interpret: bool = False) -> jax.Array:
+    """Flash-decode gathering K/V through a page table.
+
+    q: [B, H, D]; k_pages, v_pages: [P, page_size, K, D] (shared slab,
+    page 0 reserved as the null page); page_table: [B, M] int32;
+    lengths: [B] -> [B, H, D]. Token ``t`` of sequence ``b`` lives at
+    ``(page_table[b, t // page_size], t % page_size)``; table entries at
+    or past ``ceil(lengths[b] / page_size)`` may point anywhere (the
+    null page by convention) — the length mask skips those blocks.
+    Requires ``pltpu`` (scalar prefetch); ``ops.paged_decode_attention``
+    falls back to the pure-JAX reference elsewhere.
+    """
+    if not _HAVE_PLTPU:  # pragma: no cover - guarded by ops dispatch
+        raise RuntimeError("flash_decode_paged requires pallas TPU support")
+    B, H, D = q.shape
+    _, page_size, K, _ = k_pages.shape
+    M = page_table.shape[1]
+    G = H // K
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+
+    qf = q.reshape(B, K, G, D).reshape(B * K, G, D)
+    kernel = functools.partial(_paged_kernel, sm_scale=scale,
+                               page_size=page_size, n_kv=K)
+
+    def kv_map(i, j, lens, tbl, K=K):
+        return (tbl[i // K, j], 0, i % K, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # lengths + page_table feed the index maps
+        grid=(B * K, M),
+        in_specs=[
+            pl.BlockSpec((1, G, D), lambda i, j, lens, tbl: (i, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, D), kv_map),
+            pl.BlockSpec((1, page_size, 1, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda i, j, lens, tbl: (i, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((G,), jnp.float32),
+                        pltpu.VMEM((G,), jnp.float32),
+                        pltpu.VMEM((G, D), jnp.float32)],
+    )
+    o = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * K, G, D), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), page_table.astype(jnp.int32),
+      qf, k_pages, v_pages)
     return o.reshape(B, H, D)

@@ -22,8 +22,8 @@ import jax.numpy as jnp
 
 from . import ref
 
-__all__ = ["attention", "decode_attention", "rwkv6_scan", "mamba2_scan",
-           "pallas_mode"]
+__all__ = ["attention", "decode_attention", "paged_decode_attention",
+           "rwkv6_scan", "mamba2_scan", "pallas_mode"]
 
 
 @functools.lru_cache(None)
@@ -72,6 +72,23 @@ def decode_attention(q, k_cache, v_cache, lengths, *,
                             interpret=(mode == "interpret"))
     return ref.decode_attention(q, k_cache, v_cache, lengths,
                                 sm_scale=sm_scale)
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           sm_scale: Optional[float] = None):
+    """Flash-decode through a page table (continuous-batching serving).
+
+    See ref.paged_decode_attention for semantics. The Pallas path keeps
+    the contiguous kernel's grid — pages are block_k-sized blocks, the
+    table only changes the BlockSpec index map (scalar prefetch)."""
+    mode = pallas_mode()
+    if mode != "off":
+        from .decode_attention import flash_decode_paged
+        return flash_decode_paged(q, k_pages, v_pages, page_table, lengths,
+                                  sm_scale=sm_scale,
+                                  interpret=(mode == "interpret"))
+    return ref.paged_decode_attention(q, k_pages, v_pages, page_table,
+                                      lengths, sm_scale=sm_scale)
 
 
 def rwkv6_scan(r, k, v, w, u, state=None):

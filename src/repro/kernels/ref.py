@@ -147,7 +147,10 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     q: [B, H, D] (the new token's queries)
     k_cache, v_cache: [B, S_max, K, D]
     lengths: [B] int32 — number of valid cache entries per sequence
-    Returns [B, H, D].
+    Returns [B, H, D]. Rows with ``lengths == 0`` return zeros (nothing
+    to attend to), matching the flash-decode kernel, whose online-
+    softmax accumulator never runs for a zero-length row — the finite
+    NEG_INF mask alone would instead softmax to a uniform average.
     """
     B, H, D = q.shape
     S, K = k_cache.shape[1], k_cache.shape[2]
@@ -163,7 +166,32 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", probs.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
+    out = out * (lengths > 0).astype(out.dtype)[:, None, None, None]
     return out.reshape(B, H, D).astype(q.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_table: jax.Array,
+                           lengths: jax.Array, *,
+                           sm_scale: Optional[float] = None) -> jax.Array:
+    """Decode attention through a paged KV cache (the oracle).
+
+    q: [B, H, D]; k_pages, v_pages: [P, page_size, K, D] — the shared
+    page slab; page_table: [B, M] int32 — per-sequence page ids (entries
+    past the allocated prefix point at the reserved null page 0 and are
+    masked by ``lengths``); lengths: [B] valid tokens. Token ``t`` of
+    sequence ``b`` lives at ``(page_table[b, t // page_size],
+    t % page_size)``. Gathers each sequence's pages into the contiguous
+    [B, M * page_size, K, D] view and defers to :func:`decode_attention`,
+    so paged and contiguous decode are numerically identical by
+    construction.
+    """
+    B = q.shape[0]
+    _, page_size, K, D = k_pages.shape
+    M = page_table.shape[1]
+    kc = k_pages[page_table].reshape(B, M * page_size, K, D)
+    vc = v_pages[page_table].reshape(B, M * page_size, K, D)
+    return decode_attention(q, kc, vc, lengths, sm_scale=sm_scale)
 
 
 # ---------------------------------------------------------------------------

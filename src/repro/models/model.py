@@ -422,6 +422,113 @@ class Model:
         logits, cache = self.decode(params, cache, bos[:, 0])
         return logits, cache
 
+    # ---------------------------------------------------- paged serving
+    # Continuous-batching entry points (serve/engine.py). The KV cache is
+    # a single page slab shared by every serving slot; per-slot page
+    # tables map token position t to (table[t // page], t % page). Page 0
+    # is reserved as the null page. Only KV-cache families support this.
+
+    def _check_paged(self):
+        if self.cfg.family not in ("dense", "vlm", "moe"):
+            raise ValueError(
+                f"paged serving requires a KV-cache family, "
+                f"got {self.cfg.family!r}")
+
+    def init_paged_cache(self, num_pages: int, page_size: int
+                         ) -> Dict[str, jax.Array]:
+        """Zeroed page slab: {'k_pages','v_pages': [L, P, page, K, hd]}."""
+        self._check_paged()
+        cfg = self.cfg
+        shape = (cfg.num_layers, num_pages, page_size,
+                 cfg.num_kv_heads, cfg.hd)
+        dt = cfg.act_dtype()
+        return {"k_pages": jnp.zeros(shape, dt),
+                "v_pages": jnp.zeros(shape, dt)}
+
+    def decode_paged(self, params: Params, pages: Dict[str, jax.Array],
+                     tokens: jax.Array, page_tables: jax.Array,
+                     lengths: jax.Array, slot_mask: jax.Array
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """One decode step over the page slab.
+
+        tokens: [B] int32; page_tables: [B, M] int32; lengths: [B]
+        (cache entries already written; the new token lands at position
+        ``lengths``); slot_mask: [B] bool — idle slots write to the null
+        page and produce garbage logits the engine ignores.
+        Returns ([B, V] logits, new pages).
+        """
+        self._check_paged()
+        cfg = self.cfg
+        fam = cfg.family
+        x = L.embed(params["embed"], cfg, tokens[:, None])
+
+        def body(h, xs):
+            layer, kp, vp = xs
+            if fam == "moe":
+                a, nk, nv = L.apply_attention_decode_paged(
+                    layer["attn"], cfg,
+                    L.rms_norm(h, layer["norm1"], cfg.norm_eps),
+                    kp, vp, page_tables, lengths, slot_mask)
+                h = h + a
+                mo, _ = X.apply_moe(
+                    layer["moe"], cfg,
+                    L.rms_norm(h, layer["norm2"], cfg.norm_eps))
+                h = h + mo
+            else:
+                h, nk, nv = L.apply_dense_block_decode_paged(
+                    layer, cfg, h, kp, vp, page_tables, lengths, slot_mask)
+            return h, (nk, nv)
+
+        x, (nks, nvs) = scan_over(
+            cfg, body, x,
+            (params["layers"], pages["k_pages"], pages["v_pages"]))
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = L.unembed(params["embed"], cfg, x)[:, 0]
+        return logits, {"k_pages": nks, "v_pages": nvs}
+
+    def prefill_paged_chunk(self, params: Params,
+                            pages: Dict[str, jax.Array],
+                            tokens: jax.Array, page_table: jax.Array,
+                            start: jax.Array, n_valid: jax.Array
+                            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Prefill ONE request's next prompt chunk into the slab.
+
+        tokens: [1, C] padded to the static chunk length; page_table:
+        [M] (this request's row); start: tokens already cached; n_valid:
+        real tokens in this chunk (traced — one compile covers every
+        chunk including the ragged tail). Returns ([1, V] logits at the
+        chunk's last VALID position, new pages).
+        """
+        self._check_paged()
+        cfg = self.cfg
+        fam = cfg.family
+        x = L.embed(params["embed"], cfg, tokens)
+
+        def body(h, xs):
+            layer, kp, vp = xs
+            if fam == "moe":
+                a, nk, nv = L.apply_attention_prefill_paged(
+                    layer["attn"], cfg,
+                    L.rms_norm(h, layer["norm1"], cfg.norm_eps),
+                    kp, vp, page_table, start, n_valid)
+                h = h + a
+                mo, _ = X.apply_moe(
+                    layer["moe"], cfg,
+                    L.rms_norm(h, layer["norm2"], cfg.norm_eps))
+                h = h + mo
+            else:
+                h, nk, nv = L.apply_dense_block_prefill_paged(
+                    layer, cfg, h, kp, vp, page_table, start, n_valid)
+            return h, (nk, nv)
+
+        x, (nks, nvs) = scan_over(
+            cfg, body, x,
+            (params["layers"], pages["k_pages"], pages["v_pages"]))
+        last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+        last = L.rms_norm(last, params["final_norm"], cfg.norm_eps)
+        logits = L.unembed(params["embed"], cfg, last)[:, 0]
+        return logits, {"k_pages": nks, "v_pages": nvs}
+
     def decode(self, params: Params, cache: Dict[str, Any],
                tokens: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
         """One decode step. tokens: [B] int32. Returns ([B, V] logits, cache)."""

@@ -1,1 +1,3 @@
-from .engine import make_serve_step, make_prefill, ServeEngine  # noqa: F401
+from .engine import (make_serve_step, make_prefill, ServeEngine,  # noqa: F401
+                     ContinuousEngine, ServeClient, ServeRequest)
+from .paging import PageAllocator  # noqa: F401

@@ -1,0 +1,56 @@
+"""Page allocator for the shared decode KV slab.
+
+The serving cache is one slab of ``num_pages`` fixed-size pages per
+layer (``models.Model.init_paged_cache``). Page 0 is reserved as the
+**null page**: idle serving slots and prompt-padding positions scatter
+their K/V writes there, and no live page table ever references it, so a
+masked write can never corrupt a live sequence. The allocator therefore
+hands out pages ``1 .. num_pages-1``.
+
+Allocation is all-or-nothing (``alloc`` returns None rather than a
+partial set) so the engine's admission / growth decisions stay atomic:
+either a request gets every page it asked for or the slab state is
+untouched and the scheduler can pick a preemption victim.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+__all__ = ["PageAllocator"]
+
+
+class PageAllocator:
+    """Free-list allocator over pages ``1 .. num_pages - 1`` (0 = null)."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("need at least one allocatable page + the null page")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # pop() hands out low page ids first
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` cache entries (>= 1)."""
+        return max(1, -(-n_tokens // self.page_size))
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Take ``n`` pages, or None (and no state change) if unavailable."""
+        if n < 0:
+            raise ValueError(n)
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if not 0 < p < self.num_pages:
+                raise ValueError(f"page {p} out of range")
+            if p in self._free:
+                raise ValueError(f"double free of page {p}")
+        self._free.extend(pages)

@@ -61,3 +61,9 @@ class TestExamples:
         out = run_example("serve_lm.py", "--batch", "2",
                           "--prompt-len", "8", "--new-tokens", "8")
         assert "decode == teacher-forced argmax: OK" in out
+
+    def test_serve_continuous(self):
+        out = run_example("serve_continuous.py", "--requests", "6",
+                          "--slots", "3")
+        assert "1 compile OK" in out
+        assert "continuous outputs == per-request static decode: OK" in out
